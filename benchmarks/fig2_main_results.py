@@ -1,0 +1,102 @@
+"""Fig. 2 reproduction (reduced scale): pAirZero / Sign-pAirZero vs SNR_max.
+
+Paper setting: OPT-125M, SST-2 + SQuAD, K=5, ε=5, δ=0.01, T=8000, lr grid of
+Table I. Reduced setting (CPU): tiny same-family transformer, synthetic
+task analogues, T configurable (default 400), lr grid scaled to the model.
+
+    PYTHONPATH=src python -m benchmarks.fig2_main_results \
+        [--rounds 400] [--task sst2] [--snrs 0,10,20] [--grid]
+
+Writes results/fig2_<task>.json and prints a summary table: for each SNR,
+accuracy of {Perfect, pAirZero(Solution), Sign-pAirZero(Solution)}.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
+                                PairZeroConfig, PowerControlConfig, ZOConfig)
+from repro.core import fedsim
+from repro.data.pipeline import FederatedPipeline
+from repro.data.tasks import TaskSpec
+
+TINY = ModelConfig(name="tiny-opt", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=64,
+                   head_dim=16)
+
+# Table I analogue, scaled to the reduced model (paper grid spans 1.5 orders
+# of magnitude around the selected value; ours does the same)
+LR_GRID = {"analog": (2e-3, 5e-3, 1e-2), "sign": (5e-3, 2e-2, 5e-2)}
+
+
+def run_point(task, variant, scheme, snr_db, rounds, lr, seed=0,
+              epsilon=5.0):
+    d = 1  # payload dimension per round (one scalar)
+    n0 = 1.0
+    power = n0 * d * (10 ** (snr_db / 10.0))
+    pz = PairZeroConfig(
+        variant=variant, n_clients=5, rounds=rounds,
+        zo=ZOConfig(mu=1e-3, lr=lr, clip_gamma=5.0, n_perturb=4),
+        channel=ChannelConfig(n0=n0, power=power, d=d),
+        dp=DPConfig(epsilon=epsilon, delta=0.01),
+        power=PowerControlConfig(scheme=scheme), seed=seed)
+    pipe = FederatedPipeline(task=task, spec=TaskSpec(task, 64, 24),
+                             n_clients=5, per_client_batch=8, seed=seed)
+    res = fedsim.run(TINY, pz, pipe, rounds=rounds,
+                     eval_every=rounds, eval_n=512)
+    return res.accuracies[-1], float(np.mean(res.losses[-20:]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=400)
+    ap.add_argument("--task", default="sst2", choices=["sst2", "squad"])
+    ap.add_argument("--snrs", default="0,10,20")
+    ap.add_argument("--grid", action="store_true",
+                    help="grid-search lr per point (Table I protocol)")
+    ap.add_argument("--epsilon", type=float, default=5.0,
+                    help="paper setting ε=5 requires its T=8000 horizon; "
+                         "ε=50 shows the SNR trend at the reduced T")
+    ap.add_argument("--trials", type=int, default=1)
+    args = ap.parse_args()
+    snrs = [float(s) for s in args.snrs.split(",")]
+
+    rows = []
+    for snr in snrs:
+        row = {"snr_db": snr}
+        for label, variant, scheme in (
+                ("perfect", "analog", "perfect"),
+                ("pairzero", "analog", "solution"),
+                ("sign_pairzero", "sign", "solution")):
+            lrs = LR_GRID["sign" if variant == "sign" else "analog"]
+            if not args.grid:
+                lrs = lrs[1:2]
+            best = None
+            for lr in lrs:
+                accs = []
+                for trial in range(args.trials):
+                    acc, loss = run_point(args.task, variant, scheme, snr,
+                                          args.rounds, lr, seed=trial,
+                                          epsilon=args.epsilon)
+                    accs.append(acc)
+                acc = float(np.mean(accs))
+                if best is None or acc > best[0]:
+                    best = (acc, loss, lr)
+            row[label] = {"acc": best[0], "loss": best[1], "lr": best[2]}
+            print(f"snr={snr:5.1f}dB {label:14s} acc={best[0]:.3f} "
+                  f"(lr={best[2]})", flush=True)
+        rows.append(row)
+
+    os.makedirs("results", exist_ok=True)
+    out = f"results/fig2_{args.task}_eps{args.epsilon:g}.json"
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig. 3 reproduction: Solution vs Static vs Reversed vs Perfect (analog).
+
+    PYTHONPATH=src python -m benchmarks.fig3_power_allocation [--rounds 400]
+
+Reproduces the ablation claim: Solution ≈ Perfect > Reversed >> Static
+(Static collapses because Eq. (40) forces a vanishing channel gain when T
+is large). Writes results/fig3.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.fig2_main_results import TINY, run_point
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=400)
+    ap.add_argument("--snr", type=float, default=15.0)
+    ap.add_argument("--task", default="sst2")
+    ap.add_argument("--epsilons", default="5,50",
+                    help="paper's ε=5 shows the ordering; ε=50 shows "
+                         "Solution tracking Perfect at the reduced horizon "
+                         "(the paper's T=8000 run achieves this at ε=5)")
+    args = ap.parse_args()
+
+    rows = {}
+    for eps in (float(e) for e in args.epsilons.split(",")):
+        for scheme in ("perfect", "solution", "reversed", "static"):
+            lr = 5e-3 if scheme == "perfect" or eps > 10 else 1e-3
+            acc, loss = run_point(args.task, "analog", scheme, args.snr,
+                                  args.rounds, lr=lr, epsilon=eps)
+            rows[f"{scheme}@eps{eps:g}"] = {"acc": acc, "final_loss": loss}
+            print(f"eps={eps:4g} {scheme:10s} acc={acc:.3f} "
+                  f"loss={loss:.3f}", flush=True)
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/fig3.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    for eps in set(k.split("@")[1] for k in rows):
+        order = [f"{s}@{eps}" for s in
+                 ("perfect", "solution", "reversed", "static")]
+        losses = [rows[o]["final_loss"] for o in order]
+        print(f"\nloss ordering @{eps} (expect nondecreasing):",
+              " <= ".join(f"{o.split('@')[0]}:{v:.3f}"
+                          for o, v in zip(order, losses)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Fig. 7 reproduction: distribution of gradient projections over training.
+
+The paper finds >97% of projections within [−γ, γ] for γ=100 on OPT-125M;
+the histogram justifies the clip threshold. We record the same histogram on
+the reduced model and report the equivalent percentile-based γ.
+
+    PYTHONPATH=src python -m benchmarks.fig7_projection_dist
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.configs.base import (ModelConfig, PairZeroConfig,
+                                PowerControlConfig, ZOConfig)
+from repro.core import fedsim
+from repro.data.pipeline import FederatedPipeline
+from repro.data.tasks import TaskSpec
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=64,
+                   head_dim=16)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=400)
+    args = ap.parse_args()
+
+    pipe = FederatedPipeline(task="sst2", spec=TaskSpec("sst2", 64, 24),
+                             n_clients=5, per_client_batch=8, seed=0)
+    # lr chosen so the run stays in the stable regime while measuring
+    # (the paper records projections along a converging trajectory); the
+    # clip is disabled so the RAW distribution is observed (Fig. 7's point)
+    pz = PairZeroConfig(variant="analog", n_clients=5,
+                        zo=ZOConfig(mu=1e-3, lr=1e-3, clip_gamma=1e9,
+                                    n_perturb=4),
+                        power=PowerControlConfig(scheme="perfect"))
+
+    projections = []
+
+    def on_round(t, metrics):
+        projections.extend(np.asarray(metrics["p_clients"]).ravel().tolist())
+
+    fedsim.run(TINY, pz, pipe, rounds=args.rounds, on_round=on_round)
+    p = np.asarray(projections)
+    pct = {q: float(np.percentile(np.abs(p), q)) for q in (50, 90, 97, 99)}
+    hist, edges = np.histogram(p, bins=60)
+    os.makedirs("results", exist_ok=True)
+    with open("results/fig7_projection_dist.json", "w") as f:
+        json.dump({"n": len(p), "mean": float(p.mean()),
+                   "std": float(p.std()), "abs_percentiles": pct,
+                   "hist": hist.tolist(), "edges": edges.tolist()}, f,
+                  indent=1)
+    print(f"n={len(p)} mean={p.mean():.4f} std={p.std():.4f}")
+    print(f"|p| percentiles: {pct}")
+    print(f"γ covering 97% of projections: {pct[97]:.2f} "
+          f"(paper's γ=100 covers 97% on OPT-125M)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from results/.
+
+    PYTHONPATH=src python -m benchmarks.report [--baseline results/dryrun_baseline.json]
+                                               [--current results/dryrun.json]
+
+Prints markdown; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_gb(b):
+    return f"{b / 1e9:.2f}"
+
+
+def dryrun_table(rows):
+    print("| arch | shape | mesh | status | peak GB/dev | compile s |")
+    print("|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                  f"{fmt_gb(r['memory']['peak_bytes_per_device'])} | "
+                  f"{r['compile_s']} |")
+        else:
+            note = "skip (long_500k/full-attn)" if r["status"] == "skipped" \
+                else f"FAIL {r.get('error', '')[:60]}"
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {note} | "
+                  f"- | - |")
+
+
+def roofline_table(rows, base=None):
+    base_map = {}
+    if base:
+        base_map = {(r["arch"], r["shape"]): r for r in base
+                    if r.get("roofline") and r["mesh"] == "pod16x16"}
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL/HLO | vs baseline (dom. term) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("roofline") or r["mesh"] != "pod16x16":
+            continue
+        rf = r["roofline"]
+        delta = ""
+        b = base_map.get((r["arch"], r["shape"]))
+        if b:
+            bf = b["roofline"]
+            dom = bf["dominant"] + "_s"
+            before, after = bf[dom], rf[dom]
+            if before > 0 and abs(before - after) / before > 0.02:
+                delta = f"{before / max(after, 1e-9):.1f}× better"
+            else:
+                delta = "="
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} | "
+              f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+              f"{rf['dominant']} | {rf['useful_ratio']:.2f} | {delta} |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="results/dryrun.json")
+    ap.add_argument("--baseline", default="results/dryrun_baseline.json")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    rows = json.load(open(args.current))
+    base = None
+    try:
+        base = json.load(open(args.baseline))
+    except OSError:
+        pass
+
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    fail = sum(1 for r in rows if r["status"] == "failed")
+    print(f"**{ok} compiled, {sk} skipped (documented), {fail} failed** "
+          f"of {len(rows)} cells.\n")
+    if args.section in ("all", "dryrun"):
+        dryrun_table(rows)
+        print()
+    if args.section in ("all", "roofline"):
+        roofline_table(rows, base)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Roofline report: renders results/dryrun.json into the §Roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--json results/dryrun.json]
+
+Per (arch × shape) single-pod cell: the three roofline terms (seconds), the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, bytes/device, and one line on
+what would move the dominant term (the §Perf worklist).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+MOVES = {
+    ("compute",): "raise per-chip batch or quantize (int8) — MXU-bound",
+    ("memory",): "Pallas flash attention / fused scans cut HBM traffic "
+                 "(XLA fallback materializes attention block transients)",
+    ("collective",): "bf16 psums + sequence-sharded activations cut TP "
+                     "all-reduce bytes; overlap FSDP gathers under scan",
+}
+
+
+def move_hint(dom: str) -> str:
+    return MOVES.get((dom,), "")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    rows = json.load(open(args.json))
+    cells = [r for r in rows if r.get("roofline") and r["mesh"] == "pod16x16"]
+    cells.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>9s} "
+           f"{'coll_s':>8s} {'dominant':>10s} {'useful':>7s} {'peakGB':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in cells:
+        rf = r["roofline"]
+        print(f"{r['arch']:24s} {r['shape']:12s} {rf['compute_s']:10.3f} "
+              f"{rf['memory_s']:9.3f} {rf['collective_s']:8.3f} "
+              f"{rf['dominant']:>10s} {rf['useful_ratio']:7.2f} "
+              f"{r['memory']['peak_bytes_per_device'] / 1e9:7.2f}")
+    sk = [r for r in rows if r["status"] == "skipped"
+          and r["mesh"] == "pod16x16"]
+    print(f"\n{len(cells)} baselined cells, {len(sk)} skipped "
+          f"(long_500k × full-attention archs)")
+
+    # dominant-term census → the hillclimb worklist
+    census = {}
+    for r in cells:
+        census.setdefault(r["roofline"]["dominant"], []).append(
+            f"{r['arch']}×{r['shape']}")
+    print("\nbottleneck census:")
+    for dom, items in sorted(census.items()):
+        print(f"  {dom}: {len(items)} cells — fix: {move_hint(dom)}")
+
+
+if __name__ == "__main__":
+    main()

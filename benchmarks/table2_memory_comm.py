@@ -1,0 +1,115 @@
+"""Table II reproduction: memory overhead + per-iteration upload, OPT-125M.
+
+Two sources, cross-checked:
+  * analytic accounting (the paper's own FP16 method): params / grads /
+    optimizer states / ZO's inference-level footprint;
+  * the COMPILER: XLA memory_analysis() of the compiled ZO step vs the FO
+    SGD/Adam steps (run in a subprocess so device-count flags stay local).
+
+    PYTHONPATH=src python -m benchmarks.table2_memory_comm [--compiled]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from repro.models import registry
+
+FP16 = 2  # bytes, as in the paper's Table II
+
+
+def analytic_table(arch: str = "opt-125m") -> dict:
+    cfg = registry.get_arch(arch)
+    d = registry.count_params(cfg)
+    model_mb = d * FP16 / 1e6
+    # inference-level footprint: params + one layer's activations (~5%)
+    zo_mb = model_mb * 1.05
+    rows = {
+        "model_size_mb": round(model_mb, 2),
+        "params": d,
+        "Sign-pAirZero": {"memory_mb": round(zo_mb, 1),
+                          "upload_per_iter": "1 bit"},
+        "pAirZero": {"memory_mb": round(zo_mb, 1),
+                     "upload_per_iter": "16 bits"},
+        "FO SGD": {"memory_mb": round(model_mb * 2.5, 1),   # +grads+acts
+                   "upload_per_iter": f"{model_mb:.2f} MB"},
+        "FO Adam": {"memory_mb": round(model_mb * 4.0, 1),  # +m,v
+                    "upload_per_iter": f"{model_mb:.2f} MB"},
+    }
+    return rows
+
+
+_COMPILED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from jax.sharding import AxisType
+import repro.launch.dryrun as dr
+from repro.configs import base
+
+def small_mesh(*, multi_pod=False):
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+dr.make_production_mesh = small_mesh
+dr.SHAPES_BY_NAME["train_4k"] = base.ShapeConfig("train_4k", 256, 8, "train")
+
+out = {}
+for variant in ("zo", "fo_sgd", "fo"):
+    r = dr.run_cell("opt-125m", "train_4k", False, variant,
+                    with_roofline=False)
+    key = {"zo": "pAirZero(ZO)", "fo_sgd": "FO SGD", "fo": "FO Adam"}[variant]
+    if r["status"] == "ok":
+        m = r["memory"]
+        out[key] = {
+            "peak_bytes_per_device": m["peak_bytes_per_device"],
+            "peak_mb_total_8dev": round(
+                m["peak_bytes_per_device"] * 8 / 1e6, 1)}
+    else:
+        out[key] = {"error": r.get("error", "?")[:300]}
+print("TABLE2" + json.dumps(out))
+"""
+
+
+def compiled_table() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", _COMPILED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    for line in res.stdout.splitlines():
+        if line.startswith("TABLE2"):
+            return json.loads(line[len("TABLE2"):])
+    raise RuntimeError(res.stderr[-2000:])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--compiled", action="store_true",
+                    help="also measure via XLA memory_analysis (slow)")
+    args = ap.parse_args()
+
+    table = {"analytic": analytic_table()}
+    a = table["analytic"]
+    print(f"OPT-125M: {a['params'] / 1e6:.1f}M params, model "
+          f"{a['model_size_mb']:.1f} MB (fp16)")
+    for k in ("Sign-pAirZero", "pAirZero", "FO SGD", "FO Adam"):
+        print(f"  {k:14s} memory ≈ {a[k]['memory_mb']:8.1f} MB   upload/iter "
+              f"= {a[k]['upload_per_iter']}")
+
+    if args.compiled:
+        table["compiled"] = compiled_table()
+        print("\ncompiled (XLA memory_analysis, bf16, 8-device mesh):")
+        for k, v in table["compiled"].items():
+            print(f"  {k:14s} {v}")
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/table2_memory_comm.json", "w") as f:
+        json.dump(table, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

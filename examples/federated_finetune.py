@@ -1,0 +1,110 @@
+"""End-to-end driver: federated DP fine-tuning with faults + checkpointing.
+
+    # fast preset (default, ~2 min on CPU):
+    PYTHONPATH=src python examples/federated_finetune.py
+
+    # the paper's own model (OPT-125M, ~125M params — slow on CPU;
+    # a few hundred steps as the deliverable prescribes):
+    PYTHONPATH=src python examples/federated_finetune.py \
+        --preset opt125m --rounds 300
+
+Demonstrates the full production path: Theorem-3 power control under a
+Rayleigh block-fading channel, the (ε, δ) privacy accountant, client dropout
++ stragglers, elastic membership, crash-safe checkpointing, and resume.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
+                                PairZeroConfig, PowerControlConfig, ZOConfig)
+from repro.core import fedsim
+from repro.data.pipeline import FederatedPipeline
+from repro.data.tasks import TaskSpec
+from repro.models import registry
+from repro.runtime.fault import ElasticSchedule, FaultModel
+
+PRESETS = {
+    "tiny": dict(arch=None, rounds=600, lr=2e-3, seq=24, batch=8),
+    "small": dict(arch=None, rounds=400, lr=5e-3, seq=32, batch=8),
+    "opt125m": dict(arch="opt-125m", rounds=300, lr=5e-7, seq=64, batch=4),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--variant", default="analog",
+                    choices=["analog", "sign"])
+    ap.add_argument("--epsilon", type=float, default=None,
+                    help="DP ε (default: 50 for the fast presets — the "
+                         "paper's ε=5 needs its T=8000 horizon to exit the "
+                         "noise floor; opt125m preset defaults to ε=5)")
+    ap.add_argument("--ckpt", default="/tmp/pairzero_ckpt")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    rounds = args.rounds or p["rounds"]
+
+    if p["arch"]:
+        model = registry.get_arch(p["arch"])
+        gamma = 100.0               # paper's γ for OPT-125M
+    else:
+        width = 64 if args.preset == "tiny" else 128
+        model = ModelConfig(name=f"{args.preset}-lm", family="dense",
+                            n_layers=2 if args.preset == "tiny" else 4,
+                            d_model=width, n_heads=4, n_kv_heads=2,
+                            d_ff=2 * width, vocab_size=64, head_dim=16)
+        gamma = 5.0
+
+    eps = args.epsilon if args.epsilon is not None else (
+        5.0 if args.preset == "opt125m" else 50.0)
+    pz = PairZeroConfig(
+        variant=args.variant, n_clients=5, rounds=rounds,
+        zo=ZOConfig(mu=1e-3, lr=p["lr"], clip_gamma=gamma, n_perturb=4),
+        channel=ChannelConfig(n0=1.0, power=100.0,
+                              d=model.param_count()),
+        dp=DPConfig(epsilon=eps, delta=0.01),
+        power=PowerControlConfig(scheme="solution"))
+
+    data = FederatedPipeline(task="sst2",
+                             spec=TaskSpec("sst2", model.vocab_size,
+                                           p["seq"]),
+                             n_clients=5, per_client_batch=p["batch"],
+                             seed=0)
+
+    # 5% transient dropout + occasional stragglers; client 4 leaves at 60%
+    # of the run and returns at 80% (elastic membership)
+    fault = FaultModel(n_clients=5, dropout_p=0.05, straggler_p=0.02,
+                       seed=1)
+    elastic = ElasticSchedule(n_clients=5, events=(
+        (int(rounds * 0.6), 4), (int(rounds * 0.8), 5)))
+
+    print(f"== federated fine-tune: {model.name} "
+          f"({model.param_count() / 1e6:.1f}M params), {args.variant}, "
+          f"Theorem-3 power control, ε={eps:g}, {rounds} rounds ==")
+    res = fedsim.run(
+        model, pz, data, rounds=rounds,
+        eval_every=max(rounds // 4, 1), eval_n=256,
+        checkpoint_dir=args.ckpt, checkpoint_every=max(rounds // 3, 1),
+        fault=fault, elastic=elastic,
+        on_round=lambda t, m: t % max(rounds // 10, 1) == 0 and print(
+            f"  round {t:5d}  loss {m['loss']:.4f}  K_eff "
+            f"{int(m.get('k_eff', 5))}"))
+
+    print(f"\nfinal loss     : {np.mean(res.losses[-10:]):.4f} "
+          f"(start {np.mean(res.losses[:5]):.4f})")
+    if res.accuracies:
+        print(f"accuracies     : {[round(a, 2) for a in res.accuracies]}")
+    print(f"privacy        : spent {res.privacy_spent:.4f} of "
+          f"{res.privacy_budget:.4f}  (ε={eps:g}, δ=0.01)")
+    print(f"checkpoints in : {args.ckpt} (re-run to resume from "
+          f"round {res.steps + res.resumed_from})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Power-control deep dive: Theorems 3 & 4 schedules, visualized as CSV.
+
+    PYTHONPATH=src python examples/power_control_demo.py [--rounds 2000]
+
+Draws a Rayleigh block-fading channel trace for K clients, solves the
+optimality-gap minimization (Theorem 3 analog / Theorem 4 sign), and prints
+per-round schedules for Solution / Static / Reversed side by side, plus the
+privacy ledger showing each scheme exhausts (or wastes) the (ε, δ) budget.
+Writes results/power_schedules.csv for plotting.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import dp, ota, power_control as pc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=2000)
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--power", type=float, default=100.0)
+    ap.add_argument("--epsilon", type=float, default=5.0)
+    ap.add_argument("--delta", type=float, default=0.01)
+    args = ap.parse_args()
+
+    h = ota.draw_channels(0, args.rounds, args.clients)
+    budget = dp.r_dp(args.epsilon, args.delta)
+    print(f"R_dp(ε={args.epsilon}, δ={args.delta}) = {budget:.4f}")
+
+    kw = dict(power=args.power, n0=1.0, gamma=100.0,
+              epsilon=args.epsilon, delta=args.delta)
+    schedules = {
+        "solution": pc.solve_analog(h, contraction_a=0.998, **kw),
+        "static": pc.static_analog(h, **kw),
+        "reversed": pc.reversed_analog(h, contraction_a=0.998, **kw),
+        "sign_solution": pc.solve_sign(
+            h, power=args.power, n0=1.0, n_clients=args.clients, e0=0.496,
+            contraction_a_tilde=0.998, epsilon=args.epsilon,
+            delta=args.delta),
+    }
+
+    print(f"\n{'scheme':14s} {'c(1)':>10s} {'c(T/2)':>10s} {'c(T)':>10s} "
+          f"{'privacy spent':>14s} {'of budget':>10s}")
+    for name, s in schedules.items():
+        gamma = 1.0 if name.startswith("sign") else 100.0
+        spent = s.privacy_cost(np.full(args.rounds, gamma))
+        print(f"{name:14s} {s.c[0]:10.3e} {s.c[args.rounds // 2]:10.3e} "
+              f"{s.c[-1]:10.3e} {spent:14.4f} {spent / budget:9.1%}")
+
+    print("\ninterpretation:")
+    print("  * solution: c(t) grows like A^{-t/4} — later rounds transmit")
+    print("    cleaner (the convergence bound weights late noise A^{-t});")
+    print("  * static: constant c — for large T it collapses toward zero")
+    print("    (the Fig. 3 failure mode);")
+    print("  * reversed: decays — provably worse weighting;")
+    print("  * all schemes stop exactly at the privacy budget.")
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/power_schedules.csv", "w") as f:
+        f.write("t," + ",".join(schedules) + ",h_min\n")
+        for t in range(args.rounds):
+            f.write(f"{t}," + ",".join(f"{s.c[t]:.6e}"
+                                       for s in schedules.values())
+                    + f",{h[t].min():.4f}\n")
+    print("\nwrote results/power_schedules.csv")
+
+
+if __name__ == "__main__":
+    main()

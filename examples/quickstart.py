@@ -1,0 +1,59 @@
+"""Quickstart: 5 clients fine-tune a tiny LM with pAirZero in ~1 minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+What happens:
+  * 5 simulated clients each hold a private shard of a synthetic SST-2-like
+    task;
+  * every round the server broadcasts a seed; clients run TWO forward passes
+    (w ± μz, z regenerated from the seed — no gradients, no activation
+    memory) and transmit ONE scalar each over a simulated wireless channel;
+  * signals superpose in the air; the server recovers the noisy mean by
+    channel inversion and everyone applies w ← w − η·p̂·z;
+  * transmit power follows the paper's Theorem-3 schedule, so the whole run
+    is (ε=5, δ=0.01)-differentially private — by channel noise alone.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
+                                PairZeroConfig, PowerControlConfig, ZOConfig)
+from repro.core import fedsim
+from repro.data.pipeline import FederatedPipeline
+from repro.data.tasks import TaskSpec
+
+
+def main() -> None:
+    model = ModelConfig(name="quickstart-lm", family="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab_size=64, head_dim=16)
+
+    pairzero = PairZeroConfig(
+        variant="analog",              # try "sign" for Sign-pAirZero
+        n_clients=5,
+        zo=ZOConfig(mu=1e-3, lr=5e-3, clip_gamma=5.0, n_perturb=4),
+        channel=ChannelConfig(n0=1.0, power=1000.0),
+        dp=DPConfig(epsilon=5.0, delta=0.01),
+        power=PowerControlConfig(scheme="perfect"),  # noise-free upper bound
+    )
+
+    data = FederatedPipeline(task="sst2",
+                             spec=TaskSpec("sst2", 64, 24),
+                             n_clients=5, per_client_batch=8, seed=0)
+
+    print("== pAirZero quickstart: 600 rounds, 5 clients ==")
+    result = fedsim.run(
+        model, pairzero, data, rounds=600, eval_every=150, eval_n=256,
+        on_round=lambda t, m: t % 100 == 0 and print(
+            f"  round {t:4d}  loss {m['loss']:.3f}"))
+
+    print(f"\naccuracy trajectory: {[round(a, 2) for a in result.accuracies]}")
+    print(f"total uplink per client: {result.steps * 4 * 2} bytes "
+          f"({result.steps} rounds x 4 perturbations x fp16 scalar)")
+    print(f"an FO baseline would have uploaded "
+          f"{result.steps * model.param_count() * 2 / 1e6:.1f} MB")
+
+
+if __name__ == "__main__":
+    main()

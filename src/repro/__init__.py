@@ -1,0 +1,6 @@
+"""pAirZero: ZO + over-the-air federated LLM fine-tuning, multi-pod JAX.
+
+Subpackages: core (the paper), models (architecture zoo), kernels (Pallas),
+configs (assigned archs), runtime (sharding/faults), launch (mesh/dryrun/
+train/serve), data, optim, checkpoint. See README.md / DESIGN.md.
+"""

@@ -1,0 +1,137 @@
+"""Crash-safe checkpointing for federated ZO training.
+
+ZO state is tiny by construction: (params, step, base seed, spent DP budget,
+optional FO optimizer state). Saves are atomic (write to a temp dir, fsync,
+rename) with a CRC-32 manifest so a torn write is detected at restore instead
+of silently resuming from garbage. Privacy accounting is part of the state —
+a crash can never reset the spent (ε, δ) budget.
+
+Layout:
+  <dir>/step_<N>/arrays.npz      one entry per pytree leaf ("path" keys)
+  <dir>/step_<N>/manifest.json   {step, extra, crc32s, leaf paths/treedef}
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _leaf_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save(directory: str, step: int, params: PyTree,
+         extra: Optional[Dict] = None, keep: int = 3) -> str:
+    """Atomically persist (params, step, extra). Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    names, leaves, _ = _leaf_paths(params)
+    arrays = {n: np.asarray(l) for n, l in zip(names, leaves)}
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **arrays)
+
+    crcs = {n: zlib.crc32(a.tobytes()) for n, a in arrays.items()}
+    manifest = {
+        "step": int(step),
+        "extra": extra or {},
+        "crc32": crcs,
+        "dtypes": {n: str(a.dtype) for n, a in arrays.items()},
+        "shapes": {n: list(a.shape) for n, a in arrays.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(directory, keep)
+    return final
+
+
+def _retain(directory: str, keep: int) -> None:
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for stale in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, stale))
+
+
+class AsyncCheckpointer:
+    """Non-blocking checkpointing: snapshot to host, write on a worker thread.
+
+    The training loop only pays for the device→host transfer (which must be
+    synchronous to get a consistent snapshot); serialization, CRC and fsync
+    happen off-thread. `wait()` joins the in-flight write (called before
+    shutdown and before starting a newer write — writes never interleave).
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread = None
+
+    def save(self, step: int, params: PyTree,
+             extra: Optional[Dict] = None) -> None:
+        import threading
+
+        self.wait()
+        host_params = jax.tree_util.tree_map(lambda a: np.asarray(a), params)
+        self._thread = threading.Thread(
+            target=save, args=(self.directory, step, host_params),
+            kwargs={"extra": extra, "keep": self.keep}, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def restore(path: str, params_like: PyTree
+            ) -> Tuple[PyTree, int, Dict]:
+    """Load a checkpoint into the structure of `params_like` (verifying
+    integrity). Returns (params, step, extra)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    names, leaves, treedef = _leaf_paths(params_like)
+    restored = []
+    for n, like in zip(names, leaves):
+        arr = data[n]
+        crc = zlib.crc32(arr.tobytes())
+        if crc != manifest["crc32"][n]:
+            raise IOError(f"checkpoint corruption detected in leaf {n!r} "
+                          f"(crc {crc} != {manifest['crc32'][n]})")
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(f"leaf {n!r} shape {arr.shape} != expected "
+                             f"{like.shape}")
+        restored.append(jax.numpy.asarray(arr).astype(like.dtype))
+    params = jax.tree_util.tree_unflatten(treedef, restored)
+    return params, int(manifest["step"]), manifest["extra"]

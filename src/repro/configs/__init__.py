@@ -1,0 +1,44 @@
+"""Config package: importing it registers every architecture.
+
+Assigned architectures (10) + the paper's own OPT-125M. Each module holds
+the exact assignment config with its source citation.
+"""
+from repro.configs import (  # noqa: F401
+    deepseek_coder_33b,
+    deepseek_v2_236b,
+    granite_34b,
+    internvl2_76b,
+    mamba2_370m,
+    minicpm3_4b,
+    moonshot_v1_16b_a3b,
+    opt_125m,
+    recurrentgemma_2b,
+    whisper_medium,
+    yi_6b,
+)
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    SHAPES_BY_NAME,
+    ChannelConfig,
+    DPConfig,
+    MeshConfig,
+    ModelConfig,
+    PairZeroConfig,
+    PowerControlConfig,
+    ShapeConfig,
+    TPU_V5E,
+    ZOConfig,
+)
+
+ASSIGNED_ARCHS = (
+    "moonshot-v1-16b-a3b",
+    "deepseek-v2-236b",
+    "recurrentgemma-2b",
+    "internvl2-76b",
+    "whisper-medium",
+    "deepseek-coder-33b",
+    "granite-34b",
+    "minicpm3-4b",
+    "yi-6b",
+    "mamba2-370m",
+)

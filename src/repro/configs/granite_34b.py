@@ -1,0 +1,24 @@
+"""granite-34b [dense] — llama-arch MQA (kv=1), code model.
+
+Assignment: 88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152.
+[arXiv:2405.04324; hf]
+"""
+from repro.configs.base import ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="granite-34b",
+        family="dense",
+        n_layers=88,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,
+        d_ff=24576,
+        vocab_size=49152,
+        head_dim=128,
+    )
+
+
+register_arch("granite-34b", build)

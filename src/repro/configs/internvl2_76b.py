@@ -1,0 +1,30 @@
+"""internvl2-76b [vlm] — InternViT frontend (STUB) + llama-3-70B-class LM.
+
+Assignment: 80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256 —
+InternViT + InternLM2.  [arXiv:2404.16821; unverified]
+
+Per the assignment the modality frontend is a stub: input_specs() supplies
+256 precomputed patch embeddings per sample at d_model, prepended to the
+text sequence.
+"""
+from repro.configs.base import FrontendConfig, ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab_size=128256,
+        head_dim=128,
+        frontend=FrontendConfig(kind="vision", n_frontend_tokens=256,
+                                d_frontend=8192),
+    )
+
+
+register_arch("internvl2-76b", build)

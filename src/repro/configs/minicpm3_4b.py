@@ -1,0 +1,30 @@
+"""minicpm3-4b [dense] — MLA attention.
+
+Assignment: 62L d_model=2560 40H (GQA kv=40) d_ff=6400 vocab=73448 — MLA.
+[hf:openbmb/MiniCPM3-4B; hf]
+
+MLA dims from the HF config: kv_lora_rank=256, q_lora_rank=768,
+qk_nope=64, qk_rope=32, v_head=64.
+"""
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-4b",
+        family="dense",
+        n_layers=62,
+        d_model=2560,
+        n_heads=40,
+        n_kv_heads=40,
+        d_ff=6400,
+        vocab_size=73448,
+        head_dim=64,
+        mla=MLAConfig(kv_lora_rank=256, q_lora_rank=768,
+                      qk_nope_head_dim=64, qk_rope_head_dim=32,
+                      v_head_dim=64),
+    )
+
+
+register_arch("minicpm3-4b", build)

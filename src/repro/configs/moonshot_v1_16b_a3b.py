@@ -1,0 +1,28 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight family, 64 experts top-6.
+
+Assignment: 48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840,
+MoE 64e top-6.  [hf:moonshotai/Moonlight-16B-A3B; hf]
+(d_ff is the per-expert FFN width; all layers are routed-MoE, no shared
+experts — exactly as the assignment row specifies.)
+"""
+from repro.configs.base import MoEConfig, ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b",
+        family="moe",
+        n_layers=48,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,
+        vocab_size=163840,
+        head_dim=128,
+        moe=MoEConfig(n_experts=64, n_experts_per_tok=6,
+                      n_shared_experts=0, d_expert=1408),
+    )
+
+
+register_arch("moonshot-v1-16b-a3b", build)

@@ -1,0 +1,25 @@
+"""OPT-125M — the paper's own experimental model (arXiv:2205.01068).
+
+Used by the Fig. 2/3/7 and Table II reproductions. (Deviation: rotary
+positions instead of OPT's learned absolute embeddings — positionality is
+orthogonal to the ZO/OTA mechanics under study.)
+"""
+from repro.configs.base import ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="opt-125m",
+        family="dense",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab_size=50272,
+        head_dim=64,
+    )
+
+
+register_arch("opt-125m", build)

@@ -1,0 +1,32 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1:2 pattern.
+
+Assignment: 26L d_model=2560 10H (GQA kv=1) d_ff=7680 vocab=256000 —
+RG-LRU + local attn, 1:2.  [arXiv:2402.19427; hf]
+
+Pattern (r, r, a) cycled: 26 = 8×(r,r,a) + (r,r). lru_width=2560,
+local window=2048, head_dim=256 (10 heads × 256 = 2560). Sub-quadratic
+decode state ⇒ runs the long_500k cell.
+"""
+from repro.configs.base import HybridConfig, ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        n_layers=26,
+        d_model=2560,
+        n_heads=10,
+        n_kv_heads=1,
+        d_ff=7680,
+        vocab_size=256000,
+        head_dim=256,
+        hybrid=HybridConfig(pattern="rra", lru_width=2560,
+                            local_window=2048, conv1d_width=4),
+        subquadratic=True,
+        tie_embeddings=True,
+    )
+
+
+register_arch("recurrentgemma-2b", build)

@@ -1,0 +1,33 @@
+"""whisper-medium [audio] — encoder–decoder with conv frontend STUB.
+
+Assignment: 24L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=51865 —
+enc-dec, conv frontend (stub).  [arXiv:2212.04356; unverified]
+
+24 encoder + 24 decoder layers (the canonical medium layout). The conv
+frontend is a stub: input_specs() supplies 1500 precomputed frame embeddings
+(30 s of audio) at d_model. Decode shapes exercise the decoder (self cache +
+fixed cross cache).
+"""
+from repro.configs.base import FrontendConfig, ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium",
+        family="audio",
+        n_layers=24,
+        n_encoder_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=4096,
+        vocab_size=51865,
+        head_dim=64,
+        frontend=FrontendConfig(kind="audio", n_frontend_tokens=1500,
+                                d_frontend=1024),
+        tie_embeddings=True,
+    )
+
+
+register_arch("whisper-medium", build)

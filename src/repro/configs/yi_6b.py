@@ -1,0 +1,24 @@
+"""yi-6b [dense] — llama-arch GQA.
+
+Assignment: 32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+[arXiv:2403.04652; hf]
+"""
+from repro.configs.base import ModelConfig
+from repro.models.arch_registry import register_arch
+
+
+def build() -> ModelConfig:
+    return ModelConfig(
+        name="yi-6b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=4,
+        d_ff=11008,
+        vocab_size=64000,
+        head_dim=128,
+    )
+
+
+register_arch("yi-6b", build)

@@ -1,0 +1,10 @@
+"""pAirZero core — the paper's contribution.
+
+zo:            seeded SPSA (MeZO-chained dual forward, scalar projections)
+ota:           over-the-air channel model (analog + sign, channel inversion)
+dp:            (ε, δ) accountant — R_dp, C(x), bisection inverse
+power_control: Theorems 3 & 4 closed-form schedules (+ Static/Reversed)
+pairzero:      composable jitted train-step factory (analog | sign | fo)
+fedsim:        host-side federated driver (faults, checkpoints, eval)
+"""
+from repro.core import dp, ota, power_control, zo  # noqa: F401

@@ -1,0 +1,128 @@
+"""Differential-privacy accountant for pAirZero (paper Sec. IV-C, Lemma 1).
+
+The mechanism: channel noise + artificial noise privatize the *scalar* gradient
+projection during OTA transmission. The (ε, δ)-DP condition over T rounds is
+
+    Σ_t ( √2 · c⁽ᵗ⁾ γ⁽ᵗ⁾ / m⁽ᵗ⁾ )²  ≤  R_dp(ε, δ)              (Eq. 16)
+
+with
+
+    R_dp(ε, δ) = ( √(ε + [C⁻¹(1/δ)]²) − C⁻¹(1/δ) )²            (Eq. 17)
+    C(x)       = √π · x · e^{x²}
+
+C is strictly increasing on (0, ∞), so C⁻¹ is computed by bisection (in log
+space for robustness — C spans many orders of magnitude).
+
+This module is pure numpy/python: the accountant runs on the host inside the
+training loop, never inside jit (it controls *transmit scaling*, a host-side
+decision, exactly as a real base station would do it).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List
+
+
+SQRT_PI = math.sqrt(math.pi)
+
+
+def c_func(x: float) -> float:
+    """C(x) = √π · x · e^{x²}, defined for x ≥ 0."""
+    if x < 0:
+        raise ValueError("C(x) defined for x >= 0")
+    return SQRT_PI * x * math.exp(x * x)
+
+
+def log_c_func(x: float) -> float:
+    """log C(x) — overflow-safe companion of `c_func`."""
+    if x <= 0:
+        return -math.inf
+    return 0.5 * math.log(math.pi) + math.log(x) + x * x
+
+
+def c_inverse(y: float, tol: float = 1e-14, max_iter: int = 400) -> float:
+    """C⁻¹(y) for y > 0 by bisection on log C(x) (monotone increasing)."""
+    if y <= 0:
+        raise ValueError("C^{-1} defined for y > 0")
+    log_y = math.log(y)
+    # bracket: C(x) ~ √π x for small x; C(x) ≥ e^{x²} √π x for large x
+    lo, hi = 0.0, 1.0
+    while log_c_func(hi) < log_y:
+        hi *= 2.0
+        if hi > 1e8:  # pragma: no cover - unreachable for sane δ
+            break
+    for _ in range(max_iter):
+        mid = 0.5 * (lo + hi)
+        if log_c_func(mid) < log_y:
+            lo = mid
+        else:
+            hi = mid
+        if hi - lo < tol * max(1.0, hi):
+            break
+    return 0.5 * (lo + hi)
+
+
+def r_dp(epsilon: float, delta: float) -> float:
+    """Privacy budget radius R_dp(ε, δ) of Eq. (17).
+
+    Larger ε or δ ⇒ larger budget (weaker privacy, more rounds affordable).
+    """
+    if epsilon <= 0:
+        raise ValueError("epsilon must be > 0")
+    if not (0 < delta < 1):
+        raise ValueError("delta must be in (0, 1)")
+    cinv = c_inverse(1.0 / delta)
+    return (math.sqrt(epsilon + cinv * cinv) - cinv) ** 2
+
+
+def round_privacy_cost(c_t: float, gamma_t: float, m_t: float) -> float:
+    """Per-round term (√2 c γ / m)² of the accountant sum (Eq. 16).
+
+    `m_t` is the effective-noise std m⁽ᵗ⁾ = √(c² Σσ_k² + N0) of Eq. (12).
+    """
+    if m_t <= 0:
+        raise ValueError("effective noise m must be > 0")
+    return 2.0 * (c_t * gamma_t / m_t) ** 2
+
+
+@dataclass
+class PrivacyAccountant:
+    """Tracks spent DP budget across rounds; part of the checkpointed state.
+
+    The accountant is *conservative and crash-safe*: budget spent is persisted
+    with the model checkpoint so a restart can never double-spend privacy.
+    """
+    epsilon: float
+    delta: float
+    spent: float = 0.0
+    history: List[float] = field(default_factory=list)
+
+    @property
+    def budget(self) -> float:
+        return r_dp(self.epsilon, self.delta)
+
+    @property
+    def remaining(self) -> float:
+        return max(0.0, self.budget - self.spent)
+
+    def charge(self, c_t: float, gamma_t: float, m_t: float) -> float:
+        cost = round_privacy_cost(c_t, gamma_t, m_t)
+        self.spent += cost
+        self.history.append(cost)
+        return cost
+
+    def would_violate(self, c_t: float, gamma_t: float, m_t: float,
+                      slack: float = 1e-9) -> bool:
+        return self.spent + round_privacy_cost(c_t, gamma_t, m_t) \
+            > self.budget * (1.0 + slack)
+
+    # -- checkpoint (de)serialization ------------------------------------
+    def state_dict(self) -> dict:
+        return {"epsilon": self.epsilon, "delta": self.delta,
+                "spent": self.spent}
+
+    @classmethod
+    def from_state_dict(cls, d: dict) -> "PrivacyAccountant":
+        return cls(epsilon=float(d["epsilon"]), delta=float(d["delta"]),
+                   spent=float(d["spent"]))

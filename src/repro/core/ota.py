@@ -1,0 +1,141 @@
+"""Over-the-air computation channel model (paper Sec. III-B, IV-B).
+
+The physics: K clients transmit simultaneously on one resource block; the
+receiver observes the electromagnetic superposition
+
+    y(t) = Σ_k h_k(t) x_k(t) + z(t)                                (Eq. 4)
+
+with x_k = α_k (payload_k + n_k), α_k chosen so h_k α_k = c(t) (phase
+pre-compensation + gain alignment — the standard OTA assumption, so the
+effective channel is the real positive scalar c). The server recovers the mean
+payload by channel inversion p̂ = y / (K c) (Eq. 5).
+
+In the framework this module is the *simulation* of that channel, layered on
+top of the only real collective the step performs: a scalar psum over the
+client mesh axes. All functions are jit-compatible and operate on a [K]-vector
+of per-client payloads (sharded over the client axes on a real mesh).
+
+Fault tolerance: every aggregation takes a survival `mask` — a dropped or
+straggling client simply does not superpose its signal, and the server inverts
+by the *surviving* count K_t (detected via pilot symbols in a real system).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Channel realization (host side)
+# ---------------------------------------------------------------------------
+
+def draw_channels(seed: int, rounds: int, n_clients: int,
+                  fading: str = "rayleigh") -> np.ndarray:
+    """Block-fading channel magnitudes h_k(t) ∈ [T, K].
+
+    rayleigh: |h| with h ~ CN(0, 1)  (unit average power).
+    static:   h ≡ 1 (AWGN-only channel).
+    """
+    rng = np.random.default_rng(seed)
+    if fading == "rayleigh":
+        re = rng.normal(size=(rounds, n_clients)) / np.sqrt(2.0)
+        im = rng.normal(size=(rounds, n_clients)) / np.sqrt(2.0)
+        return np.sqrt(re * re + im * im)
+    if fading == "static":
+        return np.ones((rounds, n_clients))
+    raise ValueError(f"unknown fading model: {fading}")
+
+
+# ---------------------------------------------------------------------------
+# OTA aggregation (jit-side)
+# ---------------------------------------------------------------------------
+
+def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
+               n0: jnp.ndarray, key: jax.Array,
+               mask: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Analog pAirZero uplink (Eqs. 8–9) + channel inversion (Eq. 5).
+
+    Args:
+      p:     [K] per-client gradient projections (already clipped to γ).
+      c:     scalar effective gain c(t) (h_k α_k = c for all k).
+      sigma: [K] artificial-noise stds.
+      n0:    scalar server noise power N0.
+      key:   PRNG key for this round's noise (shared across devices so every
+             replica sees the *same* channel draw — replicas stay in sync).
+      mask:  [K] 0/1 survival mask (1 = client transmitted this round).
+
+    Returns:
+      (p_hat, k_eff): the recovered noisy mean and the surviving client count.
+    """
+    k_clients = p.shape[0]
+    if mask is None:
+        mask = jnp.ones((k_clients,), dtype=p.dtype)
+    mask = mask.astype(p.dtype)
+    nk_key, z_key = jax.random.split(key)
+    n_k = sigma.astype(p.dtype) * jax.random.normal(nk_key, (k_clients,),
+                                                    dtype=p.dtype)
+    z = jnp.sqrt(n0).astype(p.dtype) * jax.random.normal(z_key, (),
+                                                         dtype=p.dtype)
+    # superposition: only surviving clients contribute signal AND noise
+    y = c * jnp.sum(mask * (p + n_k)) + z
+    k_eff = jnp.maximum(jnp.sum(mask), 1.0)
+    # c == 0 means a SILENT round (the sign-variant schedule zeroes early
+    # rounds when Ã^{-t} weighting concentrates the privacy budget late):
+    # nobody transmits, the server applies no update.
+    safe_c = jnp.where(c > 0, c, 1.0)
+    p_hat = jnp.where(c > 0, y / (k_eff * safe_c), 0.0)
+    return p_hat, k_eff
+
+
+def sign_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
+             n0: jnp.ndarray, key: jax.Array,
+             mask: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sign-pAirZero uplink (Eq. 11): clients transmit sign{p_k} + n_k.
+
+    Majority consensus emerges from the superposition itself; the server
+    inverts by (K c) exactly as in the analog case and updates with the
+    recovered p̂ (Algorithm 1, line 14).
+    """
+    return analog_ota(jnp.sign(p), c, sigma, n0, key, mask)
+
+
+def perfect_analog(p: jnp.ndarray,
+                   mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Noise-free upper-bound baseline (Eq. 38)."""
+    if mask is None:
+        return jnp.mean(p)
+    mask = mask.astype(p.dtype)
+    return jnp.sum(mask * p) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def perfect_sign(p: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Noise-free majority vote (Eq. 39): sign{Σ_k sign{p_k}}."""
+    if mask is None:
+        mask = jnp.ones_like(p)
+    return jnp.sign(jnp.sum(mask.astype(p.dtype) * jnp.sign(p)))
+
+
+def effective_noise_std(c: jnp.ndarray, sigma: jnp.ndarray,
+                        n0: jnp.ndarray) -> jnp.ndarray:
+    """m(t) = sqrt(c² Σ_k σ_k² + N0)  (Eq. 12)."""
+    return jnp.sqrt(c * c * jnp.sum(sigma * sigma) + n0)
+
+
+def aggregate(variant: str, scheme: str, p: jnp.ndarray, c: jnp.ndarray,
+              sigma: jnp.ndarray, n0: jnp.ndarray, key: jax.Array,
+              mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Dispatch helper used by the step factory (static strings ⇒ traced once)."""
+    if scheme == "perfect":
+        return perfect_analog(p, mask) if variant == "analog" \
+            else perfect_sign(p, mask)
+    if variant == "analog":
+        return analog_ota(p, c, sigma, n0, key, mask)[0]
+    if variant == "sign":
+        return sign_ota(p, c, sigma, n0, key, mask)[0]
+    raise ValueError(f"unknown variant: {variant}")

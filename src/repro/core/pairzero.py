@@ -1,0 +1,144 @@
+"""pAirZero step factory: the paper's algorithm as composable jitted steps.
+
+One round of Algorithm 1, as a single jitted function over the client mesh:
+
+  1. every client evaluates its clipped gradient projection p_k from the
+     shared round seed (two forwards, MeZO-chained — inference-level memory);
+  2. the OTA channel superposes c·(payload_k + n_k) + z and the server
+     inverts by (K_eff · c)  — on the mesh this is ONE scalar psum over the
+     client axes (the paper's O(1) communication claim, visible in HLO);
+  3. every replica applies w ← w − η p̂ z from the same seed (replicas stay
+     bit-identical by construction — no parameter broadcast ever happens).
+
+Round-varying control (c(t), σ(t), round seed, survival mask, noise key) is
+passed as *data*, so the step compiles exactly once per shape.
+
+`variant`: "analog" | "sign" | "fo" (first-order FedSGD/Adam baseline, for
+the paper's Table II comparisons).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, PairZeroConfig
+from repro.core import ota, zo
+from repro.kernels.seeded_axpy import fmix32
+from repro.models import registry
+
+PyTree = Any
+
+
+def make_loss_fn(model_cfg: ModelConfig, impl: Optional[str] = None
+                 ) -> Callable[[PyTree, Dict], jnp.ndarray]:
+    """Per-client loss vector [K] for this architecture."""
+    mod = registry.get_module(model_cfg)
+
+    def loss_fn(params: PyTree, batch: Dict) -> jnp.ndarray:
+        return mod.loss_per_client(params, model_cfg, batch, impl=impl)
+
+    return loss_fn
+
+
+def control_spec(n_clients: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract shapes of the per-round control block (dry-run input spec)."""
+    return {
+        "seed": jax.ShapeDtypeStruct((), jnp.uint32),
+        "c": jax.ShapeDtypeStruct((), jnp.float32),
+        "sigma": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
+        "n0": jax.ShapeDtypeStruct((), jnp.float32),
+        "mask": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
+        "noise_bits": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+
+
+def make_control(t: int, schedule, base_seed: int, n_clients: int,
+                 mask=None) -> Dict:
+    """Host-side: build round-t control block from a PowerSchedule."""
+    key = jax.random.fold_in(jax.random.key(base_seed ^ 0x5EED), t)
+    return {
+        "seed": zo.round_seed(base_seed, t),
+        "c": jnp.float32(schedule.c[t]),
+        "sigma": jnp.asarray(schedule.sigma[t], jnp.float32),
+        "n0": jnp.float32(schedule.n0),
+        "mask": jnp.ones((n_clients,), jnp.float32) if mask is None
+        else jnp.asarray(mask, jnp.float32),
+        "noise_bits": jax.random.key_data(key),
+    }
+
+
+def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
+                 impl: Optional[str] = None,
+                 scheme: Optional[str] = None) -> Callable:
+    """Build the jitted ZO train step for `variant` ∈ {analog, sign}.
+
+    Returns step(params, batch, ctl) → (new_params, metrics).
+    """
+    loss_fn = make_loss_fn(model_cfg, impl=impl)
+    variant = pz.variant
+    scheme = scheme or pz.power.scheme
+    mu = pz.zo.mu
+    lr = pz.zo.lr
+    gamma = pz.zo.clip_gamma
+    n_perturb = pz.zo.n_perturb
+    mode = "chained" if pz.zo.dual_mode in ("chained", "sequential") \
+        else "fresh"
+
+    def step(params: PyTree, batch: Dict, ctl: Dict
+             ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
+        metrics = {}
+        p_hat_sum = jnp.float32(0.0)
+        loss_acc = jnp.float32(0.0)
+        for j in range(n_perturb):
+            seed = fmix32(ctl["seed"]
+                          + jnp.uint32((0x9E3779B9 * (j + 1)) & 0xFFFFFFFF))
+            lp, lm, params_at = zo.dual_forward(
+                lambda p: loss_fn(p, batch), params, seed, mu, mode=mode)
+            p_k = zo.projection(lp, lm, mu, gamma)            # [K]
+            noise_key = jax.random.wrap_key_data(ctl["noise_bits"])
+            p_hat = ota.aggregate(variant, scheme, p_k, ctl["c"],
+                                  ctl["sigma"], ctl["n0"],
+                                  jax.random.fold_in(noise_key, j),
+                                  ctl["mask"])
+            # restore + update fused into one axpy (chained mode)
+            params = zo.apply_update(params_at, seed, p_hat,
+                                     lr / n_perturb, mu, mode=mode)
+            p_hat_sum += p_hat.astype(jnp.float32)
+            loss_acc += jnp.mean(0.5 * (lp + lm)).astype(jnp.float32)
+            if j == 0:
+                metrics["p_clients"] = p_k
+        metrics["loss"] = loss_acc / n_perturb
+        metrics["p_hat"] = p_hat_sum / n_perturb
+        metrics["k_eff"] = jnp.sum(ctl["mask"])
+        return params, metrics
+
+    return step
+
+
+def make_fo_step(model_cfg: ModelConfig, optimizer,
+                 impl: Optional[str] = None) -> Callable:
+    """First-order FedSGD baseline: full backprop + cross-client grad
+    averaging (the d-dimensional all-reduce the paper eliminates)."""
+    loss_fn = make_loss_fn(model_cfg, impl=impl)
+
+    def step(params: PyTree, opt_state: PyTree, batch: Dict, ctl: Dict
+             ) -> Tuple[PyTree, PyTree, Dict[str, jnp.ndarray]]:
+        def mean_loss(p):
+            per_client = loss_fn(p, batch)                    # [K]
+            mask = ctl["mask"]
+            return jnp.sum(per_client * mask) / jnp.maximum(
+                jnp.sum(mask), 1.0)
+
+        loss, grads = jax.value_and_grad(mean_loss)(params)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def jit_zo_step(step: Callable, donate: bool = True):
+    """jit with parameter-buffer donation (the MeZO in-place chain)."""
+    return jax.jit(step, donate_argnums=(0,) if donate else ())

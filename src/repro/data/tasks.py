@@ -1,0 +1,120 @@
+"""Synthetic task generators (offline stand-ins for SST-2 / SQuAD / LM).
+
+The container has no datasets, so the paper's two evaluation tasks are
+replaced by synthetic analogues with the same *shape of difficulty*:
+
+  * sst2  — sentence-level binary classification: sequences carry a latent
+    sentiment (an excess of "positive" vs "negative" lexicon tokens); the
+    model must emit the correct verdict token at the answer position.
+    Metric: accuracy (as in the paper's SST-2 plots).
+  * squad — extraction: a context contains a KEY marker followed by an
+    answer token; after the QUESTION marker the model must reproduce the
+    answer token. Metric: exact match.
+  * lm    — generic next-token modeling over a seeded order-1 Markov chain
+    (used for throughput/LM benchmarks).
+
+All generation is purely seeded numpy → runs are reproducible and the
+federated split can be made non-IID (Dirichlet over lexicon topics), matching
+the heterogeneity that FL papers care about.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+# reserved token ids (low range)
+PAD, CLS, QUESTION, KEY, POS_VERDICT, NEG_VERDICT = 0, 1, 2, 3, 4, 5
+N_RESERVED = 8
+
+
+@dataclass
+class TaskSpec:
+    name: str
+    vocab_size: int
+    seq_len: int
+    # non-IID knob: per-client Dirichlet concentration over lexicon halves
+    dirichlet_alpha: float = 1e9   # → IID by default
+
+
+def _lexicons(vocab: int):
+    usable = np.arange(N_RESERVED, vocab)
+    half = len(usable) // 2
+    return usable[:half], usable[half:]
+
+
+def sample_sst2(spec: TaskSpec, rng: np.random.Generator, n: int,
+                client_bias: Optional[np.ndarray] = None) -> Dict:
+    """Binary sentiment: label = which lexicon dominates the sequence."""
+    pos_lex, neg_lex = _lexicons(spec.vocab_size)
+    s = spec.seq_len
+    tokens = np.zeros((n, s), dtype=np.int32)
+    targets = np.zeros((n, s), dtype=np.int32)
+    mask = np.zeros((n, s), dtype=np.float32)
+    labels = rng.integers(0, 2, size=n)
+    for i in range(n):
+        dom, sub = (pos_lex, neg_lex) if labels[i] else (neg_lex, pos_lex)
+        # 70/30 lexicon mixture → learnable but non-trivial
+        mix = rng.random(s - 2) < 0.7
+        body = np.where(mix, rng.choice(dom, s - 2), rng.choice(sub, s - 2))
+        tokens[i, 0] = CLS
+        tokens[i, 1:-1] = body
+        tokens[i, -1] = QUESTION
+        targets[i, -1] = POS_VERDICT if labels[i] else NEG_VERDICT
+        mask[i, -1] = 1.0
+    return {"tokens": tokens, "targets": targets, "mask": mask,
+            "labels": labels.astype(np.int32)}
+
+
+def sample_squad(spec: TaskSpec, rng: np.random.Generator, n: int,
+                 client_bias: Optional[np.ndarray] = None) -> Dict:
+    """Extraction: reproduce the token that followed the KEY marker."""
+    s = spec.seq_len
+    usable = np.arange(N_RESERVED, spec.vocab_size)
+    tokens = rng.choice(usable, size=(n, s)).astype(np.int32)
+    targets = np.zeros((n, s), dtype=np.int32)
+    mask = np.zeros((n, s), dtype=np.float32)
+    answers = rng.choice(usable, size=n)
+    key_pos = rng.integers(1, s - 3, size=n)
+    for i in range(n):
+        tokens[i, key_pos[i]] = KEY
+        tokens[i, key_pos[i] + 1] = answers[i]
+        tokens[i, -1] = QUESTION
+        targets[i, -1] = answers[i]
+        mask[i, -1] = 1.0
+    return {"tokens": tokens, "targets": targets, "mask": mask,
+            "labels": answers.astype(np.int32)}
+
+
+def sample_lm(spec: TaskSpec, rng: np.random.Generator, n: int,
+              client_bias: Optional[np.ndarray] = None) -> Dict:
+    """Order-1 Markov stream with a per-task random transition structure."""
+    v = spec.vocab_size
+    s = spec.seq_len
+    # sparse deterministic-ish successor table keyed by the task seed
+    succ = (np.arange(v) * 31 + 7) % (v - N_RESERVED) + N_RESERVED
+    tokens = np.zeros((n, s + 1), dtype=np.int32)
+    tokens[:, 0] = rng.integers(N_RESERVED, v, size=n)
+    noise = rng.random((n, s)) < 0.15
+    rand_tok = rng.integers(N_RESERVED, v, size=(n, s))
+    for t in range(s):
+        nxt = succ[tokens[:, t]]
+        tokens[:, t + 1] = np.where(noise[:, t], rand_tok[:, t], nxt)
+    return {"tokens": tokens[:, :-1], "targets": tokens[:, 1:],
+            "mask": np.ones((n, s), dtype=np.float32),
+            "labels": np.zeros(n, dtype=np.int32)}
+
+
+_SAMPLERS = {"sst2": sample_sst2, "squad": sample_squad, "lm": sample_lm}
+
+
+def sample(task: str, spec: TaskSpec, rng: np.random.Generator, n: int,
+           client_bias=None) -> Dict:
+    return _SAMPLERS[task](spec, rng, n, client_bias)
+
+
+def accuracy(logits: np.ndarray, batch: Dict) -> float:
+    """Answer-position accuracy (SST-2 accuracy / SQuAD exact match)."""
+    pred = np.argmax(logits[:, -1], axis=-1)
+    return float(np.mean(pred == batch["targets"][:, -1]))

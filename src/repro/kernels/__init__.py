@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Kernels (each with a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py):
+  * seeded_axpy     — fused ZO perturb/update with in-VMEM PRNG (the paper's
+                      memory trick made TPU-native)
+  * flash_attention — fused online-softmax attention (causal / window / GQA)
+  * rglru_scan      — RG-LRU first-order linear recurrence
+  * ssd_scan        — Mamba-2 chunked state-space duality
+"""
+from repro.kernels import ops, ref  # noqa: F401

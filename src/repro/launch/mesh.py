@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips across two pods; the
+"pod" axis extends the client/data-parallel dimension (pAirZero clients ≡
+(pod, data) groups; only scalar psums ever cross the pod boundary, which is
+exactly what makes the paper's scheme attractive at multi-pod scale: DCI/ICI
+bandwidth between pods is never on the critical path of a ZO round).
+
+`make_production_mesh` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state. The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import;
+ordinary training/serving builds the mesh from the real device set.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests/examples (same axis names)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def n_clients(mesh) -> int:
+    """pAirZero clients ≡ product of the (pod, data) axes."""
+    k = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            k *= mesh.shape[a]
+    return k

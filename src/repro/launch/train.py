@@ -1,0 +1,126 @@
+"""Training launcher: federated pAirZero fine-tuning from the CLI.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch opt-125m --task sst2 --variant analog --scheme solution \
+        --rounds 800 --clients 5 --lr 5e-7 --checkpoint-dir ckpt/
+
+On a real multi-host TPU fleet this process runs once per host after
+jax.distributed.initialize() (see launch/scripts/); on CPU it runs the same
+code on a 1-device mesh. Architecture choice is --arch <id> over the full
+assigned-architecture registry.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from repro.configs.base import (ChannelConfig, DPConfig, PairZeroConfig,
+                                PowerControlConfig, ZOConfig)
+from repro.core import fedsim
+from repro.data.pipeline import FederatedPipeline
+from repro.data.tasks import TaskSpec
+from repro.models import registry
+from repro.runtime.fault import ElasticSchedule, FaultModel
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="opt-125m",
+                    help=f"one of {registry.list_archs()}")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--task", default="sst2",
+                    choices=["sst2", "squad", "lm"])
+    ap.add_argument("--variant", default="analog",
+                    choices=["analog", "sign", "fo"])
+    ap.add_argument("--scheme", default="solution",
+                    choices=["solution", "static", "reversed", "perfect"])
+    ap.add_argument("--rounds", type=int, default=800)
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="per-client batch size")
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--mu", type=float, default=1e-3)
+    ap.add_argument("--gamma", type=float, default=5.0)
+    ap.add_argument("--n-perturb", type=int, default=4)
+    ap.add_argument("--epsilon", type=float, default=5.0)
+    ap.add_argument("--delta", type=float, default=0.01)
+    ap.add_argument("--power", type=float, default=100.0)
+    ap.add_argument("--n0", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=100)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--dropout-p", type=float, default=0.0,
+                    help="per-round client dropout probability")
+    ap.add_argument("--straggler-p", type=float, default=0.0)
+    ap.add_argument("--elastic", default=None,
+                    help="membership events: 'round:K,round:K' e.g. "
+                         "'200:3,400:5'")
+    ap.add_argument("--out", default=None, help="write result JSON here")
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    cfg = registry.get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    pz = PairZeroConfig(
+        variant=args.variant, n_clients=args.clients, rounds=args.rounds,
+        zo=ZOConfig(mu=args.mu, lr=args.lr, clip_gamma=args.gamma,
+                    n_perturb=args.n_perturb),
+        channel=ChannelConfig(n0=args.n0, power=args.power,
+                              d=cfg.param_count()),
+        dp=DPConfig(epsilon=args.epsilon, delta=args.delta),
+        power=PowerControlConfig(scheme=args.scheme), seed=args.seed)
+
+    pipe = FederatedPipeline(
+        task=args.task,
+        spec=TaskSpec(args.task, cfg.vocab_size, args.seq_len),
+        n_clients=args.clients, per_client_batch=args.batch, seed=args.seed,
+        frontend_tokens=cfg.frontend.n_frontend_tokens,
+        d_model=cfg.d_model)
+
+    fault = None
+    if args.dropout_p or args.straggler_p:
+        fault = FaultModel(args.clients, dropout_p=args.dropout_p,
+                           straggler_p=args.straggler_p, seed=args.seed)
+    elastic = None
+    if args.elastic:
+        events = tuple(tuple(int(v) for v in e.split(":"))
+                       for e in args.elastic.split(","))
+        elastic = ElasticSchedule(args.clients, events=events)
+
+    def log(t, metrics):
+        if t % 50 == 0:
+            print(f"round {t:5d} loss {metrics['loss']:.4f}", flush=True)
+
+    res = fedsim.run(cfg, pz, pipe, rounds=args.rounds,
+                     eval_every=args.eval_every,
+                     checkpoint_dir=args.checkpoint_dir,
+                     checkpoint_every=args.checkpoint_every,
+                     fault=fault, elastic=elastic, dtype=jnp.float32,
+                     on_round=log)
+
+    summary = {
+        "arch": cfg.name, "variant": args.variant, "scheme": args.scheme,
+        "rounds": res.steps, "final_loss": res.losses[-1],
+        "accuracies": res.accuracies,
+        "privacy_spent": res.privacy_spent,
+        "privacy_budget": res.privacy_budget,
+        "wall_time_s": round(res.wall_time_s, 1),
+        "resumed_from": res.resumed_from,
+    }
+    print(json.dumps(summary, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({**summary, "losses": res.losses}, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""Whisper-style encoder–decoder (audio family).
+
+The conv frontend is a STUB per the assignment: input_specs() supplies
+precomputed frame embeddings [B, n_frames, d_model] (30 s of audio → 1500
+frames for whisper-medium). The transformer backbone — bidirectional encoder,
+causal decoder with cross-attention — is fully implemented.
+
+Decode shapes exercise the decoder: self-attention KV cache of seq_len plus a
+fixed cross-attention cache over the 1500 encoder frames.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _enc_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.gqa_init(ks[0], cfg, dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": L.gqa_init(ks[0], cfg, dtype),
+        "ln_x": L.rmsnorm_init(cfg.d_model, dtype),
+        "cross_attn": L.gqa_init(ks[1], cfg, dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    n_enc = cfg.n_encoder_layers or cfg.n_layers
+    enc_keys = jax.random.split(ks[0], n_enc)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    p = {
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            enc_keys),
+        "enc_norm": L.rmsnorm_init(cfg.d_model, dtype),
+        "dec_embed": L.embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+            dec_keys),
+        "dec_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.embed_init(ks[3], cfg.vocab_size, cfg.d_model,
+                                    dtype)
+    return p
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jnp.ndarray, *,
+           impl: Optional[str] = None) -> jnp.ndarray:
+    """frames: [B, T_enc, D] (stub frontend output) → encoder hidden."""
+    positions = jnp.arange(frames.shape[1])
+    x = frames
+
+    def body(h, bp):
+        hn = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
+        a, _ = L.gqa_attend(bp["attn"], hn, positions, cfg, causal=False,
+                            impl=impl)
+        h = h + a
+        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["ln2"], h, cfg.norm_eps))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block_apply(bp, h, enc_out, positions, cfg, *, cache=None,
+                     cache_pos=None, impl=None):
+    from repro.runtime.sharding import hint
+    h = hint(h, "client", None, None)
+    hn = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
+    a, new_self = L.gqa_attend(bp["self_attn"], hn, positions, cfg,
+                               causal=True, kv_cache=cache,
+                               cache_pos=cache_pos, impl=impl)
+    h = h + a
+    hx = L.rmsnorm(bp["ln_x"], h, cfg.norm_eps)
+    xa, _ = L.gqa_attend(bp["cross_attn"], hx, positions, cfg, causal=False,
+                         kv_x=enc_out, impl=impl)
+    h = h + xa
+    h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["ln2"], h, cfg.norm_eps))
+    return h, new_self
+
+
+def decode_hidden(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                  enc_out: jnp.ndarray, *,
+                  impl: Optional[str] = None) -> jnp.ndarray:
+    x = L.embed(params["dec_embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(h, bp):
+        h, _ = _dec_block_apply(bp, h, enc_out, positions, cfg, impl=impl)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return L.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+
+
+def token_nll(params, cfg, tokens, targets, mask, *, frames=None, impl=None,
+              prefix_embeds=None):
+    frames = frames if frames is not None else prefix_embeds
+    enc_out = encode(params, cfg, frames, impl=impl)
+    x = decode_hidden(params, cfg, tokens, enc_out, impl=impl)
+    logits = L.unembed(params.get("lm_head", params["dec_embed"]), x)
+    return L.cross_entropy(logits, targets, mask)
+
+
+def loss_per_client(params: dict, cfg: ModelConfig, batch: dict, *,
+                    impl: Optional[str] = None) -> jnp.ndarray:
+    k, b, s = batch["tokens"].shape
+    flat = lambda a: a.reshape((k * b,) + a.shape[2:])
+    nll = token_nll(params, cfg, flat(batch["tokens"]),
+                    flat(batch["targets"]), flat(batch["mask"]),
+                    frames=flat(batch["prefix_embeds"]), impl=impl)
+    return jnp.mean(nll.reshape(k, b), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, n_frames: int,
+               dtype=jnp.float32) -> dict:
+    lc = cfg.n_layers
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim()
+    return {
+        "self_k": jnp.zeros((lc, batch, max_len, hkv, hd), dtype=dtype),
+        "self_v": jnp.zeros((lc, batch, max_len, hkv, hd), dtype=dtype),
+        "cross_k": jnp.zeros((lc, batch, n_frames, hkv, hd), dtype=dtype),
+        "cross_v": jnp.zeros((lc, batch, n_frames, hkv, hd), dtype=dtype),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            frames: jnp.ndarray, *, impl: Optional[str] = None
+            ) -> Tuple[jnp.ndarray, dict]:
+    """Encode frames, run the decoder prefix, build self+cross caches."""
+    b, s = tokens.shape
+    enc_out = encode(params, cfg, frames, impl=impl)
+    x = L.embed(params["dec_embed"], tokens)
+    positions = jnp.arange(s)
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim()
+    cache = init_cache(cfg, b, s, frames.shape[1], dtype=x.dtype)
+
+    def body(h, xs):
+        bp, lc = xs
+        h_in = h
+        h, _ = _dec_block_apply(bp, h, enc_out, positions, cfg, impl=impl)
+        hn = L.rmsnorm(bp["ln1"], h_in, cfg.norm_eps)
+        k = L.dense({"w": bp["self_attn"]["wk"]}, hn).reshape(b, s, hkv, hd)
+        k = L.rope(k.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+        v = L.dense({"w": bp["self_attn"]["wv"]}, hn).reshape(b, s, hkv, hd)
+        ck = L.dense({"w": bp["cross_attn"]["wk"]}, enc_out).reshape(
+            b, -1, hkv, hd)
+        cv = L.dense({"w": bp["cross_attn"]["wv"]}, enc_out).reshape(
+            b, -1, hkv, hd)
+        from repro.runtime.sharding import hint
+        new_lc = {"self_k": hint(lc["self_k"].at[:, :s].set(
+                      k.astype(x.dtype)), "client", "model", None, None),
+                  "self_v": hint(lc["self_v"].at[:, :s].set(
+                      v.astype(x.dtype)), "client", "model", None, None),
+                  "cross_k": hint(ck.astype(x.dtype),
+                                  "client", None, None, None),
+                  "cross_v": hint(cv.astype(x.dtype),
+                                  "client", None, None, None)}
+        return h, new_lc
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_blocks"], cache))
+    x = L.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    return L.unembed(params.get("lm_head", params["dec_embed"]), x[:, -1:]), new_cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jnp.ndarray, cache_pos, *,
+                impl: Optional[str] = None) -> Tuple[jnp.ndarray, dict]:
+    """tokens: [B, 1] against self cache [L,B,S_max] + fixed cross cache."""
+    b, s = tokens.shape
+    x = L.embed(params["dec_embed"], tokens)
+    positions = cache_pos + jnp.arange(s)
+    hkv, hq = cfg.n_kv_heads, cfg.n_heads
+    hd = cfg.resolved_head_dim()
+
+    def body(carry, xs):
+        h, full_cache = carry
+        li, bp = xs
+        lc = jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, False),
+            full_cache)
+        hn = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
+        q = L.dense({"w": bp["self_attn"]["wq"]}, hn).reshape(b, s, hq, hd)
+        q = L.rope(q.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+        k = L.dense({"w": bp["self_attn"]["wk"]}, hn).reshape(b, s, hkv, hd)
+        k = L.rope(k.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+        v = L.dense({"w": bp["self_attn"]["wv"]}, hn).reshape(b, s, hkv, hd)
+        sk = jax.lax.dynamic_update_slice(
+            lc["self_k"], k.astype(lc["self_k"].dtype), (0, cache_pos, 0, 0))
+        sv = jax.lax.dynamic_update_slice(
+            lc["self_v"], v.astype(lc["self_v"].dtype), (0, cache_pos, 0, 0))
+        a = L.decode_attend(q, sk, sv, cache_pos + jnp.arange(s))
+        h = h + L.dense_rp({"w": bp["self_attn"]["wo"]},
+                        a.reshape(b, s, hq * hd))
+        # cross attention against the fixed encoder cache (no mask)
+        hx = L.rmsnorm(bp["ln_x"], h, cfg.norm_eps)
+        qx = L.dense({"w": bp["cross_attn"]["wq"]}, hx).reshape(b, s, hq, hd)
+        n_frames = lc["cross_k"].shape[1]
+        ax = L.decode_attend(qx, lc["cross_k"], lc["cross_v"],
+                             jnp.full((s,), n_frames - 1))
+        h = h + L.dense_rp({"w": bp["cross_attn"]["wo"]},
+                        ax.reshape(b, s, hq * hd))
+        h = h + L.mlp(bp["mlp"], L.rmsnorm(bp["ln2"], h, cfg.norm_eps))
+        new_lc = {"self_k": sk, "self_v": sv,
+                  "cross_k": lc["cross_k"], "cross_v": lc["cross_v"]}
+        full_cache = jax.tree_util.tree_map(
+            lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                c, nc.astype(c.dtype), li, 0), full_cache, new_lc)
+        return (h, full_cache), None
+
+    (x, new_cache), _ = jax.lax.scan(
+        body, (x, cache),
+        (jnp.arange(cfg.n_layers, dtype=jnp.int32), params["dec_blocks"]))
+    x = L.rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    return L.unembed(params.get("lm_head", params["dec_embed"]), x), new_cache

@@ -1,0 +1,537 @@
+"""Raw-JAX building blocks shared by every architecture family.
+
+Conventions:
+  * params are nested dicts of jnp arrays; init_* builds them, the matching
+    apply function consumes them. No module framework — pure functions keep
+    pjit/scan/ZO-perturbation trivially composable.
+  * scan-stacked layers carry a leading L dim on every leaf.
+  * compute happens in the array dtype (bf16 on TPU) with f32 accumulation
+    via preferred_element_type; norms/softmax in f32.
+  * `impl` threads the kernel dispatch (pallas | xla | ...) from ModelConfig.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+
+
+def _init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale
+            ).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> dict:
+    return {"w": _init(key, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)}
+
+
+def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, p["w"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def dense_rp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Row-parallel projection (contraction dim TP-sharded ⇒ followed by a
+    psum). Under `hints(..., bf16_reduce=True)` partials are emitted bf16 so
+    the all-reduce moves half the bytes (local MXU accumulation is f32
+    internally regardless)."""
+    from repro.runtime.sharding import bf16_reduce_active
+    if bf16_reduce_active() and x.dtype == jnp.bfloat16:
+        return jnp.einsum("...d,df->...f", x, p["w"],
+                          preferred_element_type=jnp.bfloat16)
+    return dense(p, x)
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"g": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"w": _init(key, (vocab, d), 0.02, dtype)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    from repro.runtime.sharding import hint
+    x = jnp.take(p["w"], tokens, axis=0)
+    # batch over clients; keeps the gather output from replicating when the
+    # table is vocab-sharded over `model`
+    return hint(x, "client", *([None] * (x.ndim - 1)))
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """lm head: [.., D] @ [V, D]ᵀ → [.., V] (f32 logits for a stable CE).
+
+    The output is hinted (batch→clients, vocab→model) so GSPMD never
+    materializes a replicated [B, S, V] logits tensor.
+    """
+    from repro.runtime.sharding import hint
+    logits = jnp.einsum("...d,vd->...v", x, p["w"],
+                        preferred_element_type=jnp.float32)
+    roles = [None] * logits.ndim
+    roles[0] = "client"
+    roles[-1] = "model"
+    return hint(logits, *roles)
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  mask: jnp.ndarray) -> jnp.ndarray:
+    """Per-row mean NLL: logits [.., S, V], targets/mask [.., S] → [..].
+
+    The target logit is extracted with a fused iota-compare-select-reduce
+    instead of take_along_axis: with the vocab dim sharded over `model`,
+    a gather would force GSPMD to replicate the full logits tensor; the
+    masked reduction keeps it sharded (partial sums + a tiny psum).
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(targets.dtype, logits.shape,
+                                    logits.ndim - 1)
+    tgt = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0),
+                  axis=-1)
+    nll = (lse - tgt) * mask
+    return jnp.sum(nll, axis=-1) / jnp.maximum(jnp.sum(mask, axis=-1), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., S, D_head(even)]; positions: [S] or broadcastable."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim()
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _init(ks[0], (d, hq * hd), 1.0 / math.sqrt(d), dtype),
+        "wk": _init(ks[1], (d, hkv * hd), 1.0 / math.sqrt(d), dtype),
+        "wv": _init(ks[2], (d, hkv * hd), 1.0 / math.sqrt(d), dtype),
+        "wo": _init(ks[3], (hq * hd, d), 1.0 / math.sqrt(hq * hd), dtype),
+    }
+
+
+def gqa_attend(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+               cfg: ModelConfig, *, causal: bool = True,
+               window: Optional[int] = None,
+               kv_cache: Optional[dict] = None,
+               cache_pos: Optional[jnp.ndarray] = None,
+               impl: Optional[str] = None,
+               kv_x: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B, S, D] → ([B, S, D], new_cache).
+
+    kv_cache: {"k","v": [B, S_max, Hkv, hd]} decode/rolling cache.
+    cache_pos: scalar write position for decode (tokens enter at cache_pos).
+    kv_x: cross-attention source (enc-dec); defaults to x (self-attention).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    src = x if kv_x is None else kv_x
+    q = dense({"w": p["wq"]}, x).reshape(b, s, hq, hd)
+    k = dense({"w": p["wk"]}, src).reshape(b, src.shape[1], hkv, hd)
+    v = dense({"w": p["wv"]}, src).reshape(b, src.shape[1], hkv, hd)
+    if causal or kv_x is None:  # self-attention → rope
+        q = rope(q.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+        kpos = positions if kv_cache is None else (
+            cache_pos + jnp.arange(src.shape[1]))
+        k = rope(k.swapaxes(1, 2), kpos, cfg.rope_theta).swapaxes(1, 2)
+
+    if kv_cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        # decode attention over the full cache buffer with an explicit
+        # absolute-position mask (stale slots beyond cache_pos+s excluded).
+        q_abs = cache_pos + jnp.arange(s)
+        out = decode_attend(q, ck, cv, q_abs, window=window)
+        out = out.reshape(b, s, hq * hd)
+        return dense_rp({"w": p["wo"]}, out), new_cache
+
+    out = kops.attention(q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                         causal=causal, window=window, impl=impl)
+    out = out.swapaxes(1, 2).reshape(b, s, hq * hd)
+    return dense_rp({"w": p["wo"]}, out), None
+
+
+def decode_attend(q: jnp.ndarray, ck: jnp.ndarray, cv: jnp.ndarray,
+                  q_abs: jnp.ndarray,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """Decode attention with a KV-cache buffer and absolute positions.
+
+    q: [B, S, Hq, hd]; ck/cv: [B, S_max, Hkv, hd]; q_abs: [S] absolute
+    positions of the query tokens. Linear in S_max (no S² transient).
+    """
+    b, s, hq, hd = q.shape
+    hkv = ck.shape[2]
+    group = hq // hkv
+    qg = (q.reshape(b, s, hkv, group, hd).astype(jnp.float32)
+          / math.sqrt(hd))
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, ck.astype(jnp.float32))
+    t_pos = jnp.arange(ck.shape[1])
+    mask = t_pos[None, :] <= q_abs[:, None]
+    if window is not None:
+        mask &= t_pos[None, :] > q_abs[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, cv.astype(jnp.float32))
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wkv_a": _init(ks[0], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                       1.0 / math.sqrt(d), dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wkv_b": _init(ks[1], (m.kv_lora_rank,
+                               h * (m.qk_nope_head_dim + m.v_head_dim)),
+                       1.0 / math.sqrt(m.kv_lora_rank), dtype),
+        "wo": _init(ks[2], (h * m.v_head_dim, d),
+                    1.0 / math.sqrt(h * m.v_head_dim), dtype),
+    }
+    if m.q_lora_rank > 0:
+        p["wq_a"] = _init(ks[3], (d, m.q_lora_rank), 1.0 / math.sqrt(d),
+                          dtype)
+        p["q_norm"] = rmsnorm_init(m.q_lora_rank, dtype)
+        p["wq_b"] = _init(ks[4], (m.q_lora_rank, h * qd),
+                          1.0 / math.sqrt(m.q_lora_rank), dtype)
+    else:
+        p["wq"] = _init(ks[5], (d, h * qd), 1.0 / math.sqrt(d), dtype)
+    return p
+
+
+def _mla_q(p: dict, x: jnp.ndarray, cfg: ModelConfig,
+           positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    m = cfg.mla
+    h = cfg.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if "wq_a" in p:
+        ql = rmsnorm(p["q_norm"], dense({"w": p["wq_a"]}, x), cfg.norm_eps)
+        q = dense({"w": p["wq_b"]}, ql)
+    else:
+        q = dense({"w": p["wq"]}, x)
+    q = q.reshape(b, s, h, qd)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = rope(q[..., m.qk_nope_head_dim:].swapaxes(1, 2), positions,
+                  cfg.rope_theta).swapaxes(1, 2)
+    return q_nope, q_rope
+
+
+def mla_attend(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
+               cfg: ModelConfig, *, kv_cache: Optional[dict] = None,
+               cache_pos: Optional[jnp.ndarray] = None,
+               impl: Optional[str] = None
+               ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """MLA with compressed latent cache.
+
+    Prefill/train: expand k/v per head and run fused attention.
+    Decode (s small, cache present): ABSORBED path — attention runs in the
+    kv_lora latent space; per-token cache cost is kv_lora + rope_dim floats.
+    kv_cache: {"ckv": [B, S_max, R], "krope": [B, S_max, rd]}.
+    """
+    b, s, d = x.shape
+    m = cfg.mla
+    h = cfg.n_heads
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    kv = dense({"w": p["wkv_a"]}, x)
+    ckv = rmsnorm(p["kv_norm"], kv[..., :m.kv_lora_rank], cfg.norm_eps)
+    kpos = positions if kv_cache is None else (
+        cache_pos + jnp.arange(s))
+    krope = rope(kv[..., m.kv_lora_rank:][:, None], kpos,
+                 cfg.rope_theta)[:, 0]                       # [B, S, rd]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h,
+                               m.qk_nope_head_dim + m.v_head_dim)
+    wk = wkv_b[..., :m.qk_nope_head_dim]                     # [R, H, dn]
+    wv = wkv_b[..., m.qk_nope_head_dim:]                     # [R, H, dv]
+
+    if kv_cache is not None:
+        cckv = jax.lax.dynamic_update_slice(
+            kv_cache["ckv"], ckv.astype(kv_cache["ckv"].dtype),
+            (0, cache_pos, 0))
+        ckrope = jax.lax.dynamic_update_slice(
+            kv_cache["krope"], krope.astype(kv_cache["krope"].dtype),
+            (0, cache_pos, 0))
+        new_cache = {"ckv": cckv, "krope": ckrope}
+        # --- absorbed decode: q projected INTO the latent space ---
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk,
+                           preferred_element_type=jnp.float32)  # [B,S,H,R]
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat,
+                           cckv.astype(jnp.float32))
+        s_rope = jnp.einsum("bshr,btr->bhst",
+                            q_rope.astype(jnp.float32),
+                            ckrope.astype(jnp.float32))
+        scores = (s_lat + s_rope) * scale
+        q_abs_pos = cache_pos + jnp.arange(s)
+        t_pos = jnp.arange(cckv.shape[1])
+        mask = t_pos[None, :] <= q_abs_pos[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs,
+                           cckv.astype(jnp.float32))          # [B,S,H,R]
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, wv.astype(jnp.float32))
+        out = out.reshape(b, s, h * m.v_head_dim).astype(x.dtype)
+        return dense_rp({"w": p["wo"]}, out), new_cache
+
+    # --- prefill/train: expand and use the fused kernel ---
+    k_nope = jnp.einsum("btr,rhn->bthn", ckv, wk,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("btr,rhv->bthv", ckv, wv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k_rope_b = jnp.broadcast_to(krope[:, :, None, :],
+                                (b, s, h, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # pad v head dim up to qk dim for the fused kernel, slice after
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qd - m.v_head_dim)))
+    out = kops.attention(q_full.swapaxes(1, 2), k_full.swapaxes(1, 2),
+                         v_pad.swapaxes(1, 2), causal=True, scale=scale,
+                         impl=impl)
+    out = out.swapaxes(1, 2)[..., :m.v_head_dim].reshape(
+        b, s, h * m.v_head_dim)
+    return dense_rp({"w": p["wo"]}, out), None
+
+
+# ---------------------------------------------------------------------------
+# MLPs (gated SwiGLU — llama family) and MoE
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _init(ks[0], (d, d_ff), 1.0 / math.sqrt(d), dtype),
+        "wg": _init(ks[1], (d, d_ff), 1.0 / math.sqrt(d), dtype),
+        "wd": _init(ks[2], (d_ff, d), 1.0 / math.sqrt(d_ff), dtype),
+    }
+
+
+def mlp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(dense({"w": p["wg"]}, x).astype(jnp.float32)) \
+        * dense({"w": p["wi"]}, x).astype(jnp.float32)
+    return dense_rp({"w": p["wd"]}, h.astype(x.dtype))
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, m.n_experts), 1.0 / math.sqrt(d), dtype),
+        "we_i": _init(ks[1], (m.n_experts, d, m.d_expert),
+                      1.0 / math.sqrt(d), dtype),
+        "we_g": _init(ks[2], (m.n_experts, d, m.d_expert),
+                      1.0 / math.sqrt(d), dtype),
+        "we_d": _init(ks[3], (m.n_experts, m.d_expert, d),
+                      1.0 / math.sqrt(m.d_expert), dtype),
+    }
+    if m.n_shared_experts > 0:
+        p["shared"] = mlp_init(ks[4], d, m.d_expert * m.n_shared_experts,
+                               dtype)
+    return p
+
+
+def _axes_size(axes) -> int:
+    import jax.core as _core  # axis sizes resolved at trace time via mesh
+    from repro.runtime.sharding import _HINT_MESH
+    mesh = _HINT_MESH.get()
+    if mesh is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _row_pin(x: jnp.ndarray) -> jnp.ndarray:
+    """Inside the vmapped MoE row fn: pin all unmapped dims replicated.
+
+    Under vmap(spmd_axis_name=client_axes) the constraint becomes
+    P(clients, None, ...) on the batched value — exactly what keeps the
+    dispatch gather/scatter local to each client shard (GSPMD's propagation
+    through batched gathers otherwise replicates the operand)."""
+    from repro.runtime.sharding import _HINT_MESH
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = _HINT_MESH.get()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * x.ndim))))
+
+
+def _moe_row(p: dict, xr: jnp.ndarray, e: int, k: int, cap: int,
+             pin=None) -> jnp.ndarray:
+    """Dispatch one token row [T, D] through capacity-grouped experts.
+
+    Dispatch/combine are gathers/scatters (memory ops, not FLOPs — unlike the
+    classic GShard one-hot einsums, which are quadratic in tokens); expert
+    compute is a [E,C,D]×[E,D,F] batched einsum (MXU-friendly).
+
+    `pin` overrides the per-tensor sharding pin (default: `_row_pin` for the
+    vmapped train path; the EP decode path pins the expert dim to `model`).
+    """
+    if pin is None:
+        pin = _row_pin
+    t, d = xr.shape
+    logits = dense({"w": p["router"]}, xr).astype(jnp.float32)   # [T, E]
+    gates, top_idx = jax.lax.top_k(logits, k)                    # [T, k]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # position of each (token, slot) in its expert queue
+    flat_e = top_idx.reshape(-1)                                 # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                              flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap                                             # drop overflow
+
+    tok_ids = jnp.repeat(jnp.arange(t), k)
+    slot_e = jnp.where(keep, flat_e, 0)
+    slot_c = jnp.where(keep, pos, cap - 1)
+    dispatch_tok = jnp.zeros((e, cap), dtype=jnp.int32).at[
+        slot_e, slot_c].set(jnp.where(keep, tok_ids, 0), mode="drop")
+    dispatch_w = jnp.zeros((e, cap), dtype=jnp.float32).at[
+        slot_e, slot_c].set(jnp.where(keep, gates.reshape(-1), 0.0),
+                            mode="drop")
+
+    xe = pin(jnp.take(xr, dispatch_tok.reshape(-1), axis=0
+                      ).reshape(e, cap, d))                      # gather
+    hi = jnp.einsum("ecd,edf->ecf", xe, p["we_i"],
+                    preferred_element_type=jnp.float32)
+    hg = jnp.einsum("ecd,edf->ecf", xe, p["we_g"],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(hg) * hi).astype(xr.dtype)
+    from repro.runtime.sharding import bf16_reduce_active
+    down_dt = (jnp.bfloat16 if bf16_reduce_active()
+               and xr.dtype == jnp.bfloat16 else jnp.float32)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["we_d"],
+                    preferred_element_type=down_dt)              # [E, C, D]
+    ye = ye * dispatch_w[..., None]
+    out = jnp.zeros((t, d), dtype=jnp.float32).at[
+        dispatch_tok.reshape(-1)].add(ye.reshape(-1, d), mode="drop")
+    return _row_pin(out.astype(xr.dtype)) if pin is _row_pin \
+        else out.astype(xr.dtype)
+
+
+def _moe_tiny_tokens(p: dict, x: jnp.ndarray, cfg: ModelConfig
+                     ) -> jnp.ndarray:
+    """EP decode path (§Perf hillclimb cell 3): for tiny token counts
+    (decode steps) the dispatch runs GLOBALLY (no per-row vmap) with the
+    expert dim pinned to `model`. Combined with the serve-time expert
+    layout (E→model, FSDP on the contraction dim; sharding.param_spec
+    serve=True), GSPMD keeps weights resident and psums only token-sized
+    activations — instead of streaming ~1 GB/layer of expert weights per
+    generated token."""
+    from repro.runtime.sharding import _HINT_MESH
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    b, s, d = x.shape
+    m = cfg.moe
+    e, k = m.n_experts, m.n_experts_per_tok
+    t = b * s
+    cap = max(int(math.ceil(k * t * m.capacity_factor / e)), 1)
+    mesh = _HINT_MESH.get()
+
+    def pin_e(arr):  # expert-dim over model, rest replicated
+        if mesh is None:
+            return arr
+        spec = ["model"] + [None] * (arr.ndim - 1)
+        return jax.lax.with_sharding_constraint(
+            arr, NamedSharding(mesh, P(*spec)))
+
+    out = _moe_row(p, x.reshape(t, d), e, k, cap, pin=pin_e)
+    if mesh is not None:
+        out = jax.lax.with_sharding_constraint(
+            out, NamedSharding(mesh, P(*([None] * out.ndim))))
+    out = out.reshape(b, s, d)
+    if "shared" in p:
+        out = out + mlp(p["shared"], x)
+    return out
+
+
+def moe(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Chunked capacity-grouped top-k MoE.
+
+    x: [B, S, D]. The sequence is processed in dispatch groups of
+    `moe.chunk` tokens under lax.scan, bounding the duplicated-token
+    transient to B·chunk·k·cf·D instead of B·S·k·cf·D. Dispatch is
+    *per batch row* (vmap), so tokens never cross client/batch shards —
+    no collective traffic is induced on the client axes.
+    """
+    from repro.runtime.sharding import hint
+    b, s, d = x.shape
+    m = cfg.moe
+    e, k = m.n_experts, m.n_experts_per_tok
+    if b * s <= 4096 and e % _axes_size("model") == 0 \
+            and _axes_size("model") > 1:
+        return _moe_tiny_tokens(p, x, cfg)
+    x = hint(x, "client", None, None)
+    chunk = min(m.chunk, s) if m.chunk > 0 else s
+    if s % chunk != 0:
+        chunk = s  # tiny/smoke shapes: single group
+    n_c = s // chunk
+    cap = max(int(math.ceil(k * chunk * m.capacity_factor / e)), 1)
+
+    from repro.runtime.sharding import current_client_axes
+    spmd = current_client_axes()
+    if spmd is not None and b % _axes_size(spmd) == 0:
+        # keep the vmapped row dim sharded over clients through the
+        # dispatch gather/scatter (GSPMD propagation alone loses it)
+        row_fn = jax.vmap(lambda xr: _moe_row(p, xr, e, k, cap),
+                          spmd_axis_name=spmd)
+    else:
+        row_fn = jax.vmap(lambda xr: _moe_row(p, xr, e, k, cap))
+
+    if n_c == 1:
+        out = row_fn(x)
+        out = hint(out, "client", None, None)
+    else:
+        xs = x.reshape(b, n_c, chunk, d).swapaxes(0, 1)   # [n_c, B, chunk, D]
+
+        def step(_, xc):
+            return None, row_fn(xc)
+
+        _, ys = jax.lax.scan(step, None, xs)
+        out = ys.swapaxes(0, 1).reshape(b, s, d)
+    out = hint(out, "client", None, None)
+    if "shared" in p:
+        out = out + mlp(p["shared"], x)
+    return out

@@ -1,0 +1,127 @@
+"""Architecture registry: one uniform interface over all model families.
+
+Every assigned architecture is selectable by id (--arch <id>); the registry
+dispatches to the family module and provides:
+  * init / loss_per_client / prefill / decode_step / serve-state init
+  * exact parameter counts via jax.eval_shape (no allocation — works for the
+    236B config on a laptop)
+  * abstract batch/state specs used by the dry-run's input_specs()
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm, transformer, vlm
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": vlm,
+    "audio": encdec,
+    "hybrid": hybrid,
+    "ssm": ssm,
+}
+
+
+def get_module(cfg: ModelConfig):
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for {cfg.name}")
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Any:
+    return get_module(cfg).init(key, cfg, dtype)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct pytree of the full parameter set (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(get_module(cfg).init, cfg=cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _count_params_cached(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    return int(sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(tree)))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = _count_params_cached(cfg)
+    if active_only and cfg.moe.enabled:
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.d_expert
+        inactive = cfg.n_layers * (m.n_experts - m.n_experts_per_tok) \
+            * per_expert
+        return total - inactive
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (the dry-run's input_specs() builds on these)
+# ---------------------------------------------------------------------------
+
+def train_batch_shapes(cfg: ModelConfig, shape: ShapeConfig, n_clients: int
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract train batch: tokens/targets/mask [K, b, S] (+ stub frontend)."""
+    assert shape.global_batch % n_clients == 0, \
+        f"global_batch {shape.global_batch} not divisible by K={n_clients}"
+    b = shape.global_batch // n_clients
+    s = shape.seq_len
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((n_clients, b, s), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((n_clients, b, s), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((n_clients, b, s), jnp.float32),
+    }
+    if cfg.frontend.kind != "none":
+        spec["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (n_clients, b, cfg.frontend.n_frontend_tokens, cfg.d_model),
+            jnp.bfloat16)
+    return spec
+
+
+def serve_cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16) -> Any:
+    mod = get_module(cfg)
+    if cfg.family == "ssm":
+        return jax.eval_shape(
+            lambda: mod.init_state(cfg, batch, dtype=dtype))
+    if cfg.family == "hybrid":
+        return jax.eval_shape(
+            lambda: mod.init_state(cfg, batch, dtype=dtype))
+    if cfg.family == "audio":
+        return jax.eval_shape(
+            lambda: mod.init_cache(cfg, batch, max_len,
+                                   cfg.frontend.n_frontend_tokens,
+                                   dtype=dtype))
+    return jax.eval_shape(
+        lambda: mod.init_cache(cfg, batch, max_len, dtype=dtype))
+
+
+# ---------------------------------------------------------------------------
+# Registry of architecture ids → ModelConfig builders
+# ---------------------------------------------------------------------------
+
+def get_arch(arch_id: str) -> ModelConfig:
+    _ensure_configs_loaded()
+    from repro.models.arch_registry import arch_builder
+    return arch_builder(arch_id)()
+
+
+def list_archs():
+    _ensure_configs_loaded()
+    from repro.models.arch_registry import registered
+    return registered()
+
+
+def _ensure_configs_loaded():
+    # importing repro.configs registers every architecture module
+    import repro.configs  # noqa: F401

@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD) language model — attention-free family.
+
+Block layout follows arXiv:2405.21060: in_proj → (z gate | xBC) with a causal
+depthwise conv over xBC → SSD mixing (chunked kernel) → gated RMSNorm →
+out_proj. State for decode is O(1) in sequence length: a [B, H, P, N] SSD
+state plus a (d_conv−1)-deep conv tail — which is why mamba2 runs the
+long_500k cell that full-attention archs must skip.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state, s.d_conv, s.head_dim
+
+
+def _block_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, h, n, d_conv, p_dim = _dims(cfg)
+    conv_ch = d_inner + 2 * n            # x, B, C share the conv
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": L.rmsnorm_init(d, dtype),
+        "in_proj": L.dense_init(ks[0], d, 2 * d_inner + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, conv_ch),
+                                     dtype=jnp.float32)
+                   / math.sqrt(d_conv)).astype(dtype),
+        "a_log": jnp.zeros((h,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((h,), dtype=jnp.float32),
+        "gate_norm": L.rmsnorm_init(d_inner, dtype),
+        "out_proj": L.dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg, dtype))(layer_keys)
+    p = {
+        "embed": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.embed_init(ks[2], cfg.vocab_size, cfg.d_model,
+                                    dtype)
+    return p
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x: [B, S, C]; w: [W, C]; tail: [B, W−1, C]
+    carried state. Returns (y [B,S,C], new_tail)."""
+    b, s, c = x.shape
+    wlen = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((b, wlen - 1, c), dtype=x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)          # [B, S+W-1, C]
+    y = sum(xp[:, i:i + s] * w[i][None, None].astype(x.dtype)
+            for i in range(wlen))
+    new_tail = xp[:, -(wlen - 1):] if wlen > 1 else tail
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def _block_apply(bp: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                 state: Optional[dict] = None, impl: Optional[str] = None
+                 ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: [B, S, D]. state: {"ssd": [B,H,P,N], "conv": [B,W−1,C]} for decode."""
+    from repro.runtime.sharding import hint
+    x = hint(x, "client", None, None)
+    b, s, d = x.shape
+    d_inner, h, n, d_conv, p_dim = _dims(cfg)
+    res = x
+    xn = L.rmsnorm(bp["norm"], x, cfg.norm_eps)
+    zxbcdt = L.dense(bp["in_proj"], xn)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * n]
+    dt_raw = zxbcdt[..., -h:]
+
+    conv_tail = state["conv"] if state is not None else None
+    xbc, new_tail = _causal_conv(xbc, bp["conv_w"], conv_tail)
+    xs = xbc[..., :d_inner].reshape(b, s, h, p_dim)
+    b_mat = xbc[..., d_inner:d_inner + n]
+    c_mat = xbc[..., d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + bp["dt_bias"][None, None])
+    a = -jnp.exp(bp["a_log"])
+
+    if state is None:
+        chunk = min(cfg.ssm.chunk, s)
+        if s % chunk != 0:
+            chunk = s
+        y, _ = kops.ssd(xs, dt, a, b_mat, c_mat, chunk=chunk, impl=impl)
+        new_state = None
+    else:
+        y_t, ssd_state = kops.ssd_decode_step(
+            state["ssd"], xs[:, 0], dt[:, 0], a, b_mat[:, 0], c_mat[:, 0])
+        y = y_t[:, None]
+        new_state = {"ssd": ssd_state, "conv": new_tail}
+
+    y = y.reshape(b, s, d_inner)
+    y = L.rmsnorm(bp["gate_norm"],
+                  y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                  cfg.norm_eps)
+    return res + L.dense_rp(bp["out_proj"], y), new_state
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            impl: Optional[str] = None) -> jnp.ndarray:
+    x = L.embed(params["embed"], tokens)
+
+    def body(hk, bp):
+        hk, _ = _block_apply(bp, hk, cfg, impl=impl)
+        return hk, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def token_nll(params, cfg, tokens, targets, mask, *, impl=None,
+              prefix_embeds=None):
+    x = forward(params, cfg, tokens, impl=impl)
+    logits = L.unembed(params.get("lm_head", params["embed"]), x)
+    return L.cross_entropy(logits, targets, mask)
+
+
+def loss_per_client(params: dict, cfg: ModelConfig, batch: dict, *,
+                    impl: Optional[str] = None) -> jnp.ndarray:
+    k, b, s = batch["tokens"].shape
+    flat = lambda a: a.reshape((k * b,) + a.shape[2:])
+    nll = token_nll(params, cfg, flat(batch["tokens"]),
+                    flat(batch["targets"]), flat(batch["mask"]), impl=impl)
+    return jnp.mean(nll.reshape(k, b), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Serving — O(1) state
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, h, n, d_conv, p_dim = _dims(cfg)
+    lcount = cfg.n_layers
+    return {
+        "ssd": jnp.zeros((lcount, batch, h, p_dim, n), dtype=jnp.float32),
+        "conv": jnp.zeros((lcount, batch, d_conv - 1, d_inner + 2 * n),
+                          dtype=dtype),
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, state: dict,
+                tokens: jnp.ndarray, cache_pos=None, *,
+                impl: Optional[str] = None) -> Tuple[jnp.ndarray, dict]:
+    """tokens: [B, 1]. cache_pos unused (state is position-free)."""
+    x = L.embed(params["embed"], tokens)
+
+    def body(hk, xs):
+        bp, layer_state = xs
+        hk, new_state = _block_apply(bp, hk, cfg, state=layer_state,
+                                     impl=impl)
+        return hk, new_state
+
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params.get("lm_head", params["embed"]), x), new_state
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            impl: Optional[str] = None) -> Tuple[jnp.ndarray, dict]:
+    """Prefill = full forward while collecting final states per layer."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    d_inner, h, n, d_conv, p_dim = _dims(cfg)
+
+    def body(hk, bp):
+        # run block in train mode but also compute the final ssd/conv state
+        res = hk
+        xn = L.rmsnorm(bp["norm"], hk, cfg.norm_eps)
+        zxbcdt = L.dense(bp["in_proj"], xn)
+        z = zxbcdt[..., :d_inner]
+        xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * n]
+        dt_raw = zxbcdt[..., -h:]
+        xbc_c, tail = _causal_conv(xbc, bp["conv_w"])
+        xs_ = xbc_c[..., :d_inner].reshape(b, s, h, p_dim)
+        b_mat = xbc_c[..., d_inner:d_inner + n]
+        c_mat = xbc_c[..., d_inner + n:]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + bp["dt_bias"][None, None])
+        a = -jnp.exp(bp["a_log"])
+        chunk = min(cfg.ssm.chunk, s)
+        if s % chunk != 0:
+            chunk = s
+        y, ssd_state = kops.ssd(xs_, dt, a, b_mat, c_mat, chunk=chunk,
+                                impl=impl)
+        y = y.reshape(b, s, d_inner)
+        y = L.rmsnorm(bp["gate_norm"],
+                      y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                      cfg.norm_eps)
+        hk = res + L.dense_rp(bp["out_proj"], y)
+        return hk, {"ssd": ssd_state, "conv": tail}
+
+    x, state = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params.get("lm_head", params["embed"]), x[:, -1:]), state

@@ -1,0 +1,55 @@
+"""InternVL2-style VLM: vision-frontend STUB + LM backbone.
+
+Per the assignment, the modality frontend is a stub: input_specs() supplies
+precomputed patch embeddings [B, n_img_tokens, d_model] (InternViT output
+after the mlp1 projector). They are prepended to the text embeddings and the
+full sequence runs through the standard decoder-only backbone
+(transformer.py). Loss is masked to text positions by the data pipeline.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    return T.init(key, cfg, dtype)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            impl: Optional[str] = None) -> jnp.ndarray:
+    return T.forward(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                     impl=impl)
+
+
+def token_nll(params, cfg, tokens, targets, mask, *, prefix_embeds=None,
+              impl=None):
+    return T.token_nll(params, cfg, tokens, targets, mask,
+                       prefix_embeds=prefix_embeds, impl=impl)
+
+
+def loss_per_client(params: dict, cfg: ModelConfig, batch: dict, *,
+                    impl: Optional[str] = None) -> jnp.ndarray:
+    assert "prefix_embeds" in batch, "vlm batches carry patch embeddings"
+    return T.loss_per_client(params, cfg, batch, impl=impl)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            impl: Optional[str] = None) -> Tuple[jnp.ndarray, dict]:
+    return T.prefill(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                     impl=impl)
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict,
+                tokens: jnp.ndarray, cache_pos, *,
+                impl: Optional[str] = None):
+    return T.decode_step(params, cfg, cache, tokens, cache_pos, impl=impl)
+
+
+init_cache = T.init_cache

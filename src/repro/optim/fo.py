@@ -1,0 +1,94 @@
+"""First-order optimizer baselines (raw JAX — no optax dependency).
+
+These are the comparison points of the paper's Table II: FO-SGD (grads only),
+FO-Adam (grads + 2 moments), and signSGD [Bernstein et al. 2018], the
+element-wise 1-bit compressor the paper contrasts with its O(1) scheme.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: float = 1e-3
+    momentum: float = 0.0
+
+    def init(self, params: PyTree) -> PyTree:
+        if self.momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(self, params: PyTree, grads: PyTree, state: PyTree
+               ) -> Tuple[PyTree, PyTree]:
+        if self.momentum == 0.0:
+            new = jax.tree_util.tree_map(
+                lambda p, g: (p - self.lr * g.astype(p.dtype)).astype(p.dtype),
+                params, grads)
+            return new, ()
+        vel = jax.tree_util.tree_map(
+            lambda v, g: self.momentum * v + g.astype(v.dtype), state, grads)
+        new = jax.tree_util.tree_map(
+            lambda p, v: (p - self.lr * v).astype(p.dtype), params, vel)
+        return new, vel
+
+
+@dataclass(frozen=True)
+class Adam:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+    def init(self, params: PyTree) -> PyTree:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(self, params: PyTree, grads: PyTree, state: PyTree
+               ) -> Tuple[PyTree, PyTree]:
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: self.b1 * m_ + (1 - self.b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: self.b2 * v_
+            + (1 - self.b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m_, v_: (p - self.lr * (m_ / bc1)
+                               / (jnp.sqrt(v_ / bc2) + self.eps)
+                               ).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+
+@dataclass(frozen=True)
+class SignSGD:
+    """Element-wise 1-bit compression baseline (paper ref [3]); per-iteration
+    upload is d bits — compare Sign-pAirZero's 1 bit total."""
+    lr: float = 1e-4
+
+    def init(self, params: PyTree) -> PyTree:
+        return ()
+
+    def update(self, params: PyTree, grads: PyTree, state: PyTree
+               ) -> Tuple[PyTree, PyTree]:
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p - self.lr * jnp.sign(g).astype(p.dtype)
+                          ).astype(p.dtype),
+            params, grads)
+        return new, ()
+
+
+def make(name: str, lr: float):
+    return {"sgd": SGD, "adam": Adam, "signsgd": SignSGD}[name](lr=lr)

@@ -1,0 +1,93 @@
+"""Fault-tolerance runtime: client dropout, stragglers, elastic membership.
+
+OTA aggregation makes fault handling unusually clean: a failed or late client
+simply *does not superpose its signal*. The server detects the surviving set
+via pilot symbols (simulated here as the survival mask) and inverts by K_eff.
+ZO makes *state* recovery trivial: a rejoining client needs only (w, t, seed)
+— no optimizer state, no gradient history.
+
+All randomness is seeded and replayable: a restarted coordinator regenerates
+the identical fault trace, so checkpoint-resumed runs are bit-reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class FaultModel:
+    """Per-round client availability model.
+
+    dropout_p:    iid probability a client's uplink fails this round.
+    straggler_p:  probability a client misses the OTA deadline this round.
+    mtbf_rounds:  if set, clients also fail "hard" (mean time between
+                  failures, exponential) and rejoin after `repair_rounds`.
+    """
+    n_clients: int
+    dropout_p: float = 0.0
+    straggler_p: float = 0.0
+    mtbf_rounds: Optional[float] = None
+    repair_rounds: int = 10
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._down_until = np.zeros(self.n_clients, dtype=np.int64)
+
+    def survival_mask(self, t: int) -> np.ndarray:
+        """[K] 0/1 mask of clients whose signal superposes in round t."""
+        up = self._down_until <= t
+        if self.mtbf_rounds:
+            fails = self._rng.random(self.n_clients) < 1.0 / self.mtbf_rounds
+            newly_down = up & fails
+            self._down_until[newly_down] = t + self.repair_rounds
+            up = self._down_until <= t
+        transient = (self._rng.random(self.n_clients)
+                     >= self.dropout_p + self.straggler_p)
+        mask = (up & transient).astype(np.float32)
+        if mask.sum() == 0:  # never let a round fully vanish
+            mask[self._rng.integers(self.n_clients)] = 1.0
+        return mask
+
+
+@dataclass
+class ElasticSchedule:
+    """Deterministic membership schedule: K(t) clients active.
+
+    Models planned scale-up/down (pods joining/leaving a fleet). Combine with
+    FaultModel for unplanned failures. `events` is a list of (round, K_new);
+    membership masks activate the first K_new client slots.
+    """
+    n_clients: int
+    events: tuple = ()
+
+    def active_k(self, t: int) -> int:
+        k = self.n_clients
+        for round_t, k_new in sorted(self.events):
+            if t >= round_t:
+                k = k_new
+        return max(1, min(k, self.n_clients))
+
+    def membership_mask(self, t: int) -> np.ndarray:
+        mask = np.zeros(self.n_clients, dtype=np.float32)
+        mask[: self.active_k(t)] = 1.0
+        return mask
+
+
+def combined_mask(t: int, fault: Optional[FaultModel] = None,
+                  elastic: Optional[ElasticSchedule] = None,
+                  n_clients: Optional[int] = None) -> np.ndarray:
+    if fault is None and elastic is None:
+        return np.ones(n_clients, dtype=np.float32)
+    mask = None
+    if elastic is not None:
+        mask = elastic.membership_mask(t)
+    if fault is not None:
+        fm = fault.survival_mask(t)
+        mask = fm if mask is None else mask * fm
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    return mask

@@ -1,0 +1,244 @@
+"""Sharding rules: param/activation/cache PartitionSpecs per architecture.
+
+Strategy (DESIGN.md §6): clients ≡ (pod, data) axes; within a client the
+model axis carries TP (attention heads / FFN columns / expert FFN columns)
+while weights are additionally FSDP-sharded over the client axes — GSPMD
+inserts the per-layer all-gathers under lax.scan, which is what lets the
+236B config fit 512 × 16 GB chips.
+
+Rules are name-based (the framework convention: projection matrices have
+stable leaf names), rank-aware, and divisibility-guarded: a dim is only
+sharded if the mesh axis divides it — otherwise that axis is dropped (GSPMD
+could pad, but explicit fallback keeps memory analysis readable).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# leaf names → role
+_COL_PARALLEL = {  # [.., d_in, d_out]: FSDP on d_in, TP on d_out
+    "wq", "wk", "wv", "wi", "wg", "wq_b", "wkv_b", "wq_a", "wkv_a",
+    "router", "we_i", "we_g", "in_proj", "lin_x", "lin_gate",
+    "w_rec_gate", "w_in_gate",
+    # we_d is deliberately col-parallel (FSDP on F, TP on D): contracting a
+    # TP-sharded F would psum the full pre-combine [E,B,C,D] tensor (k·cf×
+    # larger than the token tensor); with TP on D the psum disappears and
+    # only the combined [T, D] output is gathered (§Perf iteration 2).
+    "we_d",
+}
+_ROW_PARALLEL = {  # [.., d_in, d_out]: TP on d_in, FSDP on d_out
+    "wo", "wd", "out", "out_proj",
+}
+_EMBED = {"embed", "lm_head", "dec_embed"}   # [V, D]: TP on V, FSDP on D
+
+
+def client_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, axes, dim: int):
+    """Use `axes` for this dim only if it divides evenly."""
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def param_spec(mesh: Mesh, path: Tuple, leaf, serve: bool = False) -> P:
+    """PartitionSpec for one parameter leaf, from its tree path + shape.
+
+    serve=True switches MoE expert tensors to the EP-resident decode layout
+    (§Perf hillclimb cell 3): experts sharded over `model` and FSDP on the
+    contraction dim — weights stay resident and only tiny token activations
+    cross devices per decode step, instead of streaming ~1 GB/layer of
+    expert weights per generated token.
+    """
+    names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+    leaf_name = names[-1] if names[-1] != "w" else (
+        names[-2] if len(names) >= 2 else names[-1])
+    shape = leaf.shape
+    fsdp = client_axes(mesh)
+    tp = "model"
+
+    if serve and leaf_name in ("we_i", "we_g", "we_d") and len(shape) >= 3:
+        # [.., E, d_in, d_out]: E → model, contraction dim → fsdp
+        spec = [None] * len(shape)
+        spec[-3] = _maybe(mesh, tp, shape[-3])
+        spec[-2] = _maybe(mesh, fsdp, shape[-2])
+        return P(*spec)
+
+    if leaf_name in _EMBED and len(shape) == 2:
+        return P(_maybe(mesh, tp, shape[0]), _maybe(mesh, fsdp, shape[1]))
+    if leaf_name in _COL_PARALLEL and len(shape) >= 2:
+        spec = [None] * len(shape)
+        spec[-2] = _maybe(mesh, fsdp, shape[-2])
+        spec[-1] = _maybe(mesh, tp, shape[-1])
+        return P(*spec)
+    if leaf_name in _ROW_PARALLEL and len(shape) >= 2:
+        spec = [None] * len(shape)
+        spec[-2] = _maybe(mesh, tp, shape[-2])
+        spec[-1] = _maybe(mesh, fsdp, shape[-1])
+        return P(*spec)
+    if leaf_name == "conv_w" and len(shape) >= 2:
+        spec = [None] * len(shape)
+        spec[-1] = _maybe(mesh, tp, shape[-1])
+        return P(*spec)
+    # norms, gains, scalars, biases: replicated
+    return P(*([None] * len(shape)))
+
+
+def params_sharding(mesh: Mesh, params_like: PyTree,
+                    serve: bool = False) -> PyTree:
+    """NamedSharding tree matching `params_like` (abstract or concrete)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    shardings = [NamedSharding(mesh, param_spec(mesh, path, leaf, serve))
+                 for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Batches / control / caches
+# ---------------------------------------------------------------------------
+
+def batch_sharding(mesh: Mesh, batch_like: PyTree) -> PyTree:
+    """Train batches [K, b, S, ...]: client dim over (pod, data)."""
+    cl = client_axes(mesh)
+
+    def spec(leaf):
+        k = leaf.shape[0]
+        lead = _maybe(mesh, cl, k)
+        return NamedSharding(mesh, P(lead, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree_util.tree_map(spec, batch_like)
+
+
+def control_sharding(mesh: Mesh, ctl_like: PyTree) -> PyTree:
+    """Per-round control block: replicated everywhere (scalars + [K])."""
+    def spec(leaf):
+        return NamedSharding(mesh, P(*([None] * len(getattr(leaf, "shape",
+                                                            ())))))
+    return jax.tree_util.tree_map(spec, ctl_like)
+
+
+def serve_batch_sharding(mesh: Mesh, tokens_like) -> NamedSharding:
+    """Serve tokens [B, S]: batch over clients when divisible."""
+    cl = client_axes(mesh)
+    lead = _maybe(mesh, cl, tokens_like.shape[0])
+    return NamedSharding(mesh, P(lead, None))
+
+
+def cache_sharding(mesh: Mesh, cache_like: PyTree) -> PyTree:
+    """Decode caches/states.
+
+    Uniform rule (works for MQA/GQA/MLA/SSM/hybrid alike): leading layer dim
+    replicated, batch dim over clients, and the *longest remaining dim*
+    (sequence for KV caches, channels for SSM/LRU states) over `model` when
+    divisible. Chosen for robustness; head-sharded variants are a §Perf
+    lever.
+    """
+    cl = client_axes(mesh)
+
+    def spec(leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        out = [None] * ndim
+        if ndim >= 2:
+            out[1] = _maybe(mesh, cl, shape[1])      # batch dim (after L)
+        if ndim >= 3:
+            # pick the largest of the remaining dims for the model axis
+            rest = list(range(2, ndim))
+            big = max(rest, key=lambda i: shape[i])
+            out[big] = _maybe(mesh, "model", shape[big])
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree_util.tree_map(spec, cache_like)
+
+
+def replicated(mesh: Mesh, like: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))), like)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hints (model code → GSPMD, mesh-agnostic)
+# ---------------------------------------------------------------------------
+# Model code can't (and shouldn't) know mesh axis names. It calls
+# `hint(x, "client", None, "model")` with per-dim *roles*; if a hint context
+# is active (set by dryrun/train/serve launchers), the role resolves to a
+# with_sharding_constraint; otherwise it is a no-op (CPU tests unaffected).
+
+import contextvars
+from contextlib import contextmanager
+
+_HINT_MESH: "contextvars.ContextVar[Optional[Mesh]]" = \
+    contextvars.ContextVar("repro_hint_mesh", default=None)
+_BF16_REDUCE: "contextvars.ContextVar[bool]" = \
+    contextvars.ContextVar("repro_bf16_reduce", default=False)
+
+
+@contextmanager
+def hints(mesh: Mesh, bf16_reduce: bool = False):
+    """Activate model-side sharding hints (and optionally bf16 psums).
+
+    bf16_reduce: row-parallel projections emit bf16 partials, so the TP
+    all-reduce moves half the bytes (§Perf optimization; MXU accumulation
+    stays f32 internally — only the cross-device combine is bf16)."""
+    token = _HINT_MESH.set(mesh)
+    token2 = _BF16_REDUCE.set(bf16_reduce)
+    try:
+        yield
+    finally:
+        _HINT_MESH.reset(token)
+        _BF16_REDUCE.reset(token2)
+
+
+def bf16_reduce_active() -> bool:
+    return _BF16_REDUCE.get()
+
+
+def current_client_axes():
+    """Client mesh axes from the active hint context (None outside it).
+
+    Used as vmap(spmd_axis_name=...) so per-row batched ops (e.g. MoE
+    dispatch gather/scatter) keep their batch dim sharded over clients."""
+    mesh = _HINT_MESH.get()
+    if mesh is None:
+        return None
+    axes = client_axes(mesh)
+    return axes if axes else None
+
+
+def hint(x, *roles):
+    """roles: one of "client" | "model" | None per dim of x.
+
+    "client" dims stay divisibility-guarded (a ragged client split would be
+    semantically wrong for pAirZero clients); "model" dims may shard
+    unevenly — GSPMD pads internally, which is exactly what we want for odd
+    vocab sizes (51865, 73448, ...) instead of a replicated logits tensor.
+    """
+    mesh = _HINT_MESH.get()
+    if mesh is None:
+        return x
+    assert len(roles) == x.ndim, (roles, x.shape)
+    resolved = []
+    for dim, role in zip(x.shape, roles):
+        if role == "client":
+            resolved.append(_maybe(mesh, client_axes(mesh), dim))
+        elif role == "model":
+            resolved.append("model" if dim >= axis_size(mesh, "model")
+                            else None)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

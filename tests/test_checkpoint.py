@@ -1,0 +1,87 @@
+"""Checkpointing: atomic save/restore, corruption detection, retention."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+
+
+@pytest.fixture
+def params():
+    return {"layer": {"w": jnp.arange(12.0).reshape(3, 4),
+                      "b": jnp.ones((4,))},
+            "head": jnp.full((2, 2), 7.0)}
+
+
+def test_save_restore_roundtrip(tmp_path, params):
+    path = ckpt.save(str(tmp_path), 42, params,
+                     extra={"accountant": {"spent": 0.5}})
+    like = jax.tree_util.tree_map(jnp.zeros_like, params)
+    restored, step, extra = ckpt.restore(path, like)
+    assert step == 42
+    assert extra["accountant"]["spent"] == 0.5
+    for a, b in zip(jax.tree_util.tree_leaves(restored),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_retention(tmp_path, params):
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), step, params, keep=3)
+    assert ckpt.latest(str(tmp_path)).endswith("step_00000005")
+    remaining = sorted(os.listdir(tmp_path))
+    assert remaining == ["step_00000003", "step_00000004", "step_00000005"]
+
+
+def test_corruption_detected(tmp_path, params):
+    path = ckpt.save(str(tmp_path), 1, params)
+    npz = os.path.join(path, "arrays.npz")
+    data = dict(np.load(npz).items())
+    first = sorted(data)[0]
+    data[first] = data[first] + 1.0          # flip bits
+    np.savez(npz, **data)
+    like = jax.tree_util.tree_map(jnp.zeros_like, params)
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore(path, like)
+
+
+def test_shape_mismatch_detected(tmp_path, params):
+    path = ckpt.save(str(tmp_path), 1, params)
+    bad = {"layer": {"w": jnp.zeros((5, 5)), "b": jnp.zeros((4,))},
+           "head": jnp.zeros((2, 2))}
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(path, bad)
+
+
+def test_latest_none_when_empty(tmp_path):
+    assert ckpt.latest(str(tmp_path)) is None
+    assert ckpt.latest(str(tmp_path / "missing")) is None
+
+
+def test_manifest_is_valid_json(tmp_path, params):
+    path = ckpt.save(str(tmp_path), 9, params)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["step"] == 9
+    assert set(manifest["crc32"]) == set(manifest["shapes"])
+
+
+def test_async_checkpointer_roundtrip(tmp_path, params):
+    import jax.numpy as jnp
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3):
+        bumped = jax.tree_util.tree_map(lambda a: a + step, params)
+        acp.save(step, bumped, extra={"round": step})
+    acp.wait()
+    assert ckpt.latest(str(tmp_path)).endswith("step_00000003")
+    like = jax.tree_util.tree_map(jnp.zeros_like, params)
+    restored, step, extra = ckpt.restore(ckpt.latest(str(tmp_path)), like)
+    assert step == 3 and extra["round"] == 3
+    np.testing.assert_array_equal(
+        np.asarray(restored["head"]), np.asarray(params["head"]) + 3)
+    assert sorted(os.listdir(tmp_path)) == ["step_00000002",
+                                            "step_00000003"]

@@ -1,0 +1,66 @@
+"""DP accountant: C/C⁻¹, R_dp, budget tracking, checkpoint continuity."""
+import math
+
+import pytest
+
+from repro.core import dp
+
+
+def test_c_inverse_roundtrip():
+    for x in (0.01, 0.5, 1.0, 2.0, 3.5):
+        y = dp.c_func(x)
+        assert abs(dp.c_inverse(y) - x) < 1e-9 * max(1.0, x)
+
+
+def test_c_inverse_of_large_values():
+    # 1/δ for δ=0.01 → C⁻¹(100)
+    x = dp.c_inverse(100.0)
+    assert abs(dp.c_func(x) - 100.0) < 1e-6 * 100.0
+
+
+def test_r_dp_monotone_in_epsilon_and_delta():
+    base = dp.r_dp(5.0, 0.01)
+    assert dp.r_dp(10.0, 0.01) > base
+    assert dp.r_dp(5.0, 0.05) > base
+    assert base > 0
+
+
+def test_r_dp_paper_setting():
+    """The paper's (ε=5, δ=0.01) budget is finite and small."""
+    r = dp.r_dp(5.0, 0.01)
+    assert 0.1 < r < 5.0
+
+
+def test_round_cost_formula():
+    # (√2·c·γ/m)² = 2 c² γ² / m²
+    assert abs(dp.round_privacy_cost(2.0, 3.0, 4.0)
+               - 2 * (2 * 3 / 4) ** 2) < 1e-12
+
+
+def test_accountant_tracks_and_guards():
+    acc = dp.PrivacyAccountant(5.0, 0.01)
+    budget = acc.budget
+    cost = dp.round_privacy_cost(0.1, 1.0, 1.0)
+    n_affordable = int(budget / cost)
+    for _ in range(n_affordable):
+        acc.charge(0.1, 1.0, 1.0)
+    assert acc.spent <= budget + 1e-9
+    assert acc.would_violate(0.1, 1.0, 1.0) or acc.remaining < cost
+
+
+def test_accountant_checkpoint_roundtrip():
+    acc = dp.PrivacyAccountant(5.0, 0.01)
+    acc.charge(0.5, 2.0, 1.5)
+    acc.charge(0.3, 2.0, 1.5)
+    restored = dp.PrivacyAccountant.from_state_dict(acc.state_dict())
+    assert restored.spent == pytest.approx(acc.spent)
+    assert restored.budget == pytest.approx(acc.budget)
+
+
+def test_invalid_args_raise():
+    with pytest.raises(ValueError):
+        dp.r_dp(-1.0, 0.01)
+    with pytest.raises(ValueError):
+        dp.r_dp(5.0, 1.5)
+    with pytest.raises(ValueError):
+        dp.round_privacy_cost(1.0, 1.0, 0.0)

@@ -1,0 +1,186 @@
+"""Per-kernel sweeps: Pallas (interpret mode) vs pure-jnp oracles in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# seeded_axpy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128,), (300, 70), (8, 16, 33),
+                                   (1, 1), (5000,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_seeded_axpy_matches_ref(shape, dtype):
+    w = jax.random.normal(jax.random.key(0), shape, jnp.float32).astype(dtype)
+    o_ref = ref.seeded_axpy_ref(w, 42, 0.25)
+    o_pl = ops.seeded_axpy(w, 42, 0.25, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@pytest.mark.parametrize("shape", [(256,), (64, 50)])
+def test_seeded_axpy_z_stream_bitwise(shape):
+    """The z-stream itself is bitwise identical: kernel == XLA == ref."""
+    zeros = jnp.zeros(shape, jnp.float32)
+    z_ref = ref.seeded_axpy_ref(zeros, 7, 1.0)
+    z_pl = ops.seeded_axpy(zeros, 7, 1.0, impl="pallas_interpret")
+    z_xla = ops.seeded_axpy(zeros, 7, 1.0, impl="xla")
+    assert np.array_equal(np.asarray(z_ref), np.asarray(z_pl))
+    assert np.array_equal(np.asarray(z_ref), np.asarray(z_xla))
+
+
+def test_seeded_axpy_deterministic_and_seed_sensitive():
+    w = jnp.zeros((1000,), jnp.float32)
+    a = ops.seeded_axpy(w, 3, 1.0, impl="xla")
+    b = ops.seeded_axpy(w, 3, 1.0, impl="xla")
+    c = ops.seeded_axpy(w, 4, 1.0, impl="xla")
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_seeded_axpy_gaussian_moments():
+    z = np.asarray(ops.seeded_axpy(jnp.zeros(200_000), 11, 1.0, impl="xla"))
+    assert abs(z.mean()) < 0.01
+    assert abs(z.std() - 1.0) < 0.01
+    assert abs((z ** 3).mean()) < 0.05         # skewness
+    assert abs((z ** 4).mean() - 3.0) < 0.15   # kurtosis
+
+
+def test_mezo_chain_restores_weights():
+    """w → +μz → −2μz → +μz returns w (the MeZO memory trick)."""
+    w = jax.random.normal(jax.random.key(1), (400, 30))
+    mu = 1e-3
+    p1 = ops.seeded_axpy(w, 9, mu, impl="xla")
+    p2 = ops.seeded_axpy(p1, 9, -2 * mu, impl="xla")
+    p3 = ops.seeded_axpy(p2, 9, mu, impl="xla")
+    np.testing.assert_allclose(np.asarray(p3), np.asarray(w), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (b, hq, hkv, sq, skv, d, causal, window)
+    (2, 4, 4, 64, 64, 32, True, None),       # MHA causal
+    (2, 8, 2, 64, 64, 32, True, None),       # GQA
+    (1, 4, 1, 128, 128, 64, True, None),     # MQA
+    (2, 4, 4, 64, 64, 32, False, None),      # bidirectional (encoder)
+    (2, 4, 2, 64, 64, 32, True, 16),         # local window
+    (1, 4, 2, 1, 64, 32, True, None),        # decode: q = last position
+    (2, 4, 4, 48, 96, 32, True, None),       # chunked prefill (sq < skv)
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_vs_ref(case):
+    b, hq, hkv, sq, skv, d, causal, window = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, skv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, skv, d), jnp.float32)
+    o_ref = ref.attention_ref(q, k, v, causal=causal, window=window)
+    o_pl = ops.attention(q, k, v, causal=causal, window=window,
+                         impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_xla_chunked_attention_vs_ref(case):
+    b, hq, hkv, sq, skv, d, causal, window = case
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, skv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, skv, d), jnp.float32)
+    o_ref = ref.attention_ref(q, k, v, causal=causal, window=window)
+    o_x = ops.attention(q, k, v, causal=causal, window=window,
+                        impl="xla_chunked")
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (1, 4, 64, 32)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 64, 32)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 64, 32)).astype(jnp.bfloat16)
+    o_ref = ref.attention_ref(q, k, v, causal=True)
+    o_pl = ops.attention(q, k, v, causal=True, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear recurrence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 32, 16), (3, 64, 48), (2, 128, 256)])
+def test_linear_recurrence(shape):
+    b, s, d = shape
+    ks = jax.random.split(jax.random.key(3), 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], shape))
+    x = jax.random.normal(ks[1], shape)
+    h0 = jax.random.normal(ks[2], (b, d))
+    hs_ref, hl_ref = ref.linear_recurrence_ref(a, x, h0)
+    for impl in ("xla", "pallas_interpret"):
+        hs, hl = ops.linear_recurrence(a, x, h0, impl=impl)
+        np.testing.assert_allclose(np.asarray(hs), np.asarray(hs_ref),
+                                   atol=2e-5, rtol=2e-4, err_msg=impl)
+        np.testing.assert_allclose(np.asarray(hl), np.asarray(hl_ref),
+                                   atol=2e-5, rtol=2e-4, err_msg=impl)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", [(1, 32, 2, 8, 16, 16),
+                                  (2, 64, 4, 16, 32, 16),
+                                  (1, 128, 2, 64, 128, 32)])
+def test_ssd(dims):
+    B, S, H, P, N, chunk = dims
+    ks = jax.random.split(jax.random.key(4), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    c = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    s0 = jnp.zeros((B, H, P, N))
+    y_ref, st_ref = ref.ssd_ref(x, dt, a, b, c, s0)
+    for impl in ("xla", "pallas_interpret"):
+        y, st = ops.ssd(x, dt, a, b, c, s0, chunk=chunk, impl=impl)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-3, rtol=1e-3, err_msg=impl)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                                   atol=1e-3, rtol=1e-3, err_msg=impl)
+
+
+def test_ssd_decode_step_matches_scan():
+    """Sequential decode steps reproduce the chunked scan outputs."""
+    B, S, H, P, N = 1, 16, 2, 8, 16
+    ks = jax.random.split(jax.random.key(5), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    c = jax.random.normal(ks[4], (B, S, N)) * 0.3
+    y_ref, st_ref = ref.ssd_ref(x, dt, a, b, c)
+    state = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        y_t, state = ops.ssd_decode_step(state, x[:, t], dt[:, t], a,
+                                         b[:, t], c[:, t])
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(st_ref),
+                               atol=1e-4, rtol=1e-4)

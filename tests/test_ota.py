@@ -1,0 +1,79 @@
+"""OTA channel model: superposition, inversion, noise statistics, faults."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ota
+
+
+def test_analog_ota_unbiased():
+    p = jnp.asarray([1.0, -2.0, 3.0, 0.5, -0.5])
+    sigma = jnp.zeros(5)
+    vals = []
+    for i in range(2000):
+        p_hat, _ = ota.analog_ota(p, jnp.float32(2.0), sigma,
+                                  jnp.float32(1.0), jax.random.key(i))
+        vals.append(float(p_hat))
+    vals = np.asarray(vals)
+    assert abs(vals.mean() - float(jnp.mean(p))) < 0.02
+
+
+def test_analog_ota_noise_std_matches_theory():
+    """std(p̂) = m/(K·c) with m = sqrt(c²Σσ² + N0)  (Eq. 12)."""
+    k, c, n0 = 5, 2.0, 4.0
+    sigma = jnp.full((k,), 0.3)
+    p = jnp.zeros(k)
+    m = np.sqrt(c * c * k * 0.09 + n0)
+    expect = m / (k * c)
+    vals = [float(ota.analog_ota(p, jnp.float32(c), sigma, jnp.float32(n0),
+                                 jax.random.key(i))[0])
+            for i in range(4000)]
+    assert abs(np.std(vals) - expect) < 0.05 * expect
+
+
+def test_noiseless_channel_is_exact_mean():
+    p = jnp.asarray([1.0, 2.0, 3.0])
+    p_hat, k_eff = ota.analog_ota(p, jnp.float32(1.0), jnp.zeros(3),
+                                  jnp.float32(0.0), jax.random.key(0))
+    assert abs(float(p_hat) - 2.0) < 1e-6
+    assert float(k_eff) == 3.0
+
+
+def test_sign_ota_majority():
+    p = jnp.asarray([0.3, 0.7, -0.1, 0.9, 0.2])   # 4 positive vs 1 negative
+    p_hat, _ = ota.sign_ota(p, jnp.float32(1.0), jnp.zeros(5),
+                            jnp.float32(0.0), jax.random.key(0))
+    assert abs(float(p_hat) - 0.6) < 1e-6          # (4 - 1)/5
+
+
+def test_perfect_baselines():
+    p = jnp.asarray([1.0, -3.0, 2.0])
+    assert abs(float(ota.perfect_analog(p)) - 0.0) < 1e-6
+    assert float(ota.perfect_sign(p)) == 1.0      # 2 positive vs 1 negative
+
+
+def test_survival_mask_drops_clients():
+    p = jnp.asarray([10.0, 20.0, 30.0, 40.0])
+    mask = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+    p_hat, k_eff = ota.analog_ota(p, jnp.float32(1.0), jnp.zeros(4),
+                                  jnp.float32(0.0), jax.random.key(0), mask)
+    assert float(k_eff) == 2.0
+    assert abs(float(p_hat) - 20.0) < 1e-5         # mean of {10, 30}
+
+
+def test_effective_noise_std():
+    m = ota.effective_noise_std(jnp.float32(2.0), jnp.asarray([0.5, 0.5]),
+                                jnp.float32(1.0))
+    assert abs(float(m) - np.sqrt(4.0 * 0.5 + 1.0)) < 1e-6
+
+
+def test_channel_draws_reproducible():
+    h1 = ota.draw_channels(0, 10, 4)
+    h2 = ota.draw_channels(0, 10, 4)
+    h3 = ota.draw_channels(1, 10, 4)
+    assert np.array_equal(h1, h2)
+    assert not np.array_equal(h1, h3)
+    assert (h1 > 0).all()
+    # Rayleigh with unit average power: E[h²] = 1
+    big = ota.draw_channels(0, 2000, 8)
+    assert abs((big ** 2).mean() - 1.0) < 0.05

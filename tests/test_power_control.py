@@ -1,0 +1,116 @@
+"""Power control (Theorems 3 & 4): constraint satisfaction + optimality."""
+import numpy as np
+import pytest
+
+from repro.core import ota, power_control as pc
+from repro.core.dp import r_dp
+
+EPS, DELTA = 5.0, 0.01
+T, K = 200, 5
+
+
+@pytest.fixture
+def channels():
+    return ota.draw_channels(0, T, K)
+
+
+def _check_constraints(sched, h, *, power, n0, gamma, budget, d=1):
+    # DP constraint (C1)/(C3)
+    spent = sched.privacy_cost(np.full(T, gamma))
+    assert spent <= budget * (1 + 1e-9), (spent, budget)
+    # power constraint (C2)/(C4)
+    tx = pc.transmit_power(sched, h, gamma, d)
+    assert (tx <= power * (1 + 1e-9)).all(), tx.max()
+    return spent
+
+
+def test_analog_solution_constraints(channels):
+    budget = r_dp(EPS, DELTA)
+    sched = pc.solve_analog(channels, power=100.0, n0=1.0, gamma=100.0,
+                            contraction_a=0.998, epsilon=EPS, delta=DELTA)
+    spent = _check_constraints(sched, channels, power=100.0, n0=1.0,
+                               gamma=100.0, budget=budget)
+    # budget-limited regime → constraint active (equality)
+    assert spent > 0.999 * budget
+    assert (sched.sigma == 0).all()             # Theorem 3: σ* = 0
+
+
+def test_analog_full_power_branch():
+    """With a huge budget the power constraint binds instead."""
+    h = ota.draw_channels(1, 10, K)
+    sched = pc.solve_analog(h, power=1e-4, n0=1e6, gamma=100.0,
+                            contraction_a=0.998, epsilon=50.0, delta=0.1)
+    assert sched.zeta == 0.0                    # condition (28) branch
+    cap = np.min(np.sqrt(1e-4) * h / 100.0, axis=1)
+    np.testing.assert_allclose(sched.c, cap, rtol=1e-12)
+
+
+def test_analog_adaptive_term_increases(channels):
+    """A^{-t/4} ⇒ later rounds get larger gain (cleaner aggregation)."""
+    sched = pc.solve_analog(channels, power=1e9, n0=1.0, gamma=100.0,
+                            contraction_a=0.998, epsilon=EPS, delta=DELTA)
+    # with a huge power cap the adaptive term is exposed directly
+    assert sched.c[-1] > sched.c[0]
+    ratio = sched.c[-1] / sched.c[0]
+    assert abs(ratio - 0.998 ** (-(T - 1) / 4.0)) < 1e-3 * ratio
+
+
+def test_sign_solution_constraints(channels):
+    budget = r_dp(EPS, DELTA)
+    sched = pc.solve_sign(channels, power=100.0, n0=1.0, n_clients=K,
+                          e0=0.496, contraction_a_tilde=0.998,
+                          epsilon=EPS, delta=DELTA)
+    spent = _check_constraints(sched, channels, power=100.0, n0=1.0,
+                               gamma=1.0, budget=budget)
+    assert spent > 0.99 * budget
+    assert (sched.sigma == 0).all()             # Theorem 4: σ* = 0
+
+
+def test_sign_full_power_branch():
+    h = ota.draw_channels(2, 10, K)
+    sched = pc.solve_sign(h, power=1e-6, n0=1e4, n_clients=K, e0=0.496,
+                          contraction_a_tilde=0.998, epsilon=50.0, delta=0.1)
+    assert sched.zeta == 0.0
+    cap = np.min(np.sqrt(1e-6) * h, axis=1)
+    np.testing.assert_allclose(sched.c, cap, rtol=1e-12)
+
+
+def test_static_spends_budget_evenly(channels):
+    budget = r_dp(EPS, DELTA)
+    sched = pc.static_analog(channels, power=1e9, n0=1.0, gamma=100.0,
+                             epsilon=EPS, delta=DELTA)
+    costs = [2 * (sched.c[t] * 100.0 / sched.effective_noise_std(t)) ** 2
+             for t in range(T)]
+    np.testing.assert_allclose(costs, budget / T, rtol=1e-9)
+
+
+def test_solution_beats_static_and_reversed_on_bound(channels):
+    """The optimization objective Σ A^{-t}(Σσ² + N0/c²) — Theorem 3's
+    solution must dominate both ablation baselines."""
+    a = 0.998
+    kw = dict(power=100.0, n0=1.0, gamma=100.0, epsilon=EPS, delta=DELTA)
+    sol = pc.solve_analog(channels, contraction_a=a, **kw)
+    sta = pc.static_analog(channels, **kw)
+    rev = pc.reversed_analog(channels, contraction_a=a, **kw)
+
+    def bound(s):
+        t_idx = np.arange(1, T + 1)
+        with np.errstate(divide="ignore"):
+            return np.sum(a ** (-t_idx) * (np.sum(s.sigma ** 2, axis=1)
+                                           + 1.0 / s.c ** 2))
+
+    assert bound(sol) <= bound(sta) * (1 + 1e-9)
+    assert bound(sol) <= bound(rev) * (1 + 1e-9)
+
+
+def test_make_schedule_dispatch(channels):
+    for variant in ("analog", "sign"):
+        for scheme in ("solution", "static", "reversed", "perfect"):
+            s = pc.make_schedule(variant, scheme, channels, power=100.0,
+                                 n0=1.0, gamma=100.0, n_clients=K, e0=0.496,
+                                 contraction_a=0.998,
+                                 contraction_a_tilde=0.998,
+                                 epsilon=EPS, delta=DELTA)
+            assert s.c.shape == (T,)
+            assert s.sigma.shape == (T, K)
+            assert np.isfinite(s.c).all()

@@ -1,0 +1,143 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp, ota, power_control as pc, zo
+from repro.kernels import ref
+from repro.kernels.seeded_axpy import fmix32
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# DP accountant invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.floats(0.05, 50.0), st.floats(1e-4, 0.5))
+def test_r_dp_positive_and_monotone(eps, delta):
+    r = dp.r_dp(eps, delta)
+    assert r > 0
+    assert dp.r_dp(eps * 1.5, delta) >= r - 1e-12
+    assert dp.r_dp(eps, min(delta * 1.5, 0.9)) >= r - 1e-12
+
+
+@settings(**SETTINGS)
+@given(st.floats(1e-3, 1e3))
+def test_c_inverse_is_inverse(y):
+    x = dp.c_inverse(y)
+    assert x >= 0
+    assert abs(dp.c_func(x) - y) <= 1e-6 * max(1.0, y)
+
+
+# ---------------------------------------------------------------------------
+# Power control feasibility over random channel draws
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(10, 120),
+       st.floats(1.0, 1e4), st.floats(0.5, 12.0))
+def test_analog_solution_always_feasible(seed, k, rounds, power, eps):
+    h = ota.draw_channels(seed, rounds, k)
+    budget = dp.r_dp(eps, 0.01)
+    sched = pc.solve_analog(h, power=power, n0=1.0, gamma=100.0,
+                            contraction_a=0.998, epsilon=eps, delta=0.01)
+    assert sched.privacy_cost(np.full(rounds, 100.0)) \
+        <= budget * (1 + 1e-9)
+    tx = pc.transmit_power(sched, h, 100.0, 1)
+    assert (tx <= power * (1 + 1e-9)).all()
+    assert np.isfinite(sched.c).all() and (sched.c >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 8), st.integers(10, 120),
+       st.floats(1.0, 1e4), st.floats(0.5, 12.0))
+def test_sign_solution_always_feasible(seed, k, rounds, power, eps):
+    h = ota.draw_channels(seed, rounds, k)
+    budget = dp.r_dp(eps, 0.01)
+    sched = pc.solve_sign(h, power=power, n0=1.0, n_clients=k, e0=0.496,
+                          contraction_a_tilde=0.998, epsilon=eps,
+                          delta=0.01)
+    assert sched.privacy_cost(np.ones(rounds)) <= budget * (1 + 1e-9)
+    tx = pc.transmit_power(sched, h, 1.0, 1)
+    assert (tx <= power * (1 + 1e-9)).all()
+
+
+# ---------------------------------------------------------------------------
+# OTA aggregation invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-50, 50), min_size=2, max_size=8),
+       st.integers(0, 1000))
+def test_noiseless_ota_is_exact_mean(vals, key_seed):
+    p = jnp.asarray(vals, jnp.float32)
+    p_hat, _ = ota.analog_ota(p, jnp.float32(1.7), jnp.zeros(len(vals)),
+                              jnp.float32(0.0), jax.random.key(key_seed))
+    assert abs(float(p_hat) - float(np.mean(vals))) < 1e-3 \
+        * max(1.0, abs(np.mean(vals)))
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.floats(-5, 5), min_size=2, max_size=8))
+def test_sign_payload_bounded(vals):
+    """|p̂| ≤ 1 for a noiseless sign round — 1-bit payloads stay 1-bit."""
+    p = jnp.asarray(vals, jnp.float32)
+    p_hat, _ = ota.sign_ota(p, jnp.float32(1.0), jnp.zeros(len(vals)),
+                            jnp.float32(0.0), jax.random.key(0))
+    assert abs(float(p_hat)) <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# ZO / seeded stream invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_fmix32_bijective_samples(x):
+    """fmix32 is a bijection: distinct inputs → distinct outputs (spot)."""
+    a = int(fmix32(jnp.uint32(x)))
+    b = int(fmix32(jnp.uint32((x + 1) & 0xFFFFFFFF)))
+    assert a != b
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.floats(1e-5, 1e-2))
+def test_perturb_restore_roundtrip(seed, mu):
+    params = {"w": jnp.ones((64, 8)), "b": jnp.zeros((16,))}
+    p1 = zo.perturb(params, seed, mu)
+    p2 = zo.perturb(p1, seed, -2 * mu)
+    p3 = zo.perturb(p2, seed, mu)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p3[k]), np.asarray(params[k]),
+                                   atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 64))
+def test_z_stream_shape_invariant(a, b, c):
+    """Same seed, same flat index ⇒ same value regardless of array shape."""
+    n = a * b * c
+    flat = np.asarray(ref.draw_z_ref((n,), 5))
+    shaped = np.asarray(ref.draw_z_ref((a, b, c), 5)).reshape(-1)
+    np.testing.assert_array_equal(flat, shaped)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 100))
+def test_cross_entropy_nonnegative(seed):
+    from repro.models import layers as L
+    k = jax.random.key(seed)
+    logits = jax.random.normal(k, (2, 6, 17))
+    targets = jax.random.randint(jax.random.fold_in(k, 1), (2, 6), 0, 17)
+    mask = jnp.ones((2, 6))
+    nll = L.cross_entropy(logits, targets, mask)
+    assert (np.asarray(nll) >= -1e-5).all()

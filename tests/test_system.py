@@ -1,0 +1,163 @@
+"""End-to-end behaviour tests for the pAirZero system."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
+                                PairZeroConfig, PowerControlConfig, ZOConfig)
+from repro.core import fedsim
+from repro.data.pipeline import FederatedPipeline
+from repro.data.tasks import TaskSpec
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                   head_dim=16)
+
+
+def _pipe(seed=0, seq=24):
+    return FederatedPipeline(task="sst2", spec=TaskSpec("sst2", 64, seq),
+                             n_clients=5, per_client_batch=8, seed=seed)
+
+
+def _pz(variant="analog", scheme="perfect", lr=5e-3, n_perturb=4,
+        eps=5.0, rounds=600):
+    return PairZeroConfig(
+        variant=variant, n_clients=5, rounds=rounds,
+        zo=ZOConfig(mu=1e-3, lr=lr, clip_gamma=5.0, n_perturb=n_perturb),
+        channel=ChannelConfig(n0=1.0, power=100.0),
+        dp=DPConfig(epsilon=eps, delta=0.01),
+        power=PowerControlConfig(scheme=scheme))
+
+
+def test_zo_federated_finetuning_learns():
+    """Paper-faithful ZO (Perfect aggregation) reaches non-trivial accuracy
+    on the synthetic SST-2 analogue — the core reproduction claim."""
+    res = fedsim.run(TINY, _pz(), _pipe(), rounds=600, eval_every=300,
+                     eval_n=256)
+    assert res.accuracies[-1] > 0.6
+    assert np.mean(res.losses[-20:]) < 0.5 * np.mean(res.losses[:5])
+
+
+def test_sign_variant_learns():
+    res = fedsim.run(TINY, _pz(variant="sign", lr=2e-2), _pipe(),
+                     rounds=600, eval_every=600, eval_n=256)
+    assert np.mean(res.losses[-20:]) < 0.7 * np.mean(res.losses[:5])
+
+
+def test_fo_baseline_learns_fast():
+    res = fedsim.run(TINY, _pz(variant="fo", lr=3e-3), _pipe(), rounds=120,
+                     eval_every=120, eval_n=256)
+    assert res.accuracies[-1] > 0.8
+
+
+def test_dp_solution_respects_budget_exactly():
+    """Solution power control spends ≤ budget and (budget-limited regime)
+    nearly all of it — privacy is enforced, not wasted."""
+    res = fedsim.run(TINY, _pz(scheme="solution", lr=1e-3, eps=5.0,
+                               n_perturb=1, rounds=150),
+                     _pipe(), rounds=150)
+    assert res.privacy_spent <= res.privacy_budget * (1 + 1e-6)
+    assert res.privacy_spent > 0.95 * res.privacy_budget
+
+
+def test_dp_training_stays_finite_under_noise():
+    res = fedsim.run(TINY, _pz(scheme="solution", lr=1e-4, eps=5.0,
+                               n_perturb=1), _pipe(), rounds=200)
+    assert np.isfinite(res.losses).all()
+
+
+def test_checkpoint_resume_is_bit_identical(tmp_path):
+    """Crash/restart mid-run reproduces the uninterrupted trajectory —
+    data stream, seed stream, power schedule and DP budget all replay."""
+    pz = _pz(scheme="solution", lr=1e-3, n_perturb=1, rounds=60)
+    # uninterrupted run
+    res_a = fedsim.run(TINY, pz, _pipe(), rounds=60)
+    # interrupted run: 30 rounds + checkpoint, then resume to 60
+    ck = str(tmp_path / "ck")
+    fedsim.run(TINY, pz, _pipe(), rounds=30, checkpoint_dir=ck,
+               checkpoint_every=30)
+    res_b = fedsim.run(TINY, pz, _pipe(), rounds=60, checkpoint_dir=ck,
+                       checkpoint_every=1000)
+    assert res_b.resumed_from == 30
+    np.testing.assert_allclose(res_a.losses[30:], res_b.losses,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_communication_payload_is_scalar():
+    """The per-round uplink payload is ONE scalar per client (16 bits in
+    fp16; 1 bit for Sign) — the paper's Table II claim, on the wire format."""
+    pz = _pz(n_perturb=1)
+    captured = {}
+
+    def on_round(t, metrics):
+        captured["p_clients"] = metrics["p_clients"]
+
+    fedsim.run(TINY, pz, _pipe(), rounds=2, on_round=on_round)
+    assert captured["p_clients"].shape == (5,)   # one scalar per client
+
+
+def test_solution_tracks_perfect_better_than_static():
+    """Fig. 3 reproduction in miniature: Solution ≥ Static on final loss."""
+    pipe = _pipe()
+    common = dict(lr=1e-3, eps=20.0, n_perturb=2)
+    res_sol = fedsim.run(TINY, _pz(scheme="solution", **common), pipe,
+                         rounds=300)
+    res_sta = fedsim.run(TINY, _pz(scheme="static", **common), pipe,
+                         rounds=300)
+    sol = np.mean(res_sol.losses[-30:])
+    sta = np.mean(res_sta.losses[-30:])
+    assert sol <= sta * 1.05, (sol, sta)
+
+
+def test_alternate_task_converges():
+    """A second task family (markov LM) trains under the same ZO machinery."""
+    pipe = FederatedPipeline(task="lm", spec=TaskSpec("lm", 64, 24),
+                             n_clients=5, per_client_batch=8, seed=1)
+    res = fedsim.run(TINY, _pz(lr=5e-3, rounds=400), pipe, rounds=400)
+    # markov-LM entropy floor is high (15% noise); require a clear drop
+    assert np.mean(res.losses[-20:]) < 0.95 * np.mean(res.losses[:5])
+
+
+def test_harder_task_stays_stable():
+    """The extraction task (SQuAD analogue) is beyond a 2-layer model at
+    T=400, but the ZO trajectory must stay bounded (no divergence)."""
+    pipe = FederatedPipeline(task="squad",
+                             spec=TaskSpec("squad", 64, 24),
+                             n_clients=5, per_client_batch=8, seed=1)
+    res = fedsim.run(TINY, _pz(lr=1e-3), pipe, rounds=200)
+    assert np.isfinite(res.losses).all()
+    assert np.mean(res.losses[-20:]) < 1.2 * np.mean(res.losses[:5])
+
+
+def test_privacy_guard_halts_overspend():
+    """Running past the planned DP horizon must halt transmission, not
+    silently overspend the (ε, δ) budget."""
+    pz = _pz(scheme="solution", lr=1e-3, n_perturb=1, rounds=50)
+    res = fedsim.run(TINY, pz, _pipe(), rounds=120)  # 70 beyond the horizon?
+    # horizon = max(50, 120) = 120 → schedule re-solved over 120: no trip.
+    assert res.privacy_exhausted_at == -1
+    assert res.privacy_spent <= res.privacy_budget * (1 + 1e-6)
+
+    # force a true overspend: static schedule solved for T=50 but run 120
+    import numpy as np_
+    from repro.core import ota, power_control as pc
+    h = ota.draw_channels(0, 50, 5)
+    sched = pc.static_analog(h, power=100.0, n0=1.0, gamma=5.0,
+                             epsilon=5.0, delta=0.01)
+    # extend the same per-round gain past its designed horizon
+    long_sched = pc.PowerSchedule(
+        c=np_.tile(sched.c, 3)[:120],
+        sigma=np_.zeros((120, 5)), scheme="static", n0=1.0)
+    from repro.core.dp import PrivacyAccountant
+    acc = PrivacyAccountant(5.0, 0.01)
+    tripped = None
+    for t in range(120):
+        if acc.would_violate(float(long_sched.c[t]), 5.0,
+                             long_sched.effective_noise_std(t)):
+            tripped = t
+            break
+        acc.charge(float(long_sched.c[t]), 5.0,
+                   long_sched.effective_noise_std(t))
+    assert tripped is not None and 45 <= tripped <= 55
+    assert acc.spent <= acc.budget * (1 + 1e-9)
