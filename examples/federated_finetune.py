@@ -45,6 +45,10 @@ def main() -> None:
                     help="DP ε (default: 50 for the fast presets — the "
                          "paper's ε=5 needs its T=8000 horizon to exit the "
                          "noise floor; opt125m preset defaults to ε=5)")
+    ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
+                    help="round executor; 'scan' batches --chunk-rounds "
+                         "rounds per device dispatch (fastest for long runs)")
+    ap.add_argument("--chunk-rounds", type=int, default=16)
     ap.add_argument("--ckpt", default="/tmp/pairzero_ckpt")
     args = ap.parse_args()
     p = PRESETS[args.preset]
@@ -89,6 +93,7 @@ def main() -> None:
           f"Theorem-3 power control, ε={eps:g}, {rounds} rounds ==")
     res = fedsim.run(
         model, pz, data, rounds=rounds,
+        engine=args.engine, chunk_rounds=args.chunk_rounds,
         eval_every=max(rounds // 4, 1), eval_n=256,
         checkpoint_dir=args.ckpt, checkpoint_every=max(rounds // 3, 1),
         fault=fault, elastic=elastic,

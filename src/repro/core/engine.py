@@ -1,0 +1,245 @@
+"""Device-resident scan-over-rounds engine (the multi-round hot path).
+
+`fedsim.run`'s legacy loop dispatches one jitted step per round from Python:
+every round pays a host→device control-block rebuild, a kernel-launch round
+trip, and a blocking metric sync. But a pAirZero trajectory is a *pure
+function* of (params, seeds, schedule): the per-round control — c(t), σ(t),
+the broadcast seed, the channel-noise key, the survival mask — is all known
+the moment the base station solves the power schedule. So we precompute the
+whole control trace as stacked device arrays and compile `lax.scan` over the
+existing ZO step: one dispatch per `chunk_rounds` rounds, parameters donated
+through the whole chunk, metrics returned stacked.
+
+The host stays in charge of everything a real server does *between* chunks:
+DP accounting (charged per round from the precomputed schedule, with the
+hard privacy stop enforced by truncating the chunk at the first round that
+would overspend), eval, checkpointing, and fault-trace generation (the
+FaultModel RNG is stateful, so masks are drawn host-side in round order —
+bit-identical to the per-round loop).
+
+Invariant: for the ZO variants (analog/sign), `engine="scan"` and
+`engine="loop"` produce bit-identical loss trajectories at fixed seed
+(tests/test_engine.py enforces this). The scan body is the *same* step
+function the loop jits; only the dispatch granularity changes. The FO
+baseline agrees to fp tolerance only (XLA fuses value_and_grad differently
+under scan).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import zo
+from repro.core.dp import PrivacyAccountant, round_privacy_cost
+from repro.runtime.fault import combined_mask
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Control-trace precomputation (host → device, once per chunk)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ControlTrace:
+    """Stacked per-round control for rounds [t0, t0+R) plus the host-side
+    accounting view of the same schedule slice.
+
+    `ctl` mirrors `pairzero.make_control` exactly, with a leading round axis:
+      seed [R] u32, c [R] f32, sigma [R,K] f32, n0 [R] f32, mask [R,K] f32,
+      noise_bits [R,2] u32.
+    """
+    t0: int
+    ctl: Dict[str, jnp.ndarray]
+    acct_c: np.ndarray        # [R] schedule gain (host, for the accountant)
+    acct_gamma: np.ndarray    # [R] clip bound entering the DP cost
+    acct_m: np.ndarray        # [R] effective noise std m(t)
+    charged: bool             # whether these rounds cost privacy at all
+
+    def __len__(self) -> int:
+        return int(self.ctl["seed"].shape[0])
+
+    def rows(self, n: int) -> Dict[str, jnp.ndarray]:
+        """First n rounds of the stacked control block (for a truncated
+        chunk after a privacy stop)."""
+        if n == len(self):
+            return self.ctl
+        return {k: v[:n] for k, v in self.ctl.items()}
+
+
+@jax.jit
+def _noise_bits_trace(key_base: jax.Array, ts: jnp.ndarray) -> jnp.ndarray:
+    """[R, 2] key_data(fold_in(key_base, t)) for each round t."""
+    return jax.vmap(
+        lambda t: jax.random.key_data(jax.random.fold_in(key_base, t)))(ts)
+
+
+def build_trace(schedule, pz, t0: int, t1: int, *,
+                fault=None, elastic=None) -> ControlTrace:
+    """Precompute the control trace for rounds [t0, t1).
+
+    Mask generation consumes the (stateful) FaultModel RNG in round order, so
+    calling build_trace over consecutive chunks replays the identical fault
+    trace the per-round loop would draw.
+    """
+    k = pz.n_clients
+    rounds = int(t1 - t0)
+    ts = np.arange(t0, t1, dtype=np.int64)
+
+    # vectorized zo.round_seed: fmix32 is elementwise over the round index
+    seeds = zo.round_seed(pz.seed, jnp.asarray(ts, jnp.uint32))
+
+    key_base = jax.random.key(pz.seed ^ 0x5EED)
+    noise_bits = _noise_bits_trace(key_base, jnp.asarray(ts, jnp.int32))
+
+    if fault is None and elastic is None:
+        masks = np.ones((rounds, k), dtype=np.float32)
+    else:
+        masks = np.stack([combined_mask(int(t), fault, elastic, n_clients=k)
+                          for t in ts])
+
+    c_slice = np.asarray(schedule.c[t0:t1], dtype=np.float64)
+    sigma_slice = np.asarray(schedule.sigma[t0:t1], dtype=np.float64)
+    ctl = {
+        "seed": seeds.astype(jnp.uint32),
+        "c": jnp.asarray(c_slice, jnp.float32),
+        "sigma": jnp.asarray(sigma_slice, jnp.float32),
+        "n0": jnp.full((rounds,), schedule.n0, jnp.float32),
+        "mask": jnp.asarray(masks, jnp.float32),
+        "noise_bits": noise_bits.astype(jnp.uint32),
+    }
+
+    charged = bool(pz.dp.enabled and schedule.scheme != "perfect"
+                   and pz.variant != "fo")
+    gamma_t = pz.zo.clip_gamma if pz.variant == "analog" else 1.0
+    # vectorized effective_noise_std: m(t) = sqrt(c² Σ_k σ_k² + N0) (Eq. 12)
+    acct_m = np.sqrt(c_slice * c_slice * np.sum(sigma_slice ** 2, axis=1)
+                     + schedule.n0)
+    return ControlTrace(t0=t0, ctl=ctl,
+                        acct_c=c_slice,
+                        acct_gamma=np.full(rounds, gamma_t),
+                        acct_m=acct_m, charged=charged)
+
+
+def affordable_rounds(accountant: PrivacyAccountant, trace: ControlTrace,
+                      slack: float = 1e-6) -> int:
+    """How many leading rounds of `trace` the DP budget affords.
+
+    Pure lookahead — charges nothing. Mirrors the per-round loop's
+    `would_violate` guard exactly (same slack), so a mid-chunk trip lands on
+    the identical round.
+    """
+    if not trace.charged:
+        return len(trace)
+    spent = accountant.spent
+    for r in range(len(trace)):
+        cost = round_privacy_cost(float(trace.acct_c[r]),
+                                  float(trace.acct_gamma[r]),
+                                  float(trace.acct_m[r]))
+        if spent + cost > accountant.budget * (1.0 + slack):
+            return r
+        spent += cost
+    return len(trace)
+
+
+def charge_rounds(accountant: PrivacyAccountant, trace: ControlTrace,
+                  n: int) -> None:
+    """Charge the accountant for the first n rounds of the trace (what the
+    loop does before each step, batched between chunks)."""
+    if not trace.charged:
+        return
+    for r in range(n):
+        accountant.charge(float(trace.acct_c[r]),
+                          float(trace.acct_gamma[r]),
+                          float(trace.acct_m[r]))
+
+
+# ---------------------------------------------------------------------------
+# Batch stacking (host → device, one transfer per chunk)
+# ---------------------------------------------------------------------------
+
+def stack_batches(pipeline, t0: int, t1: int) -> Dict[str, jnp.ndarray]:
+    """Stacked round batches [R, ...] for rounds [t0, t1) (labels dropped,
+    exactly as the loop path feeds the step)."""
+    per_round = [pipeline.batch(int(t)) for t in range(t0, t1)]
+    return {k: jnp.asarray(np.stack([b[k] for b in per_round]))
+            for k in per_round[0] if k != "labels"}
+
+
+# ---------------------------------------------------------------------------
+# The scan executor
+# ---------------------------------------------------------------------------
+
+class ScanExecutor:
+    """Compiles lax.scan over a per-round step; one program per chunk length.
+
+    `step(carry, batch, ctl) -> (carry, metrics)` is the *same* function the
+    per-round loop jits (ZO: carry = params; FO: carry = (params, opt_state)
+    via an adapter in fedsim). The carry buffer is donated, so parameters
+    live on device across the whole chunk — the MeZO in-place chain extended
+    over rounds.
+
+    unroll=None (default) fully unrolls each chunk: XLA then compiles the
+    round body exactly as it compiles the standalone per-round jit, which is
+    what makes engine="scan" *bitwise* identical to engine="loop" (a rolled
+    while-loop body fuses with slightly different fp rounding on CPU).
+    Compile time grows with chunk length; pass an int (e.g. unroll=1) for an
+    O(1)-size rolled program that is numerically equivalent only up to fp
+    rounding — the right trade once chunks are long and models are large.
+    """
+
+    def __init__(self, step: Callable, unroll: Optional[int] = None):
+        @functools.partial(jax.jit, donate_argnums=(0,),
+                           static_argnums=(3,))
+        def chunk(carry, ctl_stack, batch_stack, _unroll):
+            def body(c, xs):
+                ctl, batch = xs
+                return step(c, batch, ctl)
+            return jax.lax.scan(body, carry, (ctl_stack, batch_stack),
+                                unroll=_unroll)
+
+        self._chunk = chunk
+        self._unroll = unroll
+
+    def run(self, carry: PyTree, ctl_stack: Dict[str, jnp.ndarray],
+            batch_stack: Dict[str, jnp.ndarray]
+            ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
+        """Execute one chunk; returns (carry, metrics stacked over rounds)."""
+        rounds = int(ctl_stack["seed"].shape[0])
+        unroll = rounds if self._unroll is None else min(self._unroll, rounds)
+        return self._chunk(carry, ctl_stack, batch_stack, unroll)
+
+
+@functools.lru_cache(maxsize=64)
+def get_executor(step: Callable, unroll: Optional[int] = None
+                 ) -> "ScanExecutor":
+    """Executor cache keyed on the step function object. Paired with the
+    memoized `pairzero.make_zo_step`, identical configs share one compiled
+    chunk program across fedsim.run invocations."""
+    return ScanExecutor(step, unroll=unroll)
+
+
+def chunk_boundaries(start: int, stop: int, chunk_rounds: int,
+                     align: Tuple[int, ...] = ()) -> list:
+    """Split [start, stop) into chunks of ≤ chunk_rounds, additionally
+    cutting at every multiple of each period in `align` (eval/checkpoint
+    cadences), so host-side side effects fire at exactly the rounds the
+    per-round loop fires them."""
+    periods = [p for p in align if p and p > 0]
+    bounds = []
+    t = start
+    while t < stop:
+        nxt = min(t + max(1, chunk_rounds), stop)
+        for p in periods:
+            # next multiple of p strictly after t
+            m = ((t // p) + 1) * p
+            if t < m < nxt:
+                nxt = m
+        bounds.append((t, nxt))
+        t = nxt
+    return bounds

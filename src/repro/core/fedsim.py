@@ -1,18 +1,26 @@
 """Federated simulation driver: the paper's Algorithm 1 end to end.
 
-Host-side loop (what the edge server + base station do):
+Host-side orchestration (what the edge server + base station do):
   1. draw the block-fading channel trace h_k(t) for the horizon,
   2. solve power control (Theorem 3/4 — or Static/Reversed/Perfect ablation),
-  3. per round: broadcast the seed, run the jitted ZO step (clients' dual
-     forwards + OTA aggregation + update), charge the DP accountant,
-  4. handle faults (survival masks), checkpoint/resume, periodic eval.
+  3. run the rounds through one of two engines:
+       engine="scan": the device-resident scan-over-rounds engine
+         (core/engine.py) — the whole control trace is precomputed, and
+         `chunk_rounds` rounds execute per dispatch under one lax.scan with
+         parameter-buffer donation; the host touches down only at chunk
+         boundaries (DP accounting, eval, checkpoint, fault-trace draw);
+       engine="loop" (default): the per-round dispatch path — no chunk
+         compile cost, and the bit-identical equivalence oracle for scan,
+  4. charge the DP accountant (hard stop on overspend — privacy over
+     utility), handle faults (survival masks), checkpoint/resume, eval.
 
 The driver is deliberately boring: every interesting decision lives in
-core/{zo,ota,dp,power_control,pairzero}. It is the substrate for the three
-examples, the Fig. 2/3 benchmarks, and the integration tests.
+core/{zo,ota,dp,power_control,pairzero,engine}. It is the substrate for the
+three examples, the Fig. 2/3 benchmarks, and the integration tests.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -23,12 +31,23 @@ import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ModelConfig, PairZeroConfig
+from repro.core import engine as eng
 from repro.core import ota, pairzero, power_control as pc
 from repro.core.dp import PrivacyAccountant
 from repro.data.pipeline import FederatedPipeline
 from repro.models import registry
 from repro.optim import fo as fo_opt
 from repro.runtime.fault import FaultModel, ElasticSchedule, combined_mask
+
+
+@functools.lru_cache(maxsize=32)
+def _fo_scan_step(raw_step: Callable) -> Callable:
+    """Adapter: FO step's (params, opt_state) pair as a single scan carry.
+    Memoized on the (memoized) raw step so the executor cache hits too."""
+    def scan_step(carry, batch, ctl):
+        p, o, metrics = raw_step(carry[0], carry[1], batch, ctl)
+        return (p, o), metrics
+    return scan_step
 
 
 @dataclass
@@ -46,6 +65,7 @@ class RunResult:
 
 def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         pipeline: FederatedPipeline, rounds: int, *,
+        engine: str = "loop", chunk_rounds: int = 32,
         eval_every: int = 0, eval_n: int = 64,
         checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
         fault: Optional[FaultModel] = None,
@@ -53,7 +73,20 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         impl: Optional[str] = None, dtype=jnp.float32,
         params: Optional[Any] = None,
         on_round: Optional[Callable[[int, Dict], None]] = None) -> RunResult:
-    """Run T rounds of pAirZero (or the FO baseline) on one host."""
+    """Run T rounds of pAirZero (or the FO baseline) on one host.
+
+    engine: "scan" (device-resident chunked lax.scan over rounds) or "loop"
+      (legacy per-round dispatch). For the ZO variants (analog/sign) the
+      two produce bit-identical trajectories at fixed seed; the FO baseline
+      agrees only to fp tolerance (~1e-7 — XLA fuses value_and_grad
+      differently under scan). Scan amortizes dispatch overhead over
+      `chunk_rounds` rounds per dispatch and is the high-throughput choice
+      once the chunk program is compiled (long horizons, repeated runs,
+      accelerators). "loop" remains the default so short/ad-hoc CPU runs
+      don't pay the chunk compile.
+    """
+    if engine not in ("scan", "loop"):
+        raise ValueError(f"unknown engine: {engine!r} (want 'scan'|'loop')")
     t0 = time.time()
     k_clients = pz.n_clients
     result = RunResult()
@@ -127,57 +160,128 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
             return L.unembed(head, x)
         eval_fn = jax.jit(eval_fn)
 
-    # --- round loop ---
-    for t in range(start_round, rounds):
-        batch_np = pipeline.batch(t)
-        batch = {k: jnp.asarray(v) for k, v in batch_np.items()
-                 if k != "labels"}
-        mask = combined_mask(t, fault, elastic, n_clients=k_clients)
-        ctl = pairzero.make_control(t, schedule, pz.seed, k_clients,
-                                    mask=mask)
+    def run_eval(t_done: int) -> None:
+        ebatch = pipeline.eval_batch(eval_n)
+        logits = np.asarray(eval_fn(params, ebatch))
+        from repro.data import tasks as T
+        acc = T.accuracy(logits, ebatch)
+        result.accuracies.append(acc)
 
+    # --- round execution: scan engine (default) or legacy loop ---
+    if engine == "scan":
         if pz.variant == "fo":
-            params, opt_state, metrics = step(params, opt_state, batch, ctl)
+            carry = (params, opt_state)
+            executor = eng.get_executor(_fo_scan_step(raw_step))
         else:
-            if pz.dp.enabled and schedule.scheme != "perfect":
-                # hard enforcement: a correct schedule sums exactly to the
-                # budget over the horizon; this guard trips only on
-                # misconfiguration (e.g. resuming with a different scheme)
-                # and stops all further transmission — privacy over utility.
-                gamma_t = pz.zo.clip_gamma if pz.variant == "analog" else 1.0
-                if accountant.would_violate(
-                        float(schedule.c[t]), gamma_t,
-                        schedule.effective_noise_std(t), slack=1e-6):
-                    result.privacy_exhausted_at = t
-                    break
-                accountant.charge(float(schedule.c[t]), gamma_t,
-                                  schedule.effective_noise_std(t))
-            params, metrics = step(params, batch, ctl)
+            carry = params
+            executor = eng.get_executor(raw_step)
+        align = (eval_every if eval_every else 0,
+                 checkpoint_every if checkpointer is not None else 0)
 
-        loss = float(metrics["loss"])
-        result.losses.append(loss)
-        if "p_hat" in metrics:
-            result.p_hats.append(float(metrics["p_hat"]))
+        # Software-pipelined chunk loop: the metric sync for chunk i is
+        # deferred until chunk i+1 has been *dispatched*, so the host-side
+        # prep of the next chunk (control trace, DP lookahead, batch
+        # stacking) overlaps the device executing the current one. The
+        # per-round loop cannot do this — it blocks on every round's loss.
+        pending = None            # (first_round, n_rounds, device metrics)
 
-        if eval_every and (t + 1) % eval_every == 0:
-            ebatch = pipeline.eval_batch(eval_n)
-            logits = np.asarray(eval_fn(params, ebatch))
-            from repro.data import tasks as T
-            acc = T.accuracy(logits, ebatch)
-            result.accuracies.append(acc)
+        def flush() -> None:
+            nonlocal pending
+            if pending is None:
+                return
+            a0, n0_rounds, metrics = pending
+            pending = None
+            host = {k: np.asarray(v) for k, v in metrics.items()}
+            result.losses.extend(float(x) for x in host["loss"])
+            if "p_hat" in host:
+                result.p_hats.extend(float(x) for x in host["p_hat"])
+            if on_round is not None:
+                for r in range(n0_rounds):
+                    on_round(a0 + r, {k: v[r] for k, v in host.items()})
 
-        if on_round is not None:
-            on_round(t, {"loss": loss, **{k: np.asarray(v)
-                                          for k, v in metrics.items()}})
+        for a, b in eng.chunk_boundaries(start_round, rounds, chunk_rounds,
+                                         align):
+            trace = eng.build_trace(schedule, pz, a, b,
+                                    fault=fault, elastic=elastic)
+            n_ok = eng.affordable_rounds(accountant, trace)
+            if n_ok == 0:
+                result.privacy_exhausted_at = a
+                break
+            eng.charge_rounds(accountant, trace, n_ok)
+            batches = eng.stack_batches(pipeline, a, a + n_ok)
+            carry, metrics = executor.run(carry, trace.rows(n_ok), batches)
+            flush()               # sync chunk i-1 while chunk i runs
+            pending = (a, n_ok, metrics)
+            if pz.variant == "fo":
+                params, opt_state = carry
+            else:
+                params = carry
+            t_done = a + n_ok
+            if n_ok < b - a:      # guard tripped mid-chunk: hard stop
+                flush()
+                result.privacy_exhausted_at = t_done
+                break
+            if eval_every and t_done % eval_every == 0:
+                run_eval(t_done)
+            if checkpointer is not None and t_done % checkpoint_every == 0:
+                checkpointer.save(
+                    t_done, params,
+                    extra={"accountant": accountant.state_dict(),
+                           "round": t_done})
+        flush()
+    else:
+        for t in range(start_round, rounds):
+            batch_np = pipeline.batch(t)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()
+                     if k != "labels"}
+            mask = combined_mask(t, fault, elastic, n_clients=k_clients)
+            ctl = pairzero.make_control(t, schedule, pz.seed, k_clients,
+                                        mask=mask)
 
-        if checkpointer is not None and (t + 1) % checkpoint_every == 0:
-            checkpointer.save(t + 1, params,
-                              extra={"accountant": accountant.state_dict(),
-                                     "round": t + 1})
+            if pz.variant == "fo":
+                params, opt_state, metrics = step(params, opt_state, batch,
+                                                  ctl)
+            else:
+                if pz.dp.enabled and schedule.scheme != "perfect":
+                    # hard enforcement: a correct schedule sums exactly to the
+                    # budget over the horizon; this guard trips only on
+                    # misconfiguration (e.g. resuming with a different scheme)
+                    # and stops all further transmission — privacy over
+                    # utility.
+                    gamma_t = pz.zo.clip_gamma if pz.variant == "analog" \
+                        else 1.0
+                    if accountant.would_violate(
+                            float(schedule.c[t]), gamma_t,
+                            schedule.effective_noise_std(t), slack=1e-6):
+                        result.privacy_exhausted_at = t
+                        break
+                    accountant.charge(float(schedule.c[t]), gamma_t,
+                                      schedule.effective_noise_std(t))
+                params, metrics = step(params, batch, ctl)
+
+            loss = float(metrics["loss"])
+            result.losses.append(loss)
+            if "p_hat" in metrics:
+                result.p_hats.append(float(metrics["p_hat"]))
+
+            if eval_every and (t + 1) % eval_every == 0:
+                run_eval(t + 1)
+
+            if on_round is not None:
+                on_round(t, {"loss": loss, **{k: np.asarray(v)
+                                              for k, v in metrics.items()}})
+
+            if checkpointer is not None and (t + 1) % checkpoint_every == 0:
+                checkpointer.save(t + 1, params,
+                                  extra={"accountant":
+                                         accountant.state_dict(),
+                                         "round": t + 1})
 
     if checkpointer is not None:
         checkpointer.wait()
-    result.steps = rounds - start_round
+    result.steps = (result.privacy_exhausted_at - start_round
+                    if result.privacy_exhausted_at >= 0
+                    else rounds - start_round)
     result.privacy_spent = accountant.spent
     result.wall_time_s = time.time() - t0
     result.params = params  # type: ignore[attr-defined]

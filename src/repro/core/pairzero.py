@@ -70,12 +70,18 @@ def make_control(t: int, schedule, base_seed: int, n_clients: int,
     }
 
 
+@functools.lru_cache(maxsize=128)
 def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                  impl: Optional[str] = None,
                  scheme: Optional[str] = None) -> Callable:
     """Build the jitted ZO train step for `variant` ∈ {analog, sign}.
 
     Returns step(params, batch, ctl) → (new_params, metrics).
+
+    Memoized on the (frozen, hashable) configs: repeated runs with identical
+    configs get the *same* function object back, so jit/scan caches hit
+    instead of retracing — fedsim.run and the scan engine stay compile-once
+    across invocations (benchmarks, tests, resumed runs).
     """
     loss_fn = make_loss_fn(model_cfg, impl=impl)
     variant = pz.variant
@@ -118,10 +124,14 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
     return step
 
 
+@functools.lru_cache(maxsize=128)
 def make_fo_step(model_cfg: ModelConfig, optimizer,
                  impl: Optional[str] = None) -> Callable:
     """First-order FedSGD baseline: full backprop + cross-client grad
-    averaging (the d-dimensional all-reduce the paper eliminates)."""
+    averaging (the d-dimensional all-reduce the paper eliminates).
+
+    Memoized like `make_zo_step` — optimizers are frozen dataclasses, so
+    equal configs return the same function object and jit caches hit."""
     loss_fn = make_loss_fn(model_cfg, impl=impl)
 
     def step(params: PyTree, opt_state: PyTree, batch: Dict, ctl: Dict
@@ -139,6 +149,11 @@ def make_fo_step(model_cfg: ModelConfig, optimizer,
     return step
 
 
+@functools.lru_cache(maxsize=128)
 def jit_zo_step(step: Callable, donate: bool = True):
-    """jit with parameter-buffer donation (the MeZO in-place chain)."""
+    """jit with parameter-buffer donation (the MeZO in-place chain).
+
+    Memoized so the same step object maps to the same jitted wrapper (and
+    therefore the same XLA executable cache) across fedsim.run calls.
+    """
     return jax.jit(step, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,18 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+jax renamed `pltpu.TPUCompilerParams` (≤ 0.4.x) to `pltpu.CompilerParams`
+(≥ 0.5). The fields we use (`dimension_semantics`) are identical in both.
+Every kernel imports the alias from here so the version probe lives in
+exactly one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # fail here, at the version probe, not in kernels
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams "
+        "(jax >= 0.5) nor TPUCompilerParams (jax <= 0.4.x); update "
+        "repro/kernels/compat.py for this jax version")

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 LANE = 128
 DEFAULT_BLOCK = 2048 * LANE  # elements per grid step (1 MiB of f32 in VMEM)
 
@@ -108,7 +110,7 @@ def seeded_axpy_pallas(w: jnp.ndarray, seed: jnp.ndarray, scale,
         ],
         out_specs=pl.BlockSpec((rows_per_block, LANE), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(mat.shape, orig_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(jnp.asarray([seed]).astype(jnp.uint32),

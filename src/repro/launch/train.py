@@ -38,6 +38,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--scheme", default="solution",
                     choices=["solution", "static", "reversed", "perfect"])
     ap.add_argument("--rounds", type=int, default=800)
+    ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
+                    help="round executor: per-round dispatch (loop) or the "
+                         "device-resident chunked scan engine (scan)")
+    ap.add_argument("--chunk-rounds", type=int, default=32,
+                    help="rounds per device dispatch for --engine scan")
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--batch", type=int, default=8,
                     help="per-client batch size")
@@ -101,6 +106,7 @@ def main() -> None:
             print(f"round {t:5d} loss {metrics['loss']:.4f}", flush=True)
 
     res = fedsim.run(cfg, pz, pipe, rounds=args.rounds,
+                     engine=args.engine, chunk_rounds=args.chunk_rounds,
                      eval_every=args.eval_every,
                      checkpoint_dir=args.checkpoint_dir,
                      checkpoint_every=args.checkpoint_every,
@@ -109,7 +115,9 @@ def main() -> None:
 
     summary = {
         "arch": cfg.name, "variant": args.variant, "scheme": args.scheme,
-        "rounds": res.steps, "final_loss": res.losses[-1],
+        "engine": args.engine,
+        "rounds": res.steps,
+        "final_loss": res.losses[-1] if res.losses else None,
         "accuracies": res.accuracies,
         "privacy_spent": res.privacy_spent,
         "privacy_budget": res.privacy_budget,

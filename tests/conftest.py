@@ -1,0 +1,63 @@
+"""Shared fixtures: reduced configs, deterministic pipelines, fixed seeds.
+
+Every fixture is seeded — a test that wants different randomness must ask
+for it explicitly (factories take a `seed` argument). Library code only uses
+`np.random.default_rng(seed)` / jax keys, so the autouse global seed below is
+belt-and-braces for any stray `np.random.*` call in tests themselves.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
+                                PairZeroConfig, PowerControlConfig, ZOConfig)
+from repro.data.pipeline import FederatedPipeline
+from repro.data.tasks import TaskSpec
+
+
+@pytest.fixture(autouse=True)
+def _fixed_global_seed():
+    np.random.seed(0)
+
+
+@pytest.fixture
+def tiny_model() -> ModelConfig:
+    """The 2-layer dense model the system tests train on CPU."""
+    return ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=64,
+                       head_dim=16)
+
+
+@pytest.fixture
+def opt125m_reduced() -> ModelConfig:
+    """The paper's own architecture, reduced to CPU scale."""
+    from repro.models import registry
+    return registry.get_arch("opt-125m").reduced()
+
+
+@pytest.fixture
+def make_pipeline():
+    """Factory: seeded FederatedPipeline for (vocab, seq, task, seed)."""
+    def _make(vocab: int = 64, seq: int = 24, task: str = "sst2",
+              seed: int = 0, n_clients: int = 5, batch: int = 8
+              ) -> FederatedPipeline:
+        return FederatedPipeline(task=task, spec=TaskSpec(task, vocab, seq),
+                                 n_clients=n_clients, per_client_batch=batch,
+                                 seed=seed)
+    return _make
+
+
+@pytest.fixture
+def make_pz():
+    """Factory: PairZeroConfig with fixed seed and CPU-scale defaults."""
+    def _make(variant: str = "analog", scheme: str = "solution",
+              lr: float = 5e-3, n_perturb: int = 1, eps: float = 5.0,
+              rounds: int = 8, seed: int = 0, gamma: float = 5.0,
+              n_clients: int = 5) -> PairZeroConfig:
+        return PairZeroConfig(
+            variant=variant, n_clients=n_clients, rounds=rounds,
+            zo=ZOConfig(mu=1e-3, lr=lr, clip_gamma=gamma,
+                        n_perturb=n_perturb),
+            channel=ChannelConfig(n0=1.0, power=100.0),
+            dp=DPConfig(epsilon=eps, delta=0.01),
+            power=PowerControlConfig(scheme=scheme), seed=seed)
+    return _make

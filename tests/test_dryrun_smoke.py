@@ -19,7 +19,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 import repro.launch.dryrun as dr
 import repro.launch.mesh as mesh_mod
@@ -27,10 +26,9 @@ import repro.launch.mesh as mesh_mod
 # shrink the production mesh to the 8 fake devices: (data=2, model=4)
 def small_mesh(*, multi_pod=False):
     if multi_pod:
-        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return mesh_mod.make_mesh_compat((2, 2, 2),
+                                         ("pod", "data", "model"))
+    return mesh_mod.make_mesh_compat((2, 4), ("data", "model"))
 
 dr.make_production_mesh = small_mesh
 

@@ -1,0 +1,213 @@
+"""Scan-over-rounds engine: equivalence with the per-round loop.
+
+The contract under test: engine="scan" is *bitwise* identical to
+engine="loop" at fixed seed — same losses, same p_hats, same privacy spend,
+same hard privacy stop — while dispatching chunk_rounds rounds per device
+call. Chunk boundaries are deliberately chosen NOT to divide the horizon so
+partial chunks are exercised.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import dp, engine as eng, fedsim, ota, pairzero
+from repro.core import power_control as pc
+from repro.models import registry
+
+
+# ---------------------------------------------------------------------------
+# Control-trace precomputation == per-round make_control
+# ---------------------------------------------------------------------------
+
+def test_control_trace_matches_make_control(make_pz):
+    pz = make_pz(scheme="solution", rounds=16)
+    h = ota.draw_channels(pz.seed ^ 0xC4A7, 16, pz.n_clients, "rayleigh")
+    sched = pc.make_schedule(
+        "analog", "solution", h, power=100.0, n0=1.0, gamma=5.0,
+        n_clients=pz.n_clients, e0=pz.power.e0,
+        contraction_a=pz.power.contraction_a,
+        contraction_a_tilde=pz.power.contraction_a_tilde,
+        epsilon=5.0, delta=0.01)
+    trace = eng.build_trace(sched, pz, 3, 16)
+    for t in range(3, 16):
+        ctl = pairzero.make_control(t, sched, pz.seed, pz.n_clients)
+        for key in ctl:
+            np.testing.assert_array_equal(
+                np.asarray(ctl[key]), np.asarray(trace.ctl[key][t - 3]),
+                err_msg=f"round {t} field {key}")
+
+
+def test_fault_trace_replays_loop_order(make_pz):
+    """Chunked trace building consumes the stateful FaultModel RNG in the
+    same order the per-round loop does."""
+    from repro.runtime.fault import FaultModel, combined_mask
+    pz = make_pz(rounds=10, scheme="perfect")
+    sched = pc.PowerSchedule(c=np.ones(10), sigma=np.zeros((10, 5)),
+                             scheme="perfect", n0=0.0)
+    fm_loop = FaultModel(5, dropout_p=0.3, straggler_p=0.1, seed=7)
+    loop_masks = [combined_mask(t, fm_loop, None, n_clients=5)
+                  for t in range(10)]
+    fm_scan = FaultModel(5, dropout_p=0.3, straggler_p=0.1, seed=7)
+    tr_a = eng.build_trace(sched, pz, 0, 6, fault=fm_scan)
+    tr_b = eng.build_trace(sched, pz, 6, 10, fault=fm_scan)
+    scan_masks = np.concatenate([np.asarray(tr_a.ctl["mask"]),
+                                 np.asarray(tr_b.ctl["mask"])])
+    np.testing.assert_array_equal(np.stack(loop_masks), scan_masks)
+
+
+def test_chunk_boundaries_align_to_cadences():
+    # plain chunking
+    assert eng.chunk_boundaries(0, 10, 4) == [(0, 4), (4, 8), (8, 10)]
+    # eval every 5 forces a cut at 5 even though the chunk would span it
+    assert eng.chunk_boundaries(0, 12, 8, (5,)) == \
+        [(0, 5), (5, 10), (10, 12)]
+    # resume from mid-cadence: first cut lands back on the cadence grid
+    assert eng.chunk_boundaries(3, 12, 8, (5,)) == [(3, 5), (5, 10), (10, 12)]
+    # degenerate chunk size still advances
+    assert eng.chunk_boundaries(0, 3, 0) == [(0, 1), (1, 2), (2, 3)]
+
+
+# ---------------------------------------------------------------------------
+# Bitwise scan == loop (the acceptance-criterion test)
+# ---------------------------------------------------------------------------
+
+def test_scan_bitwise_identical_to_loop_opt125m(opt125m_reduced, make_pz,
+                                                make_pipeline):
+    """8 rounds of the paper's architecture (reduced): identical trajectory
+    bit for bit, across uneven chunk boundaries (3+3+2)."""
+    cfg = opt125m_reduced
+    pz = make_pz(scheme="solution", n_perturb=1, rounds=8)
+    pipe = lambda: make_pipeline(vocab=cfg.vocab_size, seq=32, batch=4)
+    res_loop = fedsim.run(cfg, pz, pipe(), rounds=8, engine="loop")
+    res_scan = fedsim.run(cfg, pz, pipe(), rounds=8, engine="scan",
+                          chunk_rounds=3)
+    assert res_scan.losses == res_loop.losses          # bitwise, not allclose
+    assert res_scan.p_hats == res_loop.p_hats
+    assert res_scan.privacy_spent == res_loop.privacy_spent
+    assert len(res_scan.losses) == 8
+
+
+def test_scan_matches_loop_fo_variant(tiny_model, make_pz, make_pipeline):
+    """FO baseline under scan: fp-tolerance equivalence only — XLA fuses
+    value_and_grad differently inside the scan body (see fedsim.run
+    docstring). Bit-identity is guaranteed for the ZO variants only."""
+    pz = make_pz(variant="fo", scheme="perfect", lr=3e-3, rounds=6)
+    pipe = lambda: make_pipeline()
+    res_loop = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="loop")
+    res_scan = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                          chunk_rounds=4)
+    np.testing.assert_allclose(res_scan.losses, res_loop.losses,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_scan_matches_loop_sign_variant(tiny_model, make_pz, make_pipeline):
+    pz = make_pz(variant="sign", scheme="solution", lr=2e-2, rounds=6)
+    pipe = lambda: make_pipeline()
+    res_loop = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="loop")
+    res_scan = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                          chunk_rounds=4)
+    assert res_scan.losses == res_loop.losses
+
+
+def test_scan_metrics_and_on_round(tiny_model, make_pz, make_pipeline):
+    """on_round fires once per round with per-round (not stacked) metrics."""
+    pz = make_pz(scheme="perfect", rounds=5)
+    seen = []
+    fedsim.run(tiny_model, pz, make_pipeline(), rounds=5, engine="scan",
+               chunk_rounds=2,
+               on_round=lambda t, m: seen.append((t, m["p_clients"].shape)))
+    assert [t for t, _ in seen] == [0, 1, 2, 3, 4]
+    assert all(shape == (5,) for _, shape in seen)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume across chunk boundaries
+# ---------------------------------------------------------------------------
+
+def test_scan_checkpoint_resume_equivalence(tiny_model, make_pz,
+                                            make_pipeline, tmp_path):
+    """Interrupt a scan run at a chunk-interior checkpoint cadence, resume
+    with a different chunking — the tail must match the uninterrupted loop
+    run bitwise."""
+    pz = make_pz(scheme="solution", rounds=8)
+    pipe = lambda: make_pipeline()
+    res_ref = fedsim.run(tiny_model, pz, pipe(), rounds=8, engine="loop")
+
+    ck = str(tmp_path / "ck")
+    fedsim.run(tiny_model, pz, pipe(), rounds=4, engine="scan",
+               chunk_rounds=3, checkpoint_dir=ck, checkpoint_every=4)
+    res_res = fedsim.run(tiny_model, pz, pipe(), rounds=8, engine="scan",
+                         chunk_rounds=3, checkpoint_dir=ck,
+                         checkpoint_every=1000)
+    assert res_res.resumed_from == 4
+    assert res_res.losses == res_ref.losses[4:]
+    # and the DP ledger picked up where the interrupted run left it
+    assert res_res.privacy_spent == pytest.approx(res_ref.privacy_spent)
+
+
+# ---------------------------------------------------------------------------
+# Hard privacy stop, mid-chunk
+# ---------------------------------------------------------------------------
+
+def _near_exhausted_checkpoint(cfg, pz, ckdir, start_round, affordable):
+    """Write a checkpoint whose accountant affords exactly `affordable` more
+    rounds of pz's schedule past `start_round` — the next chunk must trip
+    mid-flight."""
+    horizon = pz.rounds
+    h = ota.draw_channels(pz.seed ^ 0xC4A7, horizon, pz.n_clients, "rayleigh")
+    sched = pc.make_schedule(
+        pz.variant, pz.power.scheme, h, power=pz.channel.power,
+        n0=pz.channel.n0, gamma=pz.zo.clip_gamma, n_clients=pz.n_clients,
+        e0=pz.power.e0, contraction_a=pz.power.contraction_a,
+        contraction_a_tilde=pz.power.contraction_a_tilde,
+        epsilon=pz.dp.epsilon, delta=pz.dp.delta)
+    budget = dp.r_dp(pz.dp.epsilon, pz.dp.delta)
+    costs = [dp.round_privacy_cost(float(sched.c[t]), pz.zo.clip_gamma,
+                                   sched.effective_noise_std(t))
+             for t in range(start_round, start_round + affordable + 1)]
+    # afford the first `affordable` rounds but not the one after
+    spent = budget - sum(costs[:affordable]) - 0.5 * costs[affordable]
+    import jax.numpy as jnp
+    params = registry.init_params(jax.random.key(pz.seed), cfg, jnp.float32)
+    ckpt.save(ckdir, start_round, params,
+              extra={"accountant": {"epsilon": pz.dp.epsilon,
+                                    "delta": pz.dp.delta, "spent": spent},
+                     "round": start_round})
+
+
+def test_privacy_guard_trips_mid_chunk(tiny_model, make_pz, make_pipeline,
+                                       tmp_path):
+    """A resumed run whose remaining budget dies inside a chunk must stop at
+    the exact round the per-round loop stops at, with zero overspend."""
+    pz = make_pz(scheme="static", rounds=12)
+    trip_after = 3          # rounds 2,3,4 run; round 5 trips (mid-chunk of 8)
+    results = {}
+    for engine in ("loop", "scan"):
+        ck = str(tmp_path / engine)
+        _near_exhausted_checkpoint(tiny_model, pz, ck, start_round=2,
+                                   affordable=trip_after)
+        results[engine] = fedsim.run(
+            tiny_model, pz, make_pipeline(), rounds=12, engine=engine,
+            chunk_rounds=8, checkpoint_dir=ck)
+    loop, scan = results["loop"], results["scan"]
+    assert loop.privacy_exhausted_at == 2 + trip_after
+    assert scan.privacy_exhausted_at == loop.privacy_exhausted_at
+    assert scan.losses == loop.losses
+    assert len(scan.losses) == trip_after
+    assert scan.privacy_spent <= scan.privacy_budget * (1 + 1e-6)
+    assert scan.privacy_spent == loop.privacy_spent
+
+
+def test_privacy_guard_trips_at_chunk_head(tiny_model, make_pz,
+                                           make_pipeline, tmp_path):
+    """Zero affordable rounds: the engine must stop before dispatching."""
+    pz = make_pz(scheme="static", rounds=12)
+    ck = str(tmp_path / "ck")
+    _near_exhausted_checkpoint(tiny_model, pz, ck, start_round=2,
+                               affordable=0)
+    res = fedsim.run(tiny_model, pz, make_pipeline(), rounds=12,
+                     engine="scan", chunk_rounds=8, checkpoint_dir=ck)
+    assert res.privacy_exhausted_at == 2
+    assert res.losses == []

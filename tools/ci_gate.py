@@ -1,0 +1,87 @@
+"""CI gate: "no worse than the checked-in baseline".
+
+    python tools/ci_gate.py <junit.xml> <known_failures.txt>
+
+Parses a pytest junit report and compares the set of failing/erroring test
+ids against the baseline file. Exit 1 iff a test OUTSIDE the baseline
+failed (a regression). Tests in the baseline that now pass are reported so
+the baseline can be shrunk — the gate never requires them to keep failing.
+
+Baseline format: one test id per line ("tests/test_x.py::test_y[param]"),
+'#' comments and blank lines ignored.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import xml.etree.ElementTree as ET
+
+
+def _classname_to_id(classname: str, name: str) -> str:
+    """pytest junit classname is "tests.test_foo[.TestClass[.Nested]]".
+    Resolve the module/class split against the filesystem (run from the
+    repo root, as CI does): the longest dotted prefix that exists as a .py
+    file is the module; the rest are class qualifiers."""
+    parts = classname.split(".") if classname else []
+    for cut in range(len(parts), 0, -1):
+        mod = "/".join(parts[:cut]) + ".py"
+        if os.path.exists(mod):
+            return "::".join([mod, *parts[cut:], name])
+    return (classname.replace(".", "/") + ".py::" + name) if classname \
+        else f"?::{name}"
+
+
+def junit_failures(path: str) -> set:
+    ids = set()
+    root = ET.parse(path).getroot()
+    for case in root.iter("testcase"):
+        if case.find("failure") is None and case.find("error") is None:
+            continue
+        ids.add(_classname_to_id(case.get("classname", ""),
+                                 case.get("name", "")))
+    return ids
+
+
+def load_baseline(path: str) -> set:
+    out = set()
+    with open(path) as f:
+        for line in f:
+            line = line.split("#", 1)[0].strip()
+            if line:
+                out.add(line)
+    return out
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    failing = junit_failures(sys.argv[1])
+    baseline = load_baseline(sys.argv[2])
+
+    new = sorted(failing - baseline)
+    fixed = sorted(baseline - failing)
+    known = sorted(failing & baseline)
+
+    if known:
+        print(f"known failures still failing ({len(known)}):")
+        for t in known:
+            print(f"  [known] {t}")
+    if fixed:
+        print(f"baseline entries now passing ({len(fixed)}) — consider "
+              "removing them from known_failures.txt:")
+        for t in fixed:
+            print(f"  [fixed] {t}")
+    if new:
+        print(f"NEW failures not in the baseline ({len(new)}):")
+        for t in new:
+            print(f"  [NEW]   {t}")
+        print("\ngate: FAIL (regressions above)")
+        return 1
+    print(f"\ngate: PASS ({len(failing)} failing, all within the "
+          f"{len(baseline)}-entry baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
