@@ -1,8 +1,12 @@
 """Table II reproduction: memory overhead + per-iteration upload, OPT-125M.
 
-Two sources, cross-checked:
-  * analytic accounting (the paper's own FP16 method): params / grads /
-    optimizer states / ZO's inference-level footprint;
+Three sources, cross-checked:
+  * analytic memory accounting (the paper's own FP16 method): params /
+    grads / optimizer states / ZO's inference-level footprint;
+  * the TRANSPORT registry: the communication column is computed from each
+    mechanism's `Transport.payload_bits` / `bits_per_round` (uplink payload
+    x clients), never hard-coded — including the conventional digital
+    quantized baseline the paper compares against;
   * the COMPILER: XLA memory_analysis() of the compiled ZO step vs the FO
     SGD/Adam steps (run in a subprocess so device-count flags stay local).
 
@@ -16,29 +20,48 @@ import os
 import subprocess
 import sys
 
+from repro.configs.base import PairZeroConfig, TransportConfig, ZOConfig
+from repro.core import transport as tp
 from repro.models import registry
 
 FP16 = 2  # bytes, as in the paper's Table II
 
+# Table II rows -> (transport mechanism, analytic memory multiplier vs the
+# fp16 model). Memory: ZO is inference-level (params + ~5% activations);
+# digital transmits quantized ZO updates so its footprint matches ZO's;
+# FO SGD adds grads+acts, FO Adam adds the two moments on top.
+ROWS = (
+    ("Sign-pAirZero", "sign", 1.05),
+    ("pAirZero", "analog", 1.05),
+    ("Digital-ZO (8-bit)", "digital", 1.05),
+    ("FO SGD", "fo", 2.5),
+    ("FO Adam", "fo", 4.0),
+)
 
-def analytic_table(arch: str = "opt-125m") -> dict:
+
+def _fmt_bits(bits: int) -> str:
+    if bits < 8 * 1024:
+        return f"{bits} bits"
+    if bits < 8e6:
+        return f"{bits / 8e3:.2f} KB"
+    return f"{bits / 8e6:.2f} MB"
+
+
+def analytic_table(arch: str = "opt-125m", n_clients: int = 5) -> dict:
     cfg = registry.get_arch(arch)
     d = registry.count_params(cfg)
     model_mb = d * FP16 / 1e6
-    # inference-level footprint: params + one layer's activations (~5%)
-    zo_mb = model_mb * 1.05
-    rows = {
-        "model_size_mb": round(model_mb, 2),
-        "params": d,
-        "Sign-pAirZero": {"memory_mb": round(zo_mb, 1),
-                          "upload_per_iter": "1 bit"},
-        "pAirZero": {"memory_mb": round(zo_mb, 1),
-                     "upload_per_iter": "16 bits"},
-        "FO SGD": {"memory_mb": round(model_mb * 2.5, 1),   # +grads+acts
-                   "upload_per_iter": f"{model_mb:.2f} MB"},
-        "FO Adam": {"memory_mb": round(model_mb * 4.0, 1),  # +m,v
-                    "upload_per_iter": f"{model_mb:.2f} MB"},
-    }
+    pz = PairZeroConfig(n_clients=n_clients, zo=ZOConfig(n_perturb=1),
+                        transport=TransportConfig())
+    rows = {"model_size_mb": round(model_mb, 2), "params": d,
+            "n_clients": n_clients}
+    for label, mechanism, mem_mult in ROWS:
+        t = tp.get(mechanism).from_config(TransportConfig(mechanism), pz)
+        rows[label] = {
+            "memory_mb": round(model_mb * mem_mult, 1),
+            "upload_per_iter": _fmt_bits(t.payload_bits(pz, d)),
+            "bits_per_round": t.bits_per_round(pz, d),
+        }
     return rows
 
 
@@ -95,10 +118,12 @@ def main() -> None:
     table = {"analytic": analytic_table()}
     a = table["analytic"]
     print(f"OPT-125M: {a['params'] / 1e6:.1f}M params, model "
-          f"{a['model_size_mb']:.1f} MB (fp16)")
-    for k in ("Sign-pAirZero", "pAirZero", "FO SGD", "FO Adam"):
-        print(f"  {k:14s} memory ≈ {a[k]['memory_mb']:8.1f} MB   upload/iter "
-              f"= {a[k]['upload_per_iter']}")
+          f"{a['model_size_mb']:.1f} MB (fp16), K={a['n_clients']} clients")
+    for label, _, _ in ROWS:
+        r = a[label]
+        print(f"  {label:19s} memory ≈ {r['memory_mb']:8.1f} MB   "
+              f"upload/iter = {r['upload_per_iter']:>10s}   "
+              f"total/round = {_fmt_bits(r['bits_per_round'])}")
 
     if args.compiled:
         table["compiled"] = compiled_table()

@@ -21,7 +21,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
-                                PairZeroConfig, PowerControlConfig, ZOConfig)
+                                PairZeroConfig, TransportConfig, ZOConfig)
 from repro.core import fedsim
 from repro.data.pipeline import FederatedPipeline
 from repro.data.tasks import TaskSpec
@@ -39,8 +39,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="tiny", choices=sorted(PRESETS))
     ap.add_argument("--rounds", type=int, default=None)
-    ap.add_argument("--variant", default="analog",
-                    choices=["analog", "sign"])
+    ap.add_argument("--transport", default="analog",
+                    choices=["analog", "sign", "digital"],
+                    help="uplink mechanism (see repro.core.transport); "
+                         "'digital' is the conventional quantized baseline")
     ap.add_argument("--epsilon", type=float, default=None,
                     help="DP ε (default: 50 for the fast presets — the "
                          "paper's ε=5 needs its T=8000 horizon to exit the "
@@ -68,12 +70,16 @@ def main() -> None:
     eps = args.epsilon if args.epsilon is not None else (
         5.0 if args.preset == "opt125m" else 50.0)
     pz = PairZeroConfig(
-        variant=args.variant, n_clients=5, rounds=rounds,
+        n_clients=5, rounds=rounds,
         zo=ZOConfig(mu=1e-3, lr=p["lr"], clip_gamma=gamma, n_perturb=4),
         channel=ChannelConfig(n0=1.0, power=100.0,
                               d=model.param_count()),
-        dp=DPConfig(epsilon=eps, delta=0.01),
-        power=PowerControlConfig(scheme="solution"))
+        # the digital baseline has no DP mechanism (orthogonal decoding
+        # exposes each payload) — run it openly non-private
+        dp=DPConfig(epsilon=eps, delta=0.01,
+                    enabled=args.transport != "digital"),
+        transport=TransportConfig(mechanism=args.transport,
+                                  scheme="solution"))
 
     data = FederatedPipeline(task="sst2",
                              spec=TaskSpec("sst2", model.vocab_size,
@@ -89,7 +95,7 @@ def main() -> None:
         (int(rounds * 0.6), 4), (int(rounds * 0.8), 5)))
 
     print(f"== federated fine-tune: {model.name} "
-          f"({model.param_count() / 1e6:.1f}M params), {args.variant}, "
+          f"({model.param_count() / 1e6:.1f}M params), {args.transport}, "
           f"Theorem-3 power control, ε={eps:g}, {rounds} rounds ==")
     res = fedsim.run(
         model, pz, data, rounds=rounds,
@@ -105,8 +111,14 @@ def main() -> None:
           f"(start {np.mean(res.losses[:5]):.4f})")
     if res.accuracies:
         print(f"accuracies     : {[round(a, 2) for a in res.accuracies]}")
-    print(f"privacy        : spent {res.privacy_spent:.4f} of "
-          f"{res.privacy_budget:.4f}  (ε={eps:g}, δ=0.01)")
+    if args.transport == "digital":
+        print("privacy        : NONE — digital orthogonal uplink exposes "
+              "each client's payload (the trilemma's third corner)")
+    else:
+        print(f"privacy        : spent {res.privacy_spent:.4f} of "
+              f"{res.privacy_budget:.4f}  (ε={eps:g}, δ=0.01)")
+    print(f"uplink         : {res.uplink_bits / 8e6:.3f} MB total over "
+          f"{res.steps} rounds ({args.transport} transport)")
     print(f"checkpoints in : {args.ckpt} (re-run to resume from "
           f"round {res.steps + res.resumed_from})")
 

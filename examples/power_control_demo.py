@@ -16,7 +16,10 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import dp, ota, power_control as pc
+from repro.configs.base import (ChannelConfig, DPConfig, PairZeroConfig,
+                                ZOConfig)
+from repro.core import dp, ota
+from repro.core import transport as tp
 
 
 def main() -> None:
@@ -32,16 +35,18 @@ def main() -> None:
     budget = dp.r_dp(args.epsilon, args.delta)
     print(f"R_dp(ε={args.epsilon}, δ={args.delta}) = {budget:.4f}")
 
-    kw = dict(power=args.power, n0=1.0, gamma=100.0,
-              epsilon=args.epsilon, delta=args.delta)
+    # schedules come from the Transport protocol: each mechanism owns its
+    # host-side solve (Theorem 3 for analog, Theorem 4 for sign)
+    pz = PairZeroConfig(
+        n_clients=args.clients, rounds=args.rounds,
+        zo=ZOConfig(clip_gamma=100.0),
+        channel=ChannelConfig(n0=1.0, power=args.power),
+        dp=DPConfig(epsilon=args.epsilon, delta=args.delta))
     schedules = {
-        "solution": pc.solve_analog(h, contraction_a=0.998, **kw),
-        "static": pc.static_analog(h, **kw),
-        "reversed": pc.reversed_analog(h, contraction_a=0.998, **kw),
-        "sign_solution": pc.solve_sign(
-            h, power=args.power, n0=1.0, n_clients=args.clients, e0=0.496,
-            contraction_a_tilde=0.998, epsilon=args.epsilon,
-            delta=args.delta),
+        "solution": tp.AnalogOTA(scheme="solution").make_schedule(h, pz),
+        "static": tp.AnalogOTA(scheme="static").make_schedule(h, pz),
+        "reversed": tp.AnalogOTA(scheme="reversed").make_schedule(h, pz),
+        "sign_solution": tp.SignOTA(scheme="solution").make_schedule(h, pz),
     }
 
     print(f"\n{'scheme':14s} {'c(1)':>10s} {'c(T/2)':>10s} {'c(T)':>10s} "

@@ -18,7 +18,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
-                                PairZeroConfig, PowerControlConfig, ZOConfig)
+                                PairZeroConfig, TransportConfig, ZOConfig)
 from repro.core import fedsim
 from repro.data.pipeline import FederatedPipeline
 from repro.data.tasks import TaskSpec
@@ -30,12 +30,14 @@ def main() -> None:
                         vocab_size=64, head_dim=16)
 
     pairzero = PairZeroConfig(
-        variant="analog",              # try "sign" for Sign-pAirZero
         n_clients=5,
         zo=ZOConfig(mu=1e-3, lr=5e-3, clip_gamma=5.0, n_perturb=4),
         channel=ChannelConfig(n0=1.0, power=1000.0),
         dp=DPConfig(epsilon=5.0, delta=0.01),
-        power=PowerControlConfig(scheme="perfect"),  # noise-free upper bound
+        # the uplink mechanism, from the transport registry: "perfect" is
+        # the noise-free upper bound; try "analog"/"sign" for the OTA
+        # mechanisms or "digital" for the conventional quantized baseline
+        transport=TransportConfig(mechanism="perfect"),
     )
 
     data = FederatedPipeline(task="sst2",
@@ -49,10 +51,10 @@ def main() -> None:
             f"  round {t:4d}  loss {m['loss']:.3f}"))
 
     print(f"\naccuracy trajectory: {[round(a, 2) for a in result.accuracies]}")
-    print(f"total uplink per client: {result.steps * 4 * 2} bytes "
-          f"({result.steps} rounds x 4 perturbations x fp16 scalar)")
+    print(f"total uplink, all clients: {result.uplink_bits / 8:.0f} bytes "
+          f"({result.steps} rounds x 4 perturbations x fp16 scalar x 5)")
     print(f"an FO baseline would have uploaded "
-          f"{result.steps * model.param_count() * 2 / 1e6:.1f} MB")
+          f"{result.steps * model.param_count() * 2 / 1e6:.1f} MB per client")
 
 
 if __name__ == "__main__":

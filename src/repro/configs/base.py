@@ -219,14 +219,33 @@ class PowerControlConfig:
 
 
 @dataclass(frozen=True)
+class TransportConfig:
+    """Which uplink mechanism carries the round (repro.core.transport).
+
+    `mechanism` names a registered Transport: analog | sign | perfect |
+    digital | fo (plus anything user-registered). `scheme` selects the
+    power-control schedule for the OTA mechanisms; `quant_bits` sizes the
+    digital baseline's stochastic quantizer.
+    """
+    mechanism: str = "analog"
+    scheme: str = "solution"        # solution | static | reversed | perfect
+    quant_bits: int = 8             # digital: bits per uploaded coordinate
+
+
+@dataclass(frozen=True)
 class PairZeroConfig:
-    variant: str = "analog"         # analog | sign | fo (first-order baseline)
+    """Run config. New code selects the uplink via `transport`; the legacy
+    `variant` + `power.scheme` strings remain as a one-release deprecation
+    shim (resolved through the same transport registry when `transport` is
+    None)."""
+    variant: str = "analog"         # DEPRECATED: analog | sign | fo
     n_clients: int = 5
     rounds: int = 8000
     zo: ZOConfig = field(default_factory=ZOConfig)
     channel: ChannelConfig = field(default_factory=ChannelConfig)
     dp: DPConfig = field(default_factory=DPConfig)
     power: PowerControlConfig = field(default_factory=PowerControlConfig)
+    transport: Optional[TransportConfig] = None
     seed: int = 0
 
 

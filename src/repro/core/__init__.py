@@ -2,9 +2,12 @@
 
 zo:            seeded SPSA (MeZO-chained dual forward, scalar projections)
 ota:           over-the-air channel model (analog + sign, channel inversion)
+transport:     pluggable uplink mechanisms (Transport protocol + registry:
+               analog | sign | perfect | digital | fo)
 dp:            (ε, δ) accountant — R_dp, C(x), bisection inverse
 power_control: Theorems 3 & 4 closed-form schedules (+ Static/Reversed)
-pairzero:      composable jitted train-step factory (analog | sign | fo)
-fedsim:        host-side federated driver (faults, checkpoints, eval)
+pairzero:      composable jitted train-step factory over any Transport
+fedsim:        Experiment orchestrator + round hooks (faults, checkpoints,
+               eval) shared by the loop and scan engines
 """
-from repro.core import dp, ota, power_control, zo  # noqa: F401
+from repro.core import dp, ota, power_control, transport, zo  # noqa: F401

@@ -106,16 +106,24 @@ class PrivacyAccountant:
     def remaining(self) -> float:
         return max(0.0, self.budget - self.spent)
 
-    def charge(self, c_t: float, gamma_t: float, m_t: float) -> float:
-        cost = round_privacy_cost(c_t, gamma_t, m_t)
+    def spend(self, cost: float) -> float:
+        """Charge a precomputed per-round cost (what a Transport reports via
+        `round_dp_costs`); returns the cost for chaining."""
         self.spent += cost
         self.history.append(cost)
         return cost
 
+    def would_exceed(self, cost: float, slack: float = 1e-9) -> bool:
+        return self.spent + cost > self.budget * (1.0 + slack)
+
+    def charge(self, c_t: float, gamma_t: float, m_t: float) -> float:
+        """Gaussian-mechanism convenience: charge the Eq.-16 term for one
+        round of OTA transmission at gain c, sensitivity gamma, noise m."""
+        return self.spend(round_privacy_cost(c_t, gamma_t, m_t))
+
     def would_violate(self, c_t: float, gamma_t: float, m_t: float,
                       slack: float = 1e-9) -> bool:
-        return self.spent + round_privacy_cost(c_t, gamma_t, m_t) \
-            > self.budget * (1.0 + slack)
+        return self.would_exceed(round_privacy_cost(c_t, gamma_t, m_t), slack)
 
     # -- checkpoint (de)serialization ------------------------------------
     def state_dict(self) -> dict:

@@ -1,21 +1,22 @@
-"""Device-resident scan-over-rounds engine (the multi-round hot path).
+"""Round executors: per-round dispatch (loop) and scan-over-rounds (scan).
 
-`fedsim.run`'s legacy loop dispatches one jitted step per round from Python:
-every round pays a host→device control-block rebuild, a kernel-launch round
-trip, and a blocking metric sync. But a pAirZero trajectory is a *pure
-function* of (params, seeds, schedule): the per-round control — c(t), σ(t),
-the broadcast seed, the channel-noise key, the survival mask — is all known
-the moment the base station solves the power schedule. So we precompute the
-whole control trace as stacked device arrays and compile `lax.scan` over the
-existing ZO step: one dispatch per `chunk_rounds` rounds, parameters donated
-through the whole chunk, metrics returned stacked.
+The per-round loop dispatches one jitted step per round from Python: every
+round pays a kernel-launch round trip and a blocking metric sync. But a
+pAirZero trajectory is a *pure function* of (params, seeds, schedule): the
+per-round control — c(t), σ(t), the broadcast seed, the channel-noise key,
+the survival mask — is all known the moment the base station solves the
+power schedule. So we precompute the whole control trace as stacked device
+arrays once per chunk; `ScanExecutor` compiles `lax.scan` over the existing
+ZO step (one dispatch per `chunk_rounds` rounds, parameters donated through
+the whole chunk, metrics returned stacked) while `LoopExecutor` walks the
+same trace one jitted call at a time. Both consume identical inputs, so the
+driver in fedsim is engine-agnostic.
 
 The host stays in charge of everything a real server does *between* chunks:
-DP accounting (charged per round from the precomputed schedule, with the
-hard privacy stop enforced by truncating the chunk at the first round that
-would overspend), eval, checkpointing, and fault-trace generation (the
-FaultModel RNG is stateful, so masks are drawn host-side in round order —
-bit-identical to the per-round loop).
+DP accounting (the run's Transport prices each round; the hard privacy stop
+truncates the chunk at the first round that would overspend), eval,
+checkpointing, and fault-trace generation (the FaultModel RNG is stateful,
+so masks are drawn host-side in round order — identical for both engines).
 
 Invariant: for the ZO variants (analog/sign), `engine="scan"` and
 `engine="loop"` produce bit-identical loss trajectories at fixed seed
@@ -34,8 +35,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import transport as tp
 from repro.core import zo
-from repro.core.dp import PrivacyAccountant, round_privacy_cost
+from repro.core.dp import PrivacyAccountant
 from repro.runtime.fault import combined_mask
 
 PyTree = Any
@@ -56,9 +58,7 @@ class ControlTrace:
     """
     t0: int
     ctl: Dict[str, jnp.ndarray]
-    acct_c: np.ndarray        # [R] schedule gain (host, for the accountant)
-    acct_gamma: np.ndarray    # [R] clip bound entering the DP cost
-    acct_m: np.ndarray        # [R] effective noise std m(t)
+    acct_cost: np.ndarray     # [R] per-round DP cost (Transport.round_dp_costs)
     charged: bool             # whether these rounds cost privacy at all
 
     def __len__(self) -> int:
@@ -80,13 +80,16 @@ def _noise_bits_trace(key_base: jax.Array, ts: jnp.ndarray) -> jnp.ndarray:
 
 
 def build_trace(schedule, pz, t0: int, t1: int, *,
-                fault=None, elastic=None) -> ControlTrace:
+                transport=None, fault=None, elastic=None) -> ControlTrace:
     """Precompute the control trace for rounds [t0, t1).
 
     Mask generation consumes the (stateful) FaultModel RNG in round order, so
     calling build_trace over consecutive chunks replays the identical fault
-    trace the per-round loop would draw.
+    trace the per-round loop would draw. DP accounting (per-round cost,
+    whether the rounds are charged at all) is delegated to the Transport.
     """
+    if transport is None:
+        transport = tp.resolve(pz)
     k = pz.n_clients
     rounds = int(t1 - t0)
     ts = np.arange(t0, t1, dtype=np.int64)
@@ -114,33 +117,25 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
         "noise_bits": noise_bits.astype(jnp.uint32),
     }
 
-    charged = bool(pz.dp.enabled and schedule.scheme != "perfect"
-                   and pz.variant != "fo")
-    gamma_t = pz.zo.clip_gamma if pz.variant == "analog" else 1.0
-    # vectorized effective_noise_std: m(t) = sqrt(c² Σ_k σ_k² + N0) (Eq. 12)
-    acct_m = np.sqrt(c_slice * c_slice * np.sum(sigma_slice ** 2, axis=1)
-                     + schedule.n0)
-    return ControlTrace(t0=t0, ctl=ctl,
-                        acct_c=c_slice,
-                        acct_gamma=np.full(rounds, gamma_t),
-                        acct_m=acct_m, charged=charged)
+    charged = bool(transport.charges_privacy(schedule, pz))
+    acct_cost = transport.round_dp_costs(schedule, t0, t1, pz) if charged \
+        else np.zeros(rounds)
+    return ControlTrace(t0=t0, ctl=ctl, acct_cost=acct_cost, charged=charged)
 
 
 def affordable_rounds(accountant: PrivacyAccountant, trace: ControlTrace,
                       slack: float = 1e-6) -> int:
     """How many leading rounds of `trace` the DP budget affords.
 
-    Pure lookahead — charges nothing. Mirrors the per-round loop's
-    `would_violate` guard exactly (same slack), so a mid-chunk trip lands on
-    the identical round.
+    Pure lookahead — charges nothing. Uses the same slack as the historical
+    per-round `would_violate` guard, so a mid-chunk trip lands on the
+    identical round under either engine.
     """
     if not trace.charged:
         return len(trace)
     spent = accountant.spent
     for r in range(len(trace)):
-        cost = round_privacy_cost(float(trace.acct_c[r]),
-                                  float(trace.acct_gamma[r]),
-                                  float(trace.acct_m[r]))
+        cost = float(trace.acct_cost[r])
         if spent + cost > accountant.budget * (1.0 + slack):
             return r
         spent += cost
@@ -154,9 +149,7 @@ def charge_rounds(accountant: PrivacyAccountant, trace: ControlTrace,
     if not trace.charged:
         return
     for r in range(n):
-        accountant.charge(float(trace.acct_c[r]),
-                          float(trace.acct_gamma[r]),
-                          float(trace.acct_m[r]))
+        accountant.spend(float(trace.acct_cost[r]))
 
 
 # ---------------------------------------------------------------------------
@@ -172,8 +165,46 @@ def stack_batches(pipeline, t0: int, t1: int) -> Dict[str, jnp.ndarray]:
 
 
 # ---------------------------------------------------------------------------
-# The scan executor
+# Executors: per-round dispatch (loop) and chunked lax.scan (scan)
 # ---------------------------------------------------------------------------
+
+class LoopExecutor:
+    """Per-round dispatch over an already-jitted step — no chunk compile
+    cost, and the bit-identity oracle for ScanExecutor.
+
+    Consumes the same (trace rows, stacked batches) interface as the scan
+    executor, so the driver in fedsim is engine-agnostic: loop and scan
+    differ only in dispatch granularity, never in orchestration.
+    """
+
+    def __init__(self, step: Callable):
+        self._step = step                   # jitted, carry donated
+
+    def run(self, carry: PyTree, ctl_stack: Dict[str, jnp.ndarray],
+            batch_stack: Dict[str, jnp.ndarray]
+            ) -> Tuple[PyTree, Dict[str, np.ndarray]]:
+        rounds = int(ctl_stack["seed"].shape[0])
+        collected: Optional[Dict[str, list]] = None
+        for r in range(rounds):
+            ctl = {k: v[r] for k, v in ctl_stack.items()}
+            batch = {k: v[r] for k, v in batch_stack.items()}
+            carry, metrics = self._step(carry, batch, ctl)
+            if collected is None:
+                collected = {k: [] for k in metrics}
+            for k, v in metrics.items():
+                collected[k].append(v)
+        metrics = {} if collected is None else \
+            {k: np.stack([np.asarray(x) for x in v])
+             for k, v in collected.items()}
+        return carry, metrics
+
+
+@functools.lru_cache(maxsize=64)
+def get_loop_executor(step: Callable) -> "LoopExecutor":
+    """Executor cache keyed on the jitted step object (mirrors
+    `get_executor`) so identical configs share one executor."""
+    return LoopExecutor(step)
+
 
 class ScanExecutor:
     """Compiles lax.scan over a per-round step; one program per chunk length.

@@ -1,29 +1,37 @@
 """Federated simulation driver: the paper's Algorithm 1 end to end.
 
-Host-side orchestration (what the edge server + base station do):
-  1. draw the block-fading channel trace h_k(t) for the horizon,
-  2. solve power control (Theorem 3/4 — or Static/Reversed/Perfect ablation),
-  3. run the rounds through one of two engines:
-       engine="scan": the device-resident scan-over-rounds engine
-         (core/engine.py) — the whole control trace is precomputed, and
-         `chunk_rounds` rounds execute per dispatch under one lax.scan with
-         parameter-buffer donation; the host touches down only at chunk
-         boundaries (DP accounting, eval, checkpoint, fault-trace draw);
-       engine="loop" (default): the per-round dispatch path — no chunk
-         compile cost, and the bit-identical equivalence oracle for scan,
-  4. charge the DP accountant (hard stop on overspend — privacy over
-     utility), handle faults (survival masks), checkpoint/resume, eval.
+`Experiment` is the single host-side orchestrator (what the edge server +
+base station do):
 
-The driver is deliberately boring: every interesting decision lives in
-core/{zo,ota,dp,power_control,pairzero,engine}. It is the substrate for the
-three examples, the Fig. 2/3 benchmarks, and the integration tests.
+  1. draw the block-fading channel trace h_k(t) for the horizon,
+  2. ask the run's Transport (repro.core.transport) for its schedule —
+     Theorem-3/4 power control for the OTA mechanisms, a trivial plan for
+     the digital/FO baselines,
+  3. run the rounds through one of two executors sharing ONE driver loop:
+       engine="scan": the device-resident scan-over-rounds engine
+         (core/engine.py) — `chunk_rounds` rounds per dispatch under one
+         lax.scan with parameter-buffer donation;
+       engine="loop" (default): per-round dispatch — no chunk compile
+         cost, and the bit-identical equivalence oracle for scan,
+  4. charge the DP accountant with the Transport's per-round costs (hard
+     stop on overspend — privacy over utility), handle faults (survival
+     masks), and fire the round hooks.
+
+Eval, checkpointing and logging are uniform `RoundHook`s shared by both
+engines: the driver aligns chunk boundaries to every hook cadence, so a
+hook fires at exactly the same rounds regardless of dispatch granularity.
+
+`run(...)` keeps the historical flat-kwarg surface (it builds the hooks and
+delegates); its `variant=`/`scheme=` kwargs are a one-release deprecation
+shim routed through the transport registry.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,17 +40,18 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ModelConfig, PairZeroConfig
 from repro.core import engine as eng
-from repro.core import ota, pairzero, power_control as pc
+from repro.core import ota, pairzero
+from repro.core import transport as tp
 from repro.core.dp import PrivacyAccountant
 from repro.data.pipeline import FederatedPipeline
 from repro.models import registry
 from repro.optim import fo as fo_opt
-from repro.runtime.fault import FaultModel, ElasticSchedule, combined_mask
+from repro.runtime.fault import ElasticSchedule, FaultModel
 
 
 @functools.lru_cache(maxsize=32)
 def _fo_scan_step(raw_step: Callable) -> Callable:
-    """Adapter: FO step's (params, opt_state) pair as a single scan carry.
+    """Adapter: FO step's (params, opt_state) pair as a single carry.
     Memoized on the (memoized) raw step so the executor cache hits too."""
     def scan_step(carry, batch, ctl):
         p, o, metrics = raw_step(carry[0], carry[1], batch, ctl)
@@ -61,7 +70,280 @@ class RunResult:
     wall_time_s: float = 0.0
     resumed_from: int = 0
     privacy_exhausted_at: int = -1   # round at which the guard tripped
+    uplink_bits: int = 0             # total uplink spend (Transport-accounted)
 
+
+# ---------------------------------------------------------------------------
+# Round hooks — eval / checkpoint / logging, uniform across engines
+# ---------------------------------------------------------------------------
+
+class RoundHook:
+    """Host-side side effect wired into the driver loop.
+
+    `cadence` (rounds) aligns chunk boundaries so `on_boundary` fires at
+    exactly the multiples it would under per-round dispatch. `on_round`
+    receives every round's host metrics (one chunk late under the scan
+    engine's software pipelining — never reordered).
+    """
+    cadence: int = 0
+
+    def on_start(self, exp: "Experiment") -> None:
+        """Before round execution; may restore state (params, accountant)."""
+
+    def on_round(self, t: int, metrics: Dict[str, np.ndarray]) -> None:
+        """Per executed round, with that round's host-side metrics."""
+
+    def on_boundary(self, t_done: int, exp: "Experiment") -> None:
+        """At every aligned chunk boundary (t_done rounds executed)."""
+
+    def close(self, exp: "Experiment") -> None:
+        """After the run (flush async work)."""
+
+
+class EvalHook(RoundHook):
+    """Greedy eval on the held-out batch every `cadence` rounds."""
+
+    def __init__(self, every: int, eval_n: int = 64):
+        self.cadence = every
+        self.eval_n = eval_n
+        self._fn = None
+
+    def on_start(self, exp: "Experiment") -> None:
+        model_cfg, impl, dtype = exp.model_cfg, exp.impl, exp.dtype
+        mod = registry.get_module(model_cfg)
+
+        def eval_fn(p, ebatch):
+            toks = jnp.asarray(ebatch["tokens"])
+            if model_cfg.family == "audio":
+                frames = jnp.zeros((toks.shape[0],
+                                    model_cfg.frontend.n_frontend_tokens,
+                                    model_cfg.d_model), dtype)
+                enc = mod.encode(p, model_cfg, frames, impl=impl)
+                x = mod.decode_hidden(p, model_cfg, toks, enc, impl=impl)
+            else:
+                x = mod.forward(p, model_cfg, toks, impl=impl)
+            from repro.models import layers as L
+            head = p.get("lm_head", p.get("embed", p.get("dec_embed")))
+            return L.unembed(head, x)
+
+        self._fn = jax.jit(eval_fn)
+
+    def on_boundary(self, t_done: int, exp: "Experiment") -> None:
+        if self.cadence and t_done % self.cadence == 0:
+            ebatch = exp.pipeline.eval_batch(self.eval_n)
+            logits = np.asarray(self._fn(exp.params, ebatch))
+            from repro.data import tasks as T
+            exp.result.accuracies.append(T.accuracy(logits, ebatch))
+
+
+class CheckpointHook(RoundHook):
+    """Crash-safe restore-on-start + async save every `cadence` rounds."""
+
+    def __init__(self, directory: str, every: int = 0):
+        self.directory = directory
+        self.cadence = every
+        self._saver = None
+
+    def on_start(self, exp: "Experiment") -> None:
+        latest = ckpt.latest(self.directory)
+        if latest:
+            exp.params, exp.start_round, extra = ckpt.restore(latest,
+                                                              exp.params)
+            exp.accountant = PrivacyAccountant.from_state_dict(
+                extra["accountant"])
+            exp.result.resumed_from = exp.start_round
+        if self.cadence:
+            self._saver = ckpt.AsyncCheckpointer(self.directory)
+
+    def on_boundary(self, t_done: int, exp: "Experiment") -> None:
+        if self._saver is not None and t_done % self.cadence == 0:
+            self._saver.save(
+                t_done, exp.params,
+                extra={"accountant": exp.accountant.state_dict(),
+                       "round": t_done})
+
+    def close(self, exp: "Experiment") -> None:
+        if self._saver is not None:
+            self._saver.wait()
+
+
+class CallbackHook(RoundHook):
+    """Per-round logging callback (the historical `on_round=` kwarg)."""
+
+    def __init__(self, fn: Callable[[int, Dict], None]):
+        self._fn = fn
+
+    def on_round(self, t: int, metrics: Dict[str, np.ndarray]) -> None:
+        self._fn(t, metrics)
+
+
+# ---------------------------------------------------------------------------
+# The orchestrator
+# ---------------------------------------------------------------------------
+
+class Experiment:
+    """One federated run: model + pAirZero config + data + a Transport.
+
+    The driver is deliberately boring: every interesting decision lives in
+    core/{zo,transport,dp,power_control,pairzero,engine}. Both engines run
+    the SAME loop here — chunk boundaries, control traces, DP lookahead and
+    hooks are shared; only the executor (per-round jit vs chunked lax.scan)
+    differs, which is what makes loop/scan bit-identity testable.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, pz: PairZeroConfig,
+                 pipeline: FederatedPipeline, rounds: int, *,
+                 engine: str = "loop", chunk_rounds: int = 32,
+                 transport: Optional[tp.Transport] = None,
+                 hooks: Sequence[RoundHook] = (),
+                 fault: Optional[FaultModel] = None,
+                 elastic: Optional[ElasticSchedule] = None,
+                 impl: Optional[str] = None, dtype=jnp.float32,
+                 params: Optional[Any] = None):
+        if engine not in ("scan", "loop"):
+            raise ValueError(
+                f"unknown engine: {engine!r} (want 'scan'|'loop')")
+        self.model_cfg = model_cfg
+        self.pz = pz
+        self.pipeline = pipeline
+        self.rounds = rounds
+        self.engine = engine
+        self.chunk_rounds = chunk_rounds
+        self.transport = transport if transport is not None \
+            else tp.resolve(pz)
+        self.hooks = list(hooks)
+        self.fault = fault
+        self.elastic = elastic
+        self.impl = impl
+        self.dtype = dtype
+        self.params = params
+        # populated by run()/hooks
+        self.result = RunResult()
+        self.accountant = PrivacyAccountant(pz.dp.epsilon, pz.dp.delta)
+        self.start_round = 0
+
+    # -- engine plumbing --------------------------------------------------
+    def _build_step(self):
+        """(step_fn, carry): the scan-body step and its initial carry."""
+        if self.transport.kind == "fo":
+            optimizer = fo_opt.make("adam", self.pz.zo.lr)
+            raw = pairzero.make_fo_step(self.model_cfg, optimizer,
+                                        impl=self.impl)
+            return _fo_scan_step(raw), (self.params,
+                                        optimizer.init(self.params))
+        raw = pairzero.make_zo_step(self.model_cfg, self.pz, impl=self.impl,
+                                    transport=self.transport)
+        return raw, self.params
+
+    def _executor(self, step_fn):
+        if self.engine == "scan":
+            return eng.get_executor(step_fn)
+        return eng.get_loop_executor(pairzero.jit_zo_step(step_fn))
+
+    # -- the run ----------------------------------------------------------
+    def run(self) -> RunResult:
+        t0 = time.time()
+        pz, result = self.pz, self.result
+        result.privacy_budget = self.accountant.budget
+
+        # channel + transmit schedule (the base station's offline solve).
+        # Solved over the PLANNED horizon (pz.rounds), not this invocation's
+        # `rounds`: Theorem 3/4 budget privacy across all T, and a resumed
+        # run must replay the identical schedule.
+        horizon = max(pz.rounds, self.rounds)
+        h = ota.draw_channels(pz.seed ^ 0xC4A7, horizon, pz.n_clients,
+                              pz.channel.fading)
+        schedule = self.transport.make_schedule(h, pz)
+
+        if self.params is None:
+            self.params = registry.init_params(jax.random.key(pz.seed),
+                                               self.model_cfg, self.dtype)
+        for hook in self.hooks:
+            hook.on_start(self)
+
+        step_fn, carry = self._build_step()
+        executor = self._executor(step_fn)
+        align = tuple(hk.cadence for hk in self.hooks if hk.cadence)
+        # The loop engine dispatches (and syncs) one round at a time — run
+        # it on 1-round spans so metrics/on_round stay live and batches
+        # transfer per round, exactly as per-round dispatch always did.
+        # Span length never changes numerics (trace values are split-
+        # invariant); only the scan engine benefits from longer spans.
+        span = 1 if self.engine == "loop" else self.chunk_rounds
+
+        # Software-pipelined chunk loop: the metric sync for chunk i is
+        # deferred until chunk i+1 has been *dispatched*, so the host-side
+        # prep of the next chunk (control trace, DP lookahead, batch
+        # stacking) overlaps the device executing the current one.
+        pending = None            # (first_round, n_rounds, metrics)
+        client_rounds = 0.0       # Σ_t K_eff(t) over executed rounds
+
+        def flush() -> None:
+            nonlocal pending
+            if pending is None:
+                return
+            a0, n_rounds, metrics = pending
+            pending = None
+            host = {k: np.asarray(v) for k, v in metrics.items()}
+            result.losses.extend(float(x) for x in host["loss"])
+            if "p_hat" in host:
+                result.p_hats.extend(float(x) for x in host["p_hat"])
+            for hook in self.hooks:
+                for r in range(n_rounds):
+                    hook.on_round(a0 + r, {k: v[r] for k, v in host.items()})
+
+        for a, b in eng.chunk_boundaries(self.start_round, self.rounds,
+                                         span, align):
+            trace = eng.build_trace(schedule, pz, a, b,
+                                    transport=self.transport,
+                                    fault=self.fault, elastic=self.elastic)
+            n_ok = eng.affordable_rounds(self.accountant, trace)
+            if n_ok == 0:
+                result.privacy_exhausted_at = a
+                break
+            eng.charge_rounds(self.accountant, trace, n_ok)
+            # uplink accounting: only clients that actually transmit
+            # (survival mask 1) are billed their payload this round
+            client_rounds += float(np.asarray(
+                trace.ctl["mask"][:n_ok]).sum())
+            batches = eng.stack_batches(self.pipeline, a, a + n_ok)
+            carry, metrics = executor.run(carry, trace.rows(n_ok), batches)
+            flush()               # sync chunk i-1 while chunk i runs
+            pending = (a, n_ok, metrics)
+            if self.engine == "loop":
+                # per-round dispatch already synced each round — deliver
+                # metrics/on_round immediately (live logging), nothing to
+                # pipeline against.
+                flush()
+            self.params = carry[0] if self.transport.kind == "fo" else carry
+            t_done = a + n_ok
+            if n_ok < b - a:      # guard tripped mid-chunk: hard stop
+                flush()
+                result.privacy_exhausted_at = t_done
+                break
+            for hook in self.hooks:
+                hook.on_boundary(t_done, self)
+        flush()
+
+        for hook in self.hooks:
+            hook.close(self)
+        result.steps = max(0, result.privacy_exhausted_at - self.start_round
+                           if result.privacy_exhausted_at >= 0
+                           else self.rounds - self.start_round)
+        result.privacy_spent = self.accountant.spent
+        # payload per transmitting client x Σ_t K_eff(t): dropped/silenced
+        # clients send nothing, so they cost nothing
+        result.uplink_bits = int(round(
+            self.transport.payload_bits(pz, self.model_cfg.param_count())
+            * client_rounds))
+        result.wall_time_s = time.time() - t0
+        result.params = self.params  # type: ignore[attr-defined]
+        return result
+
+
+# ---------------------------------------------------------------------------
+# Flat-kwarg compatibility surface
+# ---------------------------------------------------------------------------
 
 def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         pipeline: FederatedPipeline, rounds: int, *,
@@ -72,217 +354,34 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         elastic: Optional[ElasticSchedule] = None,
         impl: Optional[str] = None, dtype=jnp.float32,
         params: Optional[Any] = None,
-        on_round: Optional[Callable[[int, Dict], None]] = None) -> RunResult:
-    """Run T rounds of pAirZero (or the FO baseline) on one host.
+        on_round: Optional[Callable[[int, Dict], None]] = None,
+        transport: Optional[tp.Transport] = None,
+        variant: Optional[str] = None,
+        scheme: Optional[str] = None) -> RunResult:
+    """Run T rounds of pAirZero (or a baseline transport) on one host.
 
-    engine: "scan" (device-resident chunked lax.scan over rounds) or "loop"
-      (legacy per-round dispatch). For the ZO variants (analog/sign) the
-      two produce bit-identical trajectories at fixed seed; the FO baseline
-      agrees only to fp tolerance (~1e-7 — XLA fuses value_and_grad
-      differently under scan). Scan amortizes dispatch overhead over
-      `chunk_rounds` rounds per dispatch and is the high-throughput choice
-      once the chunk program is compiled (long horizons, repeated runs,
-      accelerators). "loop" remains the default so short/ad-hoc CPU runs
-      don't pay the chunk compile.
+    Thin wrapper over `Experiment`: builds the eval/checkpoint/logging
+    hooks from the historical kwargs and delegates. `variant=`/`scheme=`
+    are the DEPRECATED string spellings, routed through the transport
+    registry for one more release — pass `transport=` or put a
+    TransportConfig in `pz.transport` instead.
     """
-    if engine not in ("scan", "loop"):
-        raise ValueError(f"unknown engine: {engine!r} (want 'scan'|'loop')")
-    t0 = time.time()
-    k_clients = pz.n_clients
-    result = RunResult()
-
-    # --- channel + power schedule (the base station's offline solve) ---
-    # The schedule is solved over the PLANNED horizon (pz.rounds), not this
-    # invocation's `rounds`: Theorem 3/4 budgets privacy across all T, and a
-    # checkpoint-resumed run must replay the identical schedule.
-    horizon = max(pz.rounds, rounds)
-    h = ota.draw_channels(pz.seed ^ 0xC4A7, horizon, k_clients,
-                          pz.channel.fading)
-    if pz.variant in ("analog", "sign"):
-        schedule = pc.make_schedule(
-            pz.variant, pz.power.scheme, h,
-            power=pz.channel.power, n0=pz.channel.n0,
-            gamma=pz.zo.clip_gamma, n_clients=k_clients, e0=pz.power.e0,
-            contraction_a=pz.power.contraction_a,
-            contraction_a_tilde=pz.power.contraction_a_tilde,
-            epsilon=pz.dp.epsilon, delta=pz.dp.delta)
-    else:
-        schedule = pc.PowerSchedule(c=np.ones(horizon),
-                                    sigma=np.zeros((horizon, k_clients)),
-                                    scheme="perfect", n0=0.0)
-
-    accountant = PrivacyAccountant(pz.dp.epsilon, pz.dp.delta)
-    result.privacy_budget = accountant.budget
-
-    # --- model / step ---
-    if params is None:
-        params = registry.init_params(jax.random.key(pz.seed), model_cfg,
-                                      dtype)
-    mod = registry.get_module(model_cfg)
-
-    start_round = 0
-    if checkpoint_dir:
-        latest = ckpt.latest(checkpoint_dir)
-        if latest:
-            params, start_round, extra = ckpt.restore(latest, params)
-            accountant = PrivacyAccountant.from_state_dict(
-                extra["accountant"])
-            result.resumed_from = start_round
-
-    if pz.variant == "fo":
-        optimizer = fo_opt.make("adam", pz.zo.lr)
-        opt_state = optimizer.init(params)
-        raw_step = pairzero.make_fo_step(model_cfg, optimizer, impl=impl)
-        step = jax.jit(raw_step, donate_argnums=(0, 1))
-    else:
-        raw_step = pairzero.make_zo_step(model_cfg, pz, impl=impl)
-        step = pairzero.jit_zo_step(raw_step)
-        opt_state = None
-
-    checkpointer = None
-    if checkpoint_dir and checkpoint_every:
-        checkpointer = ckpt.AsyncCheckpointer(checkpoint_dir)
-
-    eval_fn = None
+    if variant is not None or scheme is not None:
+        tp.deprecated_strings(variant or pz.variant,
+                              scheme or pz.power.scheme, "fedsim.run")
+        pz = dataclasses.replace(
+            pz, variant=variant or pz.variant,
+            power=dataclasses.replace(pz.power,
+                                      scheme=scheme or pz.power.scheme),
+            transport=None)
+    hooks: List[RoundHook] = []
     if eval_every:
-        def eval_fn(p, ebatch):
-            toks = jnp.asarray(ebatch["tokens"])
-            x = mod.forward(p, model_cfg, toks, impl=impl) \
-                if model_cfg.family != "audio" else None
-            if model_cfg.family == "audio":
-                frames = jnp.zeros((toks.shape[0],
-                                    model_cfg.frontend.n_frontend_tokens,
-                                    model_cfg.d_model), dtype)
-                enc = mod.encode(p, model_cfg, frames, impl=impl)
-                x = mod.decode_hidden(p, model_cfg, toks, enc, impl=impl)
-            from repro.models import layers as L
-            head = p.get("lm_head", p.get("embed", p.get("dec_embed")))
-            return L.unembed(head, x)
-        eval_fn = jax.jit(eval_fn)
-
-    def run_eval(t_done: int) -> None:
-        ebatch = pipeline.eval_batch(eval_n)
-        logits = np.asarray(eval_fn(params, ebatch))
-        from repro.data import tasks as T
-        acc = T.accuracy(logits, ebatch)
-        result.accuracies.append(acc)
-
-    # --- round execution: scan engine (default) or legacy loop ---
-    if engine == "scan":
-        if pz.variant == "fo":
-            carry = (params, opt_state)
-            executor = eng.get_executor(_fo_scan_step(raw_step))
-        else:
-            carry = params
-            executor = eng.get_executor(raw_step)
-        align = (eval_every if eval_every else 0,
-                 checkpoint_every if checkpointer is not None else 0)
-
-        # Software-pipelined chunk loop: the metric sync for chunk i is
-        # deferred until chunk i+1 has been *dispatched*, so the host-side
-        # prep of the next chunk (control trace, DP lookahead, batch
-        # stacking) overlaps the device executing the current one. The
-        # per-round loop cannot do this — it blocks on every round's loss.
-        pending = None            # (first_round, n_rounds, device metrics)
-
-        def flush() -> None:
-            nonlocal pending
-            if pending is None:
-                return
-            a0, n0_rounds, metrics = pending
-            pending = None
-            host = {k: np.asarray(v) for k, v in metrics.items()}
-            result.losses.extend(float(x) for x in host["loss"])
-            if "p_hat" in host:
-                result.p_hats.extend(float(x) for x in host["p_hat"])
-            if on_round is not None:
-                for r in range(n0_rounds):
-                    on_round(a0 + r, {k: v[r] for k, v in host.items()})
-
-        for a, b in eng.chunk_boundaries(start_round, rounds, chunk_rounds,
-                                         align):
-            trace = eng.build_trace(schedule, pz, a, b,
-                                    fault=fault, elastic=elastic)
-            n_ok = eng.affordable_rounds(accountant, trace)
-            if n_ok == 0:
-                result.privacy_exhausted_at = a
-                break
-            eng.charge_rounds(accountant, trace, n_ok)
-            batches = eng.stack_batches(pipeline, a, a + n_ok)
-            carry, metrics = executor.run(carry, trace.rows(n_ok), batches)
-            flush()               # sync chunk i-1 while chunk i runs
-            pending = (a, n_ok, metrics)
-            if pz.variant == "fo":
-                params, opt_state = carry
-            else:
-                params = carry
-            t_done = a + n_ok
-            if n_ok < b - a:      # guard tripped mid-chunk: hard stop
-                flush()
-                result.privacy_exhausted_at = t_done
-                break
-            if eval_every and t_done % eval_every == 0:
-                run_eval(t_done)
-            if checkpointer is not None and t_done % checkpoint_every == 0:
-                checkpointer.save(
-                    t_done, params,
-                    extra={"accountant": accountant.state_dict(),
-                           "round": t_done})
-        flush()
-    else:
-        for t in range(start_round, rounds):
-            batch_np = pipeline.batch(t)
-            batch = {k: jnp.asarray(v) for k, v in batch_np.items()
-                     if k != "labels"}
-            mask = combined_mask(t, fault, elastic, n_clients=k_clients)
-            ctl = pairzero.make_control(t, schedule, pz.seed, k_clients,
-                                        mask=mask)
-
-            if pz.variant == "fo":
-                params, opt_state, metrics = step(params, opt_state, batch,
-                                                  ctl)
-            else:
-                if pz.dp.enabled and schedule.scheme != "perfect":
-                    # hard enforcement: a correct schedule sums exactly to the
-                    # budget over the horizon; this guard trips only on
-                    # misconfiguration (e.g. resuming with a different scheme)
-                    # and stops all further transmission — privacy over
-                    # utility.
-                    gamma_t = pz.zo.clip_gamma if pz.variant == "analog" \
-                        else 1.0
-                    if accountant.would_violate(
-                            float(schedule.c[t]), gamma_t,
-                            schedule.effective_noise_std(t), slack=1e-6):
-                        result.privacy_exhausted_at = t
-                        break
-                    accountant.charge(float(schedule.c[t]), gamma_t,
-                                      schedule.effective_noise_std(t))
-                params, metrics = step(params, batch, ctl)
-
-            loss = float(metrics["loss"])
-            result.losses.append(loss)
-            if "p_hat" in metrics:
-                result.p_hats.append(float(metrics["p_hat"]))
-
-            if eval_every and (t + 1) % eval_every == 0:
-                run_eval(t + 1)
-
-            if on_round is not None:
-                on_round(t, {"loss": loss, **{k: np.asarray(v)
-                                              for k, v in metrics.items()}})
-
-            if checkpointer is not None and (t + 1) % checkpoint_every == 0:
-                checkpointer.save(t + 1, params,
-                                  extra={"accountant":
-                                         accountant.state_dict(),
-                                         "round": t + 1})
-
-    if checkpointer is not None:
-        checkpointer.wait()
-    result.steps = (result.privacy_exhausted_at - start_round
-                    if result.privacy_exhausted_at >= 0
-                    else rounds - start_round)
-    result.privacy_spent = accountant.spent
-    result.wall_time_s = time.time() - t0
-    result.params = params  # type: ignore[attr-defined]
-    return result
+        hooks.append(EvalHook(eval_every, eval_n))
+    if checkpoint_dir:
+        hooks.append(CheckpointHook(checkpoint_dir, checkpoint_every))
+    if on_round is not None:
+        hooks.append(CallbackHook(on_round))
+    return Experiment(model_cfg, pz, pipeline, rounds, engine=engine,
+                      chunk_rounds=chunk_rounds, transport=transport,
+                      hooks=hooks, fault=fault, elastic=elastic, impl=impl,
+                      dtype=dtype, params=params).run()

@@ -130,12 +130,19 @@ def effective_noise_std(c: jnp.ndarray, sigma: jnp.ndarray,
 def aggregate(variant: str, scheme: str, p: jnp.ndarray, c: jnp.ndarray,
               sigma: jnp.ndarray, n0: jnp.ndarray, key: jax.Array,
               mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """Dispatch helper used by the step factory (static strings ⇒ traced once)."""
-    if scheme == "perfect":
-        return perfect_analog(p, mask) if variant == "analog" \
-            else perfect_sign(p, mask)
-    if variant == "analog":
-        return analog_ota(p, c, sigma, n0, key, mask)[0]
-    if variant == "sign":
-        return sign_ota(p, c, sigma, n0, key, mask)[0]
-    raise ValueError(f"unknown variant: {variant}")
+    """DEPRECATED string-dispatch shim — kept for one release.
+
+    Routes through the transport registry (repro.core.transport); new code
+    should build a Transport and call `transport.aggregate(p, ctl, key)`.
+    """
+    from repro.core import transport as tp
+    tp.deprecated_strings(variant, scheme, "ota.aggregate")
+    if variant not in ("analog", "sign"):
+        # the historical surface only ever spoke analog/sign; newer
+        # mechanisms (digital, ...) need run-config context the string API
+        # cannot carry — use the Transport registry directly.
+        raise ValueError(f"unknown variant: {variant}")
+    if mask is None:
+        mask = jnp.ones((p.shape[0],), dtype=p.dtype)
+    ctl = {"c": c, "sigma": sigma, "n0": n0, "mask": mask}
+    return tp.from_strings(variant, scheme).aggregate(p, ctl, key)

@@ -4,17 +4,18 @@ One round of Algorithm 1, as a single jitted function over the client mesh:
 
   1. every client evaluates its clipped gradient projection p_k from the
      shared round seed (two forwards, MeZO-chained — inference-level memory);
-  2. the OTA channel superposes c·(payload_k + n_k) + z and the server
-     inverts by (K_eff · c)  — on the mesh this is ONE scalar psum over the
-     client axes (the paper's O(1) communication claim, visible in HLO);
+  2. the round's Transport (repro.core.transport) recovers p̂ from the [K]
+     payload vector — for the OTA mechanisms that is superposition +
+     channel inversion, ONE scalar psum over the client axes (the paper's
+     O(1) communication claim, visible in HLO); for the digital baseline it
+     is per-slot decode + average;
   3. every replica applies w ← w − η p̂ z from the same seed (replicas stay
      bit-identical by construction — no parameter broadcast ever happens).
 
 Round-varying control (c(t), σ(t), round seed, survival mask, noise key) is
-passed as *data*, so the step compiles exactly once per shape.
-
-`variant`: "analog" | "sign" | "fo" (first-order FedSGD/Adam baseline, for
-the paper's Table II comparisons).
+passed as *data*, so the step compiles exactly once per shape. The uplink
+mechanism is part of the (hashable) config, so the memoized factories and
+jit caches key on it.
 """
 from __future__ import annotations
 
@@ -25,7 +26,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PairZeroConfig
-from repro.core import ota, zo
+from repro.core import transport as tp
+from repro.core import zo
 from repro.kernels.seeded_axpy import fmix32
 from repro.models import registry
 
@@ -43,16 +45,15 @@ def make_loss_fn(model_cfg: ModelConfig, impl: Optional[str] = None
     return loss_fn
 
 
-def control_spec(n_clients: int) -> Dict[str, jax.ShapeDtypeStruct]:
-    """Abstract shapes of the per-round control block (dry-run input spec)."""
-    return {
-        "seed": jax.ShapeDtypeStruct((), jnp.uint32),
-        "c": jax.ShapeDtypeStruct((), jnp.float32),
-        "sigma": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
-        "n0": jax.ShapeDtypeStruct((), jnp.float32),
-        "mask": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
-        "noise_bits": jax.ShapeDtypeStruct((2,), jnp.uint32),
-    }
+def control_spec(n_clients: int,
+                 transport: Optional[tp.Transport] = None
+                 ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract shapes of the per-round control block (dry-run input spec).
+
+    The spec is owned by the Transport; the default is the standard block
+    shared by every built-in mechanism."""
+    t = transport if transport is not None else tp.Transport()
+    return t.control_spec(n_clients)
 
 
 def make_control(t: int, schedule, base_seed: int, n_clients: int,
@@ -73,19 +74,23 @@ def make_control(t: int, schedule, base_seed: int, n_clients: int,
 @functools.lru_cache(maxsize=128)
 def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                  impl: Optional[str] = None,
-                 scheme: Optional[str] = None) -> Callable:
-    """Build the jitted ZO train step for `variant` ∈ {analog, sign}.
+                 scheme: Optional[str] = None,
+                 transport: Optional[tp.Transport] = None) -> Callable:
+    """Build the jitted ZO train step for any scalar-payload Transport
+    (analog / sign / perfect / digital / user-registered).
 
     Returns step(params, batch, ctl) → (new_params, metrics).
 
-    Memoized on the (frozen, hashable) configs: repeated runs with identical
-    configs get the *same* function object back, so jit/scan caches hit
-    instead of retracing — fedsim.run and the scan engine stay compile-once
-    across invocations (benchmarks, tests, resumed runs).
+    Memoized on the (frozen, hashable) configs and the (frozen, hashable)
+    Transport: repeated runs with identical configs get the *same* function
+    object back, so jit/scan caches hit instead of retracing — fedsim and
+    the scan engine stay compile-once across invocations (benchmarks,
+    tests, resumed runs). `scheme` is the deprecated string override kept
+    for one release; prefer `transport` or `pz.transport`.
     """
     loss_fn = make_loss_fn(model_cfg, impl=impl)
-    variant = pz.variant
-    scheme = scheme or pz.power.scheme
+    transport = transport if transport is not None \
+        else tp.resolve(pz, scheme=scheme)
     mu = pz.zo.mu
     lr = pz.zo.lr
     gamma = pz.zo.clip_gamma
@@ -105,10 +110,8 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                 lambda p: loss_fn(p, batch), params, seed, mu, mode=mode)
             p_k = zo.projection(lp, lm, mu, gamma)            # [K]
             noise_key = jax.random.wrap_key_data(ctl["noise_bits"])
-            p_hat = ota.aggregate(variant, scheme, p_k, ctl["c"],
-                                  ctl["sigma"], ctl["n0"],
-                                  jax.random.fold_in(noise_key, j),
-                                  ctl["mask"])
+            p_hat = transport.aggregate(p_k, ctl,
+                                        jax.random.fold_in(noise_key, j))
             # restore + update fused into one axpy (chained mode)
             params = zo.apply_update(params_at, seed, p_hat,
                                      lr / n_perturb, mu, mode=mode)

@@ -312,7 +312,12 @@ def make_schedule(variant: str, scheme: str, h: np.ndarray, *, power: float,
                   n0: float, gamma: float, n_clients: int, e0: float,
                   contraction_a: float, contraction_a_tilde: float,
                   epsilon: float, delta: float) -> PowerSchedule:
-    """Build a T-round schedule for (variant ∈ {analog, sign}) × scheme."""
+    """Build a T-round schedule for (variant ∈ {analog, sign}) × scheme.
+
+    Compatibility dispatcher: the schedule solve is owned by the Transport
+    (`Transport.make_schedule(h, pz)` in repro.core.transport), which calls
+    the solve_*/static_*/reversed_* functions above directly. This flat-
+    kwarg spelling remains for host-side tooling and tests."""
     if scheme == "perfect":
         T, K = np.asarray(h).shape
         return PowerSchedule(c=np.ones(T), sigma=np.zeros((T, K)),

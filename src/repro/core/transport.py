@@ -1,0 +1,395 @@
+"""Pluggable uplink mechanisms: the Transport protocol + registry.
+
+The paper's central claim is comparative — analog/sign OTA superposition vs
+conventional digital orthogonal transmission on communication, memory and
+privacy (Table II, Figs. 2-4). A `Transport` is one such uplink mechanism,
+owning everything that used to be string-dispatched across four modules:
+
+  (a) jit-side `aggregate(p_k, ctl, key) -> p_hat` plus the control-block
+      spec the step factory feeds it (`control_spec`),
+  (b) the host-side schedule solve (`make_schedule` — power control for the
+      OTA transports, trivial for digital/FO),
+  (c) the per-round DP cost charged to the accountant (`round_dp_costs`,
+      `charges_privacy`),
+  (d) the per-round communication cost in bits (`payload_bits` per client,
+      `bits_per_round` = payload x clients) — so Table II's comm column is
+      computed, not hard-coded.
+
+Mechanisms are frozen dataclasses (hashable, so the memoized step factories
+and the jit/scan caches key on them) registered by name:
+
+  analog   — analog pAirZero: clipped projection over superposing OTA
+             (Eqs. 8-9), channel inversion, Theorem-3 power control.
+  sign     — Sign-pAirZero: 1-bit sign over OTA (Eq. 11), Theorem-4 control.
+  perfect  — noise-free superposition upper bound (Eq. 38).
+  digital  — conventional baseline: per-client b-bit stochastic quantization
+             over orthogonal TDMA slots, no superposition, no DP mechanism.
+  fo       — first-order FedSGD/Adam baseline (d-dimensional uplink).
+
+New scenarios (imperfect CSI, straggler-aware schemes, RIS channels) plug in
+here: subclass `Transport`, decorate with `@register("name")`, and every
+engine, launcher and benchmark can run it. See README "Adding a transport".
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass
+from typing import Dict, Optional, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ota
+from repro.core.dp import round_privacy_cost
+
+# Power-control schemes understood by the OTA transports. "perfect" doubles
+# as the noise-free channel (no schedule solve, no DP spend).
+OTA_SCHEMES = ("solution", "static", "reversed", "perfect")
+
+
+# ---------------------------------------------------------------------------
+# Protocol
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Transport:
+    """One uplink mechanism. Subclass + `@register(name)` to add one.
+
+    Subclasses are frozen dataclasses: every field that changes the traced
+    computation (scheme, quantizer bits, clip range) is part of the hash, so
+    the lru-cached step factories retrace exactly when they must.
+    """
+
+    #: registry name (set by @register)
+    name = "?"
+    #: "zo" transports carry a scalar projection; "fo" carries full gradients
+    kind = "zo"
+
+    @classmethod
+    def from_config(cls, tc, pz) -> "Transport":
+        """Build an instance from a TransportConfig + run config. The default
+        suits parameter-free mechanisms; override to consume tc/pz fields
+        (scheme, quant_bits, clip range, ...)."""
+        return cls()
+
+    # -- jit side ---------------------------------------------------------
+    def aggregate(self, p: jnp.ndarray, ctl: Dict[str, jnp.ndarray],
+                  key: jax.Array) -> jnp.ndarray:
+        """Recover the server-side estimate p_hat from the [K] per-client
+        payload vector under this round's control block."""
+        raise NotImplementedError
+
+    def control_spec(self, n_clients: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Abstract shapes of the per-round control block this mechanism's
+        step consumes (dry-run input spec). The standard block serves every
+        built-in transport; override to add mechanism-specific fields."""
+        return {
+            "seed": jax.ShapeDtypeStruct((), jnp.uint32),
+            "c": jax.ShapeDtypeStruct((), jnp.float32),
+            "sigma": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
+            "n0": jax.ShapeDtypeStruct((), jnp.float32),
+            "mask": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
+            "noise_bits": jax.ShapeDtypeStruct((2,), jnp.uint32),
+        }
+
+    # -- host side --------------------------------------------------------
+    def make_schedule(self, h: np.ndarray, pz) -> "object":
+        """Solve the transmit plan for the horizon (a PowerSchedule).
+
+        `h` is the [T, K] block-fading trace; OTA transports run the
+        Theorem-3/4 solvers, non-OTA transports return a trivial plan."""
+        return _trivial_schedule(h, scheme="perfect")
+
+    def charges_privacy(self, schedule, pz) -> bool:
+        """Whether rounds under this transport spend (eps, delta) budget."""
+        return False
+
+    def round_dp_costs(self, schedule, t0: int, t1: int, pz) -> np.ndarray:
+        """Per-round DP cost vector for rounds [t0, t1) (Eq. 16 terms);
+        zeros when the mechanism provides no DP guarantee."""
+        return np.zeros(t1 - t0)
+
+    # -- communication accounting ----------------------------------------
+    def payload_bits(self, pz, d: int) -> int:
+        """Uplink bits ONE client sends per round (d = model dimension)."""
+        raise NotImplementedError
+
+    def bits_per_round(self, pz, d: int) -> int:
+        """Total uplink bits per round: payload x clients. OTA superposition
+        collapses K transmissions into one resource block, but every client
+        still radiates its payload — the accounting is per transmitted bit."""
+        return pz.n_clients * self.payload_bits(pz, d)
+
+
+def _trivial_schedule(h: np.ndarray, scheme: str = "perfect"):
+    from repro.core.power_control import PowerSchedule
+    t, k = np.asarray(h).shape
+    return PowerSchedule(c=np.ones(t), sigma=np.zeros((t, k)),
+                         scheme=scheme, n0=0.0)
+
+
+def ota_dp_costs(schedule, t0: int, t1: int, gamma: float) -> np.ndarray:
+    """Vectorized Eq.-16 terms, bit-equal to the per-round accountant path
+    (same float64 ops round for round)."""
+    c = np.asarray(schedule.c[t0:t1], dtype=np.float64)
+    sigma = np.asarray(schedule.sigma[t0:t1], dtype=np.float64)
+    m = np.sqrt(c * c * np.sum(sigma ** 2, axis=1) + schedule.n0)
+    return np.asarray([round_privacy_cost(float(c[r]), gamma, float(m[r]))
+                       if c[r] != 0.0 else 0.0 for r in range(len(c))])
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Transport]] = {}
+
+
+def register(name: str):
+    """Class decorator: `@register("analog")` adds a Transport to the
+    registry under `name` (and sets `cls.name`)."""
+    def deco(cls: Type[Transport]) -> Type[Transport]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Type[Transport]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown transport {name!r} "
+                         f"(registered: {available()})") from None
+
+
+def resolve(pz, scheme: Optional[str] = None) -> Transport:
+    """Build the Transport instance a PairZeroConfig asks for.
+
+    New-style configs carry `pz.transport` (a TransportConfig); legacy
+    configs are resolved from the free-floating `variant` + `power.scheme`
+    strings — the one-release deprecation shim."""
+    tc = getattr(pz, "transport", None)
+    if tc is not None:
+        return get(tc.mechanism).from_config(tc, pz)
+    return from_strings(pz.variant, scheme or pz.power.scheme, pz)
+
+
+def from_strings(variant: str, scheme: str, pz=None) -> Transport:
+    """Legacy (variant, scheme) strings -> Transport instance."""
+    if variant == "analog":
+        return AnalogOTA(scheme=scheme)
+    if variant == "sign":
+        return SignOTA(scheme=scheme)
+    if variant == "fo":
+        return FirstOrder()
+    if variant == "digital":
+        if pz is None:
+            raise ValueError("the digital transport needs run-config "
+                             "context (quantizer clip range) — build it "
+                             "via TransportConfig or DigitalTDMA directly")
+        return DigitalTDMA(clip=float(pz.zo.clip_gamma))
+    raise ValueError(f"unknown variant: {variant!r}")
+
+
+def deprecated_strings(variant: str, scheme: str, where: str) -> None:
+    warnings.warn(
+        f"{where}: string-dispatched variant={variant!r}/scheme={scheme!r} "
+        "is deprecated; pass a TransportConfig (configs.base) or a Transport "
+        "from repro.core.transport instead. The shim routes through the "
+        "transport registry and will be removed next release.",
+        DeprecationWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# OTA transports (analog / sign / perfect)
+# ---------------------------------------------------------------------------
+
+@register("analog")
+@dataclass(frozen=True)
+class AnalogOTA(Transport):
+    """Analog pAirZero: clipped fp projection over superposing OTA.
+
+    Payload: one fp16 scalar per perturbation direction (Table II's
+    "16 bits"); privacy: channel + artificial noise per Lemma 1."""
+    scheme: str = "solution"
+
+    @classmethod
+    def from_config(cls, tc, pz) -> "AnalogOTA":
+        return cls(scheme=tc.scheme)
+
+    def aggregate(self, p, ctl, key):
+        if self.scheme == "perfect":
+            return ota.perfect_analog(p, ctl["mask"])
+        return ota.analog_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
+                              ctl["mask"])[0]
+
+    def make_schedule(self, h, pz):
+        from repro.core import power_control as pc
+        if self.scheme == "perfect":
+            return _trivial_schedule(h)
+        kw = dict(power=pz.channel.power, n0=pz.channel.n0,
+                  gamma=pz.zo.clip_gamma, epsilon=pz.dp.epsilon,
+                  delta=pz.dp.delta)
+        if self.scheme == "solution":
+            return pc.solve_analog(h, contraction_a=pz.power.contraction_a,
+                                   **kw)
+        if self.scheme == "static":
+            return pc.static_analog(h, **kw)
+        if self.scheme == "reversed":
+            return pc.reversed_analog(
+                h, contraction_a=pz.power.contraction_a, **kw)
+        raise ValueError(f"unknown power-control scheme: {self.scheme!r} "
+                         f"(want one of {OTA_SCHEMES})")
+
+    def charges_privacy(self, schedule, pz) -> bool:
+        return bool(pz.dp.enabled and schedule.scheme != "perfect")
+
+    def round_dp_costs(self, schedule, t0, t1, pz):
+        return ota_dp_costs(schedule, t0, t1, pz.zo.clip_gamma)
+
+    def payload_bits(self, pz, d):
+        return 16 * pz.zo.n_perturb          # fp16 scalar per perturbation
+
+
+@register("sign")
+@dataclass(frozen=True)
+class SignOTA(AnalogOTA):
+    """Sign-pAirZero: 1-bit majority consensus via superposition (Eq. 11).
+
+    The sensitivity entering the DP cost is 1 (signs), not gamma."""
+    scheme: str = "solution"
+
+    def aggregate(self, p, ctl, key):
+        if self.scheme == "perfect":
+            return ota.perfect_sign(p, ctl["mask"])
+        return ota.sign_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
+                            ctl["mask"])[0]
+
+    def make_schedule(self, h, pz):
+        from repro.core import power_control as pc
+        if self.scheme == "perfect":
+            return _trivial_schedule(h)
+        kw = dict(power=pz.channel.power, n0=pz.channel.n0,
+                  epsilon=pz.dp.epsilon, delta=pz.dp.delta)
+        if self.scheme == "solution":
+            return pc.solve_sign(
+                h, n_clients=pz.n_clients, e0=pz.power.e0,
+                contraction_a_tilde=pz.power.contraction_a_tilde, **kw)
+        if self.scheme == "static":
+            return pc.static_sign(h, **kw)
+        if self.scheme == "reversed":
+            return pc.reversed_sign(
+                h, n_clients=pz.n_clients, e0=pz.power.e0,
+                contraction_a_tilde=pz.power.contraction_a_tilde, **kw)
+        raise ValueError(f"unknown power-control scheme: {self.scheme!r} "
+                         f"(want one of {OTA_SCHEMES})")
+
+    def round_dp_costs(self, schedule, t0, t1, pz):
+        return ota_dp_costs(schedule, t0, t1, 1.0)
+
+    def payload_bits(self, pz, d):
+        return 1 * pz.zo.n_perturb           # one sign per perturbation
+
+
+@register("perfect")
+@dataclass(frozen=True)
+class PerfectUplink(AnalogOTA):
+    """Noise-free superposition upper bound (Eq. 38) as a first-class
+    mechanism (legacy spelling: variant="analog", scheme="perfect")."""
+    scheme: str = "perfect"
+
+    @classmethod
+    def from_config(cls, tc, pz) -> "PerfectUplink":
+        return cls()
+
+
+# ---------------------------------------------------------------------------
+# Digital baseline (conventional orthogonal transmission)
+# ---------------------------------------------------------------------------
+
+def stochastic_quantize(p: jnp.ndarray, key: jax.Array, *, bits: int,
+                        clip: float) -> jnp.ndarray:
+    """Unbiased b-bit stochastic quantizer on [-clip, +clip].
+
+    The range is split into 2^b - 1 cells; a value is rounded to the upper
+    cell edge with probability equal to its fractional position, so
+    E[Q(p)] = clamp(p) exactly (QSGD-style dithering).
+    """
+    levels = jnp.float32(2 ** bits - 1)
+    half = jnp.float32(clip)
+    u = (jnp.clip(p, -half, half) + half) * (levels / (2.0 * half))
+    lo = jnp.floor(u)
+    up = (jax.random.uniform(key, p.shape, p.dtype) < (u - lo)
+          ).astype(p.dtype)
+    return (lo + up) * (2.0 * half / levels) - half
+
+
+@register("digital")
+@dataclass(frozen=True)
+class DigitalTDMA(Transport):
+    """Conventional digital uplink: b-bit stochastic quantization, one
+    orthogonal TDMA slot per client, no superposition, no DP mechanism.
+
+    This is the baseline pAirZero is compared against. Without the shared-
+    seed reconstruction trick, a conventional client must upload its whole
+    d-dimensional model update — quantized to `quant_bits` per coordinate —
+    so the payload scales with model size (Table II's FO-style comm column)
+    while OTA uploads a constant handful of bits. The trajectory-level
+    simulation applies the statistically equivalent scalar form: each
+    client's clipped projection is stochastically quantized and the base
+    station decodes every slot error-free and averages (TDMA at scheduled
+    SNR; quantization, not channel noise, is the distortion).
+
+    Privacy: none — digital orthogonal decoding exposes each client's
+    payload exactly (the trilemma's third corner). The accountant is never
+    charged and `charges_privacy` is False; pair with DPConfig(enabled=False)
+    or treat runs as non-private.
+    """
+    quant_bits: int = 8
+    clip: float = 1.0
+
+    @classmethod
+    def from_config(cls, tc, pz) -> "DigitalTDMA":
+        return cls(quant_bits=tc.quant_bits, clip=float(pz.zo.clip_gamma))
+
+    def aggregate(self, p, ctl, key):
+        mask = ctl["mask"].astype(p.dtype)
+        q = stochastic_quantize(p, key, bits=self.quant_bits, clip=self.clip)
+        return jnp.sum(mask * q) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def make_schedule(self, h, pz):
+        return _trivial_schedule(h, scheme="digital")
+
+    def payload_bits(self, pz, d):
+        # one combined d-dimensional update per round, b bits per coordinate
+        # (perturbation directions sum into a single uploaded vector)
+        return self.quant_bits * d
+
+
+# ---------------------------------------------------------------------------
+# First-order baseline
+# ---------------------------------------------------------------------------
+
+@register("fo")
+@dataclass(frozen=True)
+class FirstOrder(Transport):
+    """FO FedSGD/Adam baseline: full backprop + d-dimensional gradient
+    upload (fp16 per Table II) — the cost pAirZero eliminates."""
+    kind = "fo"
+
+    @classmethod
+    def from_config(cls, tc, pz) -> "FirstOrder":
+        return cls()
+
+    def aggregate(self, p, ctl, key):  # pragma: no cover - fo has no p_k
+        raise NotImplementedError("the FO baseline averages gradients in the "
+                                  "step itself; it has no scalar uplink")
+
+    def payload_bits(self, pz, d):
+        return 16 * d                        # fp16 gradient per round

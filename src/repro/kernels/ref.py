@@ -17,26 +17,50 @@ import jax.numpy as jnp
 # seeded_axpy: out = w + scale * z,  z = counter-hash N(0,1) stream from seed
 # ---------------------------------------------------------------------------
 
+# Trailing dims that are a multiple of one SIMD packet (16 f32 covers both
+# AVX2 and AVX-512) vectorize log/cos without scalar tails, so the native-
+# shape evaluation is bitwise identical to the kernel's lane-tiled one.
+_SIMD_PACKET = 16
+
+
 def draw_z_ref(shape, seed) -> jnp.ndarray:
     """The canonical z-stream: fmix32 counter hash + Box–Muller, identical to
     the Pallas kernel's in-VMEM generation (bitwise).
 
-    Element counters are built from per-dim broadcasted_iota (not a flat
-    arange + reshape): the chain stays purely elementwise, so GSPMD shards
-    z-generation along whatever sharding the consuming axpy has — z never
-    materializes replicated. Same global index values either way.
+    Counters are always flat element indices, so the stream's VALUES are a
+    pure function of (seed, index) — but the last ulp of log/cos depends on
+    how XLA:CPU vectorizes the evaluating loop. Two regimes:
+
+    * SIMD-exact trailing dim (every real model leaf): counters come from
+      per-dim broadcasted_iota and the chain stays purely elementwise in
+      the consumer's own shape — it fuses into the consuming axpy (z never
+      materializes), shards with the consumer under GSPMD, and compiles
+      identically inside lax.scan and standalone jit (the engine bitwise
+      invariant). No scalar libm tails, so it is bitwise equal to the
+      kernel's lane-tiled evaluation.
+    * awkward trailing dim (e.g. [64, 50]): native evaluation has shape-
+      dependent scalar libm tails — the historical 1-2 ulp pallas-interpret
+      drift. Evaluate on the kernel's canonical [rows, LANE] layout behind
+      an optimization barrier so fusion cannot drag the transcendentals
+      back into the consumer's iteration space (the barrier materializes z
+      for these shapes — the price of bitwise stability off the lane grid).
     """
-    from repro.kernels.seeded_axpy import gaussian_from_counter
-    if not shape:
-        idx = jnp.zeros((), jnp.uint32)
-    else:
+    from repro.kernels.seeded_axpy import LANE, gaussian_from_counter
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    if shape and shape[-1] % _SIMD_PACKET == 0:
         idx = jnp.zeros(shape, jnp.uint32)
         for k in range(len(shape)):
             stride_k = np_prod(shape[k + 1:]) & 0xFFFFFFFF
             idx = idx + jax.lax.broadcasted_iota(
                 jnp.uint32, shape, k) * jnp.uint32(stride_k)
-    z = gaussian_from_counter(idx, jnp.asarray(seed).astype(jnp.uint32))
-    return z
+        return gaussian_from_counter(idx, seed)
+    n = np_prod(shape) if shape else 1
+    rows = (n + LANE - 1) // LANE
+    idx = (jax.lax.broadcasted_iota(jnp.uint32, (rows, LANE), 0)
+           * jnp.uint32(LANE)
+           + jax.lax.broadcasted_iota(jnp.uint32, (rows, LANE), 1))
+    z = jax.lax.optimization_barrier(gaussian_from_counter(idx, seed))
+    return z.reshape(-1)[:n].reshape(shape)
 
 
 def np_prod(dims) -> int:

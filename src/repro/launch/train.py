@@ -1,8 +1,12 @@
 """Training launcher: federated pAirZero fine-tuning from the CLI.
 
     PYTHONPATH=src python -m repro.launch.train \
-        --arch opt-125m --task sst2 --variant analog --scheme solution \
+        --arch opt-125m --task sst2 --transport analog --scheme solution \
         --rounds 800 --clients 5 --lr 5e-7 --checkpoint-dir ckpt/
+
+The uplink mechanism is any registered Transport (analog | sign | perfect |
+digital | fo — see repro.core.transport); `--variant` remains as a
+deprecated alias for one release.
 
 On a real multi-host TPU fleet this process runs once per host after
 jax.distributed.initialize() (see launch/scripts/); on CPU it runs the same
@@ -17,8 +21,8 @@ import json
 import jax.numpy as jnp
 
 from repro.configs.base import (ChannelConfig, DPConfig, PairZeroConfig,
-                                PowerControlConfig, ZOConfig)
-from repro.core import fedsim
+                                PowerControlConfig, TransportConfig, ZOConfig)
+from repro.core import fedsim, transport
 from repro.data.pipeline import FederatedPipeline
 from repro.data.tasks import TaskSpec
 from repro.models import registry
@@ -33,10 +37,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="use the reduced same-family config (CPU-scale)")
     ap.add_argument("--task", default="sst2",
                     choices=["sst2", "squad", "lm"])
+    ap.add_argument("--transport", default=None,
+                    help="uplink mechanism from the transport registry "
+                         f"{transport.available()}; default: --variant")
     ap.add_argument("--variant", default="analog",
-                    choices=["analog", "sign", "fo"])
+                    choices=["analog", "sign", "fo"],
+                    help="DEPRECATED alias for --transport")
     ap.add_argument("--scheme", default="solution",
-                    choices=["solution", "static", "reversed", "perfect"])
+                    choices=["solution", "static", "reversed", "perfect"],
+                    help="power-control schedule for the OTA transports")
+    ap.add_argument("--quant-bits", type=int, default=8,
+                    help="bits/coordinate for --transport digital")
     ap.add_argument("--rounds", type=int, default=800)
     ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
                     help="round executor: per-round dispatch (loop) or the "
@@ -75,6 +86,7 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
 
+    mechanism = args.transport or args.variant
     pz = PairZeroConfig(
         variant=args.variant, n_clients=args.clients, rounds=args.rounds,
         zo=ZOConfig(mu=args.mu, lr=args.lr, clip_gamma=args.gamma,
@@ -82,7 +94,10 @@ def main() -> None:
         channel=ChannelConfig(n0=args.n0, power=args.power,
                               d=cfg.param_count()),
         dp=DPConfig(epsilon=args.epsilon, delta=args.delta),
-        power=PowerControlConfig(scheme=args.scheme), seed=args.seed)
+        power=PowerControlConfig(scheme=args.scheme),
+        transport=TransportConfig(mechanism=mechanism, scheme=args.scheme,
+                                  quant_bits=args.quant_bits),
+        seed=args.seed)
 
     pipe = FederatedPipeline(
         task=args.task,
@@ -114,9 +129,10 @@ def main() -> None:
                      on_round=log)
 
     summary = {
-        "arch": cfg.name, "variant": args.variant, "scheme": args.scheme,
+        "arch": cfg.name, "transport": mechanism, "scheme": args.scheme,
         "engine": args.engine,
         "rounds": res.steps,
+        "uplink_bits": res.uplink_bits,
         "final_loss": res.losses[-1] if res.losses else None,
         "accuracies": res.accuracies,
         "privacy_spent": res.privacy_spent,

@@ -1,0 +1,195 @@
+"""Transport protocol: registry, digital baseline, bit accounting, shims."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TransportConfig
+from repro.core import fedsim, ota
+from repro.core import transport as tp
+from repro.core.transport import stochastic_quantize
+from repro.models import registry
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtin_mechanisms():
+    assert set(tp.available()) >= {"analog", "sign", "perfect", "digital",
+                                   "fo"}
+    with pytest.raises(ValueError, match="unknown transport"):
+        tp.get("carrier-pigeon")
+
+
+def test_resolve_prefers_transport_config(make_pz):
+    import dataclasses
+    pz = dataclasses.replace(make_pz(variant="analog"),
+                             transport=TransportConfig("sign", "static"))
+    t = tp.resolve(pz)
+    assert isinstance(t, tp.SignOTA) and t.scheme == "static"
+
+
+def test_resolve_legacy_strings(make_pz):
+    t = tp.resolve(make_pz(variant="sign", scheme="reversed"))
+    assert isinstance(t, tp.SignOTA) and t.scheme == "reversed"
+    assert isinstance(tp.resolve(make_pz(variant="fo")), tp.FirstOrder)
+
+
+def test_transports_are_hashable_config_keys():
+    """Frozen dataclasses: equal configs hit the memoized step factories."""
+    assert tp.AnalogOTA("static") == tp.AnalogOTA("static")
+    assert hash(tp.DigitalTDMA(8, 5.0)) == hash(tp.DigitalTDMA(8, 5.0))
+    assert tp.DigitalTDMA(8, 5.0) != tp.DigitalTDMA(4, 5.0)
+
+
+def test_control_spec_owned_by_transport():
+    spec = tp.AnalogOTA().control_spec(5)
+    assert set(spec) == {"seed", "c", "sigma", "n0", "mask", "noise_bits"}
+    assert spec["sigma"].shape == (5,)
+
+
+# ---------------------------------------------------------------------------
+# Digital baseline: quantizer, trajectory, accounting
+# ---------------------------------------------------------------------------
+
+def test_stochastic_quantization_unbiased():
+    """Mean over draws ≈ identity on the clip range (QSGD dithering)."""
+    p = jnp.asarray([0.37, -1.62, 4.9, 0.0, -3.141, 5.0, -5.0])
+    draws = np.stack([
+        np.asarray(stochastic_quantize(p, jax.random.key(i), bits=4,
+                                       clip=5.0))
+        for i in range(6000)])
+    np.testing.assert_allclose(draws.mean(axis=0), np.asarray(p), atol=0.02)
+    # every draw lands on a quantizer level
+    levels = np.linspace(-5.0, 5.0, 2 ** 4)
+    dist = np.abs(draws[:100, :, None] - levels[None, None, :]).min(axis=-1)
+    assert dist.max() < 1e-5
+
+
+def test_stochastic_quantization_clips_outliers():
+    p = jnp.asarray([123.0, -456.0])
+    q = np.asarray(stochastic_quantize(p, jax.random.key(0), bits=8,
+                                       clip=1.0))
+    np.testing.assert_allclose(q, [1.0, -1.0])
+
+
+def test_digital_bit_accounting_exact(make_pz):
+    """bits_per_round == K * payload_bits, and payload scales with model d
+    (the conventional baseline uploads one full quantized update per round,
+    regardless of how many perturbation directions produced it)."""
+    pz = make_pz(n_perturb=2)
+    t = tp.DigitalTDMA(quant_bits=8, clip=pz.zo.clip_gamma)
+    d = 12345
+    assert t.payload_bits(pz, d) == 8 * d
+    assert t.bits_per_round(pz, d) == pz.n_clients * t.payload_bits(pz, d)
+
+
+def test_digital_comm_dwarfs_ota_at_opt125m_reduced(make_pz):
+    """Table II at opt-125m-reduced scale: the digital baseline's per-round
+    communication exceeds both OTA mechanisms by orders of magnitude."""
+    cfg = registry.get_arch("opt-125m").reduced()
+    d = cfg.param_count()
+    pz = make_pz()
+    digital = tp.DigitalTDMA(quant_bits=8).bits_per_round(pz, d)
+    analog = tp.AnalogOTA().bits_per_round(pz, d)
+    sign = tp.SignOTA().bits_per_round(pz, d)
+    assert digital > 1000 * analog
+    assert digital > 1000 * sign
+    # and the FO baseline is even heavier (fp16 vs 8-bit coordinates)
+    assert tp.FirstOrder().bits_per_round(pz, d) > digital
+
+
+def test_digital_runs_and_spends_no_privacy(tiny_model, make_pz,
+                                            make_pipeline):
+    """The digital transport trains (finite losses), charges nothing to the
+    DP accountant (no mechanism — the trilemma's third corner), and is
+    bit-identical across engines."""
+    import dataclasses
+    pz = dataclasses.replace(make_pz(rounds=6),
+                             transport=TransportConfig("digital",
+                                                       quant_bits=8))
+    res_l = fedsim.run(tiny_model, pz, make_pipeline(), rounds=6,
+                       engine="loop")
+    res_s = fedsim.run(tiny_model, pz, make_pipeline(), rounds=6,
+                       engine="scan", chunk_rounds=4)
+    assert np.isfinite(res_l.losses).all() and len(res_l.losses) == 6
+    assert res_l.privacy_spent == 0.0
+    assert res_l.losses == res_s.losses
+    assert res_l.uplink_bits == 6 * tp.resolve(pz).bits_per_round(
+        pz, tiny_model.param_count())
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: old string API == new transport API, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_string_shim_bit_identical_trajectories(tiny_model, make_pz,
+                                                make_pipeline):
+    """fedsim.run(..., variant=, scheme=) warns and reproduces the new
+    TransportConfig API bit for bit at fixed seed — both engines."""
+    import dataclasses
+    pz_new = dataclasses.replace(
+        make_pz(rounds=6), transport=TransportConfig("analog", "static"))
+    pz_legacy = make_pz(rounds=6, variant="analog", scheme="perfect")
+    for engine in ("loop", "scan"):
+        res_new = fedsim.run(tiny_model, pz_new, make_pipeline(), rounds=6,
+                             engine=engine, chunk_rounds=4)
+        with pytest.deprecated_call():
+            res_old = fedsim.run(tiny_model, pz_legacy, make_pipeline(),
+                                 rounds=6, engine=engine, chunk_rounds=4,
+                                 variant="analog", scheme="static")
+        assert res_old.losses == res_new.losses, engine
+        assert res_old.p_hats == res_new.p_hats, engine
+        assert res_old.privacy_spent == res_new.privacy_spent, engine
+
+
+def test_ota_aggregate_shim_warns_and_matches():
+    p = jnp.asarray([1.0, -2.0, 3.0, 0.5, -0.5])
+    c = jnp.float32(2.0)
+    sigma = jnp.full((5,), 0.3, jnp.float32)
+    n0 = jnp.float32(1.0)
+    key = jax.random.key(3)
+    with pytest.deprecated_call():
+        old = ota.aggregate("analog", "solution", p, c, sigma, n0, key)
+    ctl = {"c": c, "sigma": sigma, "n0": n0,
+           "mask": jnp.ones((5,), jnp.float32)}
+    new = tp.AnalogOTA("solution").aggregate(p, ctl, key)
+    assert np.asarray(old) == np.asarray(new)
+    with pytest.deprecated_call():
+        old_sign = ota.aggregate("sign", "perfect", p, c, sigma, n0, key)
+    assert float(old_sign) == float(tp.SignOTA("perfect").aggregate(
+        p, ctl, key))
+
+
+def test_perfect_transport_is_noise_free_mean(make_pz):
+    pz = make_pz()
+    t = tp.get("perfect").from_config(TransportConfig("perfect"), pz)
+    ctl = {"mask": jnp.ones((3,), jnp.float32)}
+    p = jnp.asarray([1.0, 2.0, 3.0])
+    assert float(t.aggregate(p, ctl, jax.random.key(0))) == 2.0
+    sched = t.make_schedule(np.ones((4, 3)), pz)
+    assert sched.scheme == "perfect" and not t.charges_privacy(sched, pz)
+
+
+# ---------------------------------------------------------------------------
+# DP cost ownership
+# ---------------------------------------------------------------------------
+
+def test_round_dp_costs_match_accountant_path(make_pz):
+    """Transport-reported per-round costs equal the classic per-round
+    charge(c, gamma, m) sequence bit for bit."""
+    from repro.core.dp import PrivacyAccountant
+    pz = make_pz(scheme="static", rounds=12)
+    h = ota.draw_channels(pz.seed ^ 0xC4A7, 12, pz.n_clients, "rayleigh")
+    t = tp.resolve(pz)
+    sched = t.make_schedule(h, pz)
+    costs = t.round_dp_costs(sched, 0, 12, pz)
+    acc = PrivacyAccountant(pz.dp.epsilon, pz.dp.delta)
+    for r in range(12):
+        acc.charge(float(sched.c[r]), pz.zo.clip_gamma,
+                   sched.effective_noise_std(r))
+    np.testing.assert_array_equal(acc.history, costs)
+    assert acc.spent == sum(float(c) for c in costs)  # same fold order
