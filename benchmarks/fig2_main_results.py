@@ -5,10 +5,16 @@ Table I. Reduced setting (CPU): tiny same-family transformer, synthetic
 task analogues, T configurable (default 400), lr grid scaled to the model.
 
     PYTHONPATH=src python -m benchmarks.fig2_main_results \
-        [--rounds 400] [--task sst2] [--snrs 0,10,20] [--grid]
+        [--rounds 400] [--task sst2] [--snrs 0,10,20] [--grid] \
+        [--channel rician] [--csi-phase-err 0.1] [--mechanisms analog,sign]
+
+The run grid speaks TransportConfig + ChannelConfig, so any registered
+transport or channel model appears in Fig. 2 by naming it — no legacy
+variant/scheme strings, no shims.
 
 Writes results/fig2_<task>.json and prints a summary table: for each SNR,
-accuracy of {Perfect, pAirZero(Solution), Sign-pAirZero(Solution)}.
+accuracy of each mechanism point (default: Perfect, pAirZero(Solution),
+Sign-pAirZero(Solution)).
 """
 from __future__ import annotations
 
@@ -19,7 +25,8 @@ import os
 import numpy as np
 
 from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
-                                PairZeroConfig, PowerControlConfig, ZOConfig)
+                                PairZeroConfig, PowerControlConfig,
+                                TransportConfig, ZOConfig)
 from repro.core import fedsim
 from repro.data.pipeline import FederatedPipeline
 from repro.data.tasks import TaskSpec
@@ -28,22 +35,35 @@ TINY = ModelConfig(name="tiny-opt", family="dense", n_layers=2, d_model=64,
                    n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=64,
                    head_dim=16)
 
+# The Fig. 2 curves as (label, TransportConfig) points. Any registered
+# mechanism slots in here (or via --mechanisms) without touching run_point.
+CURVES = {
+    "perfect": TransportConfig("perfect", "perfect"),
+    "pairzero": TransportConfig("analog", "solution"),
+    "sign_pairzero": TransportConfig("sign", "solution"),
+    "analog": TransportConfig("analog", "solution"),
+    "sign": TransportConfig("sign", "solution"),
+    "digital": TransportConfig("digital", quant_bits=8),
+}
+
 # Table I analogue, scaled to the reduced model (paper grid spans 1.5 orders
 # of magnitude around the selected value; ours does the same)
-LR_GRID = {"analog": (2e-3, 5e-3, 1e-2), "sign": (5e-3, 2e-2, 5e-2)}
+LR_GRID = {"sign": (5e-3, 2e-2, 5e-2)}
+LR_GRID_DEFAULT = (2e-3, 5e-3, 1e-2)
 
 
-def run_point(task, variant, scheme, snr_db, rounds, lr, seed=0,
-              epsilon=5.0):
+def run_point(task, tc: TransportConfig, snr_db, rounds, lr, seed=0,
+              epsilon=5.0, channel_kw=None):
     d = 1  # payload dimension per round (one scalar)
     n0 = 1.0
     power = n0 * d * (10 ** (snr_db / 10.0))
     pz = PairZeroConfig(
-        variant=variant, n_clients=5, rounds=rounds,
+        n_clients=5, rounds=rounds,
         zo=ZOConfig(mu=1e-3, lr=lr, clip_gamma=5.0, n_perturb=4),
-        channel=ChannelConfig(n0=n0, power=power, d=d),
+        channel=ChannelConfig(n0=n0, power=power, d=d, **(channel_kw or {})),
         dp=DPConfig(epsilon=epsilon, delta=0.01),
-        power=PowerControlConfig(scheme=scheme), seed=seed)
+        power=PowerControlConfig(scheme=tc.scheme),
+        transport=tc, seed=seed)
     pipe = FederatedPipeline(task=task, spec=TaskSpec(task, 64, 24),
                              n_clients=5, per_client_batch=8, seed=seed)
     res = fedsim.run(TINY, pz, pipe, rounds=rounds,
@@ -62,26 +82,37 @@ def main() -> None:
                     help="paper setting ε=5 requires its T=8000 horizon; "
                          "ε=50 shows the SNR trend at the reduced T")
     ap.add_argument("--trials", type=int, default=1)
+    ap.add_argument("--mechanisms",
+                    default="perfect,pairzero,sign_pairzero",
+                    help=f"comma-separated curve labels from {list(CURVES)}")
+    ap.add_argument("--channel", default=None,
+                    help="channel-registry model for every point "
+                         "(default rayleigh)")
+    ap.add_argument("--rician-k", type=float, default=3.0)
+    ap.add_argument("--csi-phase-err", type=float, default=0.0)
+    ap.add_argument("--outage-db", type=float, default=None)
     args = ap.parse_args()
     snrs = [float(s) for s in args.snrs.split(",")]
+    channel_kw = dict(model=args.channel, rician_k=args.rician_k,
+                      phase_err_std=args.csi_phase_err,
+                      outage_db=args.outage_db)
 
     rows = []
     for snr in snrs:
         row = {"snr_db": snr}
-        for label, variant, scheme in (
-                ("perfect", "analog", "perfect"),
-                ("pairzero", "analog", "solution"),
-                ("sign_pairzero", "sign", "solution")):
-            lrs = LR_GRID["sign" if variant == "sign" else "analog"]
+        for label in args.mechanisms.split(","):
+            tc = CURVES[label]
+            lrs = LR_GRID.get(tc.mechanism, LR_GRID_DEFAULT)
             if not args.grid:
                 lrs = lrs[1:2]
             best = None
             for lr in lrs:
                 accs = []
                 for trial in range(args.trials):
-                    acc, loss = run_point(args.task, variant, scheme, snr,
+                    acc, loss = run_point(args.task, tc, snr,
                                           args.rounds, lr, seed=trial,
-                                          epsilon=args.epsilon)
+                                          epsilon=args.epsilon,
+                                          channel_kw=channel_kw)
                     accs.append(acc)
                 acc = float(np.mean(accs))
                 if best is None or acc > best[0]:

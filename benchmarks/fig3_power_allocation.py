@@ -47,7 +47,7 @@ def main() -> None:
         losses = [rows[o]["final_loss"] for o in order]
         print(f"\nloss ordering @{eps} (expect nondecreasing):",
               " <= ".join(f"{o.split('@')[0]}:{v:.3f}"
-                          for o, v in zip(order, losses)))
+                          for o, v in zip(order, losses, strict=True)))
 
 
 if __name__ == "__main__":

@@ -83,8 +83,9 @@ def bench_ota():
 
 
 def bench_power_control():
-    from repro.core import ota, power_control as pc
-    h = ota.draw_channels(0, 8000, 5)   # paper horizon T=8000
+    from repro import channel
+    from repro.core import power_control as pc
+    h = channel.RayleighFading().realize(0, 8000, 5).h  # paper horizon T=8000
 
     def solve():
         return pc.solve_analog(h, power=100.0, n0=1.0, gamma=100.0,

@@ -16,9 +16,10 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
+from repro import channel
 from repro.configs.base import (ChannelConfig, DPConfig, PairZeroConfig,
                                 ZOConfig)
-from repro.core import dp, ota
+from repro.core import dp
 from repro.core import transport as tp
 
 
@@ -31,7 +32,8 @@ def main() -> None:
     ap.add_argument("--delta", type=float, default=0.01)
     args = ap.parse_args()
 
-    h = ota.draw_channels(0, args.rounds, args.clients)
+    trace = channel.RayleighFading().realize(0, args.rounds,
+                                             args.clients)
     budget = dp.r_dp(args.epsilon, args.delta)
     print(f"R_dp(ε={args.epsilon}, δ={args.delta}) = {budget:.4f}")
 
@@ -43,10 +45,10 @@ def main() -> None:
         channel=ChannelConfig(n0=1.0, power=args.power),
         dp=DPConfig(epsilon=args.epsilon, delta=args.delta))
     schedules = {
-        "solution": tp.AnalogOTA(scheme="solution").make_schedule(h, pz),
-        "static": tp.AnalogOTA(scheme="static").make_schedule(h, pz),
-        "reversed": tp.AnalogOTA(scheme="reversed").make_schedule(h, pz),
-        "sign_solution": tp.SignOTA(scheme="solution").make_schedule(h, pz),
+        "solution": tp.AnalogOTA(scheme="solution").make_schedule(trace, pz),
+        "static": tp.AnalogOTA(scheme="static").make_schedule(trace, pz),
+        "reversed": tp.AnalogOTA(scheme="reversed").make_schedule(trace, pz),
+        "sign_solution": tp.SignOTA(scheme="solution").make_schedule(trace, pz),
     }
 
     print(f"\n{'scheme':14s} {'c(1)':>10s} {'c(T/2)':>10s} {'c(T)':>10s} "
@@ -71,7 +73,7 @@ def main() -> None:
         for t in range(args.rounds):
             f.write(f"{t}," + ",".join(f"{s.c[t]:.6e}"
                                        for s in schedules.values())
-                    + f",{h[t].min():.4f}\n")
+                    + f",{trace.h[t].min():.4f}\n")
     print("\nwrote results/power_schedules.csv")
 
 

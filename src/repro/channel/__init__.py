@@ -1,0 +1,52 @@
+"""First-class wireless channel subsystem: models, traces, registry.
+
+The paper's system model (Sec. III-B) reduces the physical layer to a
+block-fading magnitude h_k(t) entering the superposition y = Σ h_k x_k + z
+(Eq. 4) under perfect pre-compensation h_k α_k = c(t) (Eq. 5) — which is
+exactly what `ota.draw_channels` hardcoded. This package makes the channel
+a pluggable, composable model so Theorem 3's claim (privacy consistent
+*regardless of channel conditions*) can actually be stressed:
+
+  model            paper anchor                      what it realizes
+  ---------------  --------------------------------  ------------------------
+  rayleigh         Sec. VII-A simulation setup       h ~ CN(0,1), E[|h|²]=1,
+                                                     i.i.d. block fading (the
+                                                     fading entering Eq. 4)
+  static           Eq. 38 noise-free ablations       h ≡ 1 (AWGN-only)
+  rician           Sec. III-B fading generalization  LOS K/(K+1) + scatter
+                                                     CN(0,1/(K+1)); K=0 ≡
+                                                     rayleigh bitwise
+  ar1              block-fading assumption relaxed   Jakes-like AR(1) complex
+                                                     Gaussian; ρ=0 ≡ rayleigh
+                                                     bitwise
+  geometry         power constraint (C2)/(C4)        log-distance path loss →
+                                                     per-client mean powers in
+                                                     the power-cap min over k
+  imperfect_csi    Eq. 5 pre-compensation residual   h_k α_k = c e^{jθ_k}; the
+                                                     receiver superposes cos θ
+                                                     weighted payloads (Eq. 4
+                                                     no longer inverts exactly)
+  outage           survival mask K_t (Sec. III-C)    deep-fade participation
+                                                     mask → straggler-aware
+                                                     uplink accounting
+
+`ChannelModel.realize(seed, rounds, n_clients)` synthesizes a host-side
+`ChannelTrace` (magnitudes, residual phases, participation); fedsim hands
+the trace to the Transport's schedule solve and the engine packs its
+per-round views (cos θ factors, participation masks) into the device-
+resident ControlTrace consumed inside `lax.scan`. See README "Adding a
+channel model".
+"""
+from repro.channel.models import (AR1Correlated, RayleighFading,
+                                  RicianFading, StaticChannel)
+from repro.channel.registry import (ChannelModel, available, from_config,
+                                    get, realize_from_config, register)
+from repro.channel.trace import ChannelTrace
+from repro.channel.wrappers import ImperfectCSI, OutageModel, PathLossGeometry
+
+__all__ = [
+    "AR1Correlated", "ChannelModel", "ChannelTrace", "ImperfectCSI",
+    "OutageModel", "PathLossGeometry", "RayleighFading", "RicianFading",
+    "StaticChannel", "available", "from_config", "get",
+    "realize_from_config", "register",
+]

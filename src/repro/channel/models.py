@@ -1,0 +1,125 @@
+"""Small-scale fading models: Rayleigh, Rician, Static, AR(1)-correlated.
+
+All synthesis is host-side numpy with `np.random.default_rng(seed)` — the
+channel is a base-station-side realization, drawn once per horizon, never a
+jitted device computation. Draw *order* is part of the contract: Rayleigh
+draws the [T, K] real parts then the [T, K] imaginary parts, and every
+model below that generalizes Rayleigh reuses that exact order, which is
+what makes the special cases (Rician K=0, AR(1) ρ=0) *bitwise* equal to
+Rayleigh at the same seed — and the `rayleigh` model itself bitwise equal
+to the historical `ota.draw_channels` trace, so PR-1/PR-2 trajectories
+reproduce.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.channel.registry import ChannelModel, register
+from repro.channel.trace import ChannelTrace
+
+
+def _complex_normal_parts(rng: np.random.Generator, rounds: int,
+                          n_clients: int) -> tuple:
+    """([T,K], [T,K]) re/im parts of CN(0, 1): per-component std 1/√2."""
+    re = rng.normal(size=(rounds, n_clients)) / np.sqrt(2.0)
+    im = rng.normal(size=(rounds, n_clients)) / np.sqrt(2.0)
+    return re, im
+
+
+@register("rayleigh")
+@dataclass(frozen=True)
+class RayleighFading(ChannelModel):
+    """i.i.d. block fading, h ~ CN(0, 1): |h| Rayleigh, E[|h|²] = 1
+    (paper Sec. VII-A's simulated channel)."""
+
+    def realize(self, seed: int, rounds: int,
+                n_clients: int) -> ChannelTrace:
+        rng = np.random.default_rng(seed)
+        re, im = _complex_normal_parts(rng, rounds, n_clients)
+        return ChannelTrace(h=np.sqrt(re * re + im * im),
+                            meta={"model": self.name})
+
+
+@register("static")
+@dataclass(frozen=True)
+class StaticChannel(ChannelModel):
+    """h ≡ 1: AWGN-only channel (the fading-free ablation)."""
+
+    def realize(self, seed: int, rounds: int,
+                n_clients: int) -> ChannelTrace:
+        return ChannelTrace(h=np.ones((rounds, n_clients)),
+                            meta={"model": self.name})
+
+
+@register("rician")
+@dataclass(frozen=True)
+class RicianFading(ChannelModel):
+    """Rician block fading: a line-of-sight component of power K/(K+1) plus
+    CN(0, 1/(K+1)) scatter, so E[|h|²] = 1 for every K-factor.
+
+    K = 0 degenerates to Rayleigh — bitwise, at equal seed (the scatter
+    draw reuses Rayleigh's order and the LOS/scale factors are exactly
+    0.0/1.0).
+    """
+    k_factor: float = 3.0
+
+    @classmethod
+    def from_config(cls, cc) -> "RicianFading":
+        return cls(k_factor=float(cc.rician_k))
+
+    def realize(self, seed: int, rounds: int,
+                n_clients: int) -> ChannelTrace:
+        if self.k_factor < 0.0:
+            raise ValueError(f"rician K-factor must be >= 0, "
+                             f"got {self.k_factor}")
+        rng = np.random.default_rng(seed)
+        re, im = _complex_normal_parts(rng, rounds, n_clients)
+        los = np.sqrt(self.k_factor / (self.k_factor + 1.0))
+        scatter = np.sqrt(1.0 / (self.k_factor + 1.0))
+        re = los + scatter * re
+        im = scatter * im
+        return ChannelTrace(h=np.sqrt(re * re + im * im),
+                            meta={"model": self.name,
+                                  "k_factor": self.k_factor})
+
+
+@register("ar1")
+@dataclass(frozen=True)
+class AR1Correlated(ChannelModel):
+    """Jakes-like temporally correlated Rayleigh fading.
+
+    The underlying complex Gaussian follows a stationary AR(1) per client:
+
+        x_0 = w_0,   x_t = ρ x_{t-1} + √(1-ρ²) w_t,   w_t ~ CN(0, 1)
+
+    so E[|h|²] = 1 at every lag and corr(x_t, x_{t+1}) = ρ (power
+    correlation ρ² — the discrete-time stand-in for Jakes' J₀(2πf_D τ)
+    profile). ρ = 0 recovers i.i.d. block fading *bitwise* (the ρ·x term
+    is exactly 0 and the √(1-ρ²) scale exactly 1), which is how block-
+    fading independence becomes a special case rather than a separate
+    code path.
+    """
+    rho: float = 0.9
+
+    @classmethod
+    def from_config(cls, cc) -> "AR1Correlated":
+        return cls(rho=float(cc.ar1_rho))
+
+    def realize(self, seed: int, rounds: int,
+                n_clients: int) -> ChannelTrace:
+        if not 0.0 <= self.rho < 1.0:
+            raise ValueError(f"ar1 rho must be in [0, 1), got {self.rho}")
+        rng = np.random.default_rng(seed)
+        re_w, im_w = _complex_normal_parts(rng, rounds, n_clients)
+        rho = self.rho
+        innov = np.sqrt(1.0 - rho * rho)
+        re = np.empty_like(re_w)
+        im = np.empty_like(im_w)
+        re[0], im[0] = re_w[0], im_w[0]
+        for t in range(1, rounds):
+            re[t] = rho * re[t - 1] + innov * re_w[t]
+            im[t] = rho * im[t - 1] + innov * im_w[t]
+        return ChannelTrace(h=np.sqrt(re * re + im * im),
+                            meta={"model": self.name, "rho": rho})

@@ -1,0 +1,101 @@
+"""ChannelModel protocol + registry (mirrors repro.core.transport).
+
+A ChannelModel owns host-side trace synthesis: `realize(seed, rounds,
+n_clients) -> ChannelTrace`. Models are frozen dataclasses — hashable, so
+run configs that embed them stay hashable and memoized factories key on
+them — registered by name:
+
+  @register("rician")
+  @dataclass(frozen=True)
+  class RicianFading(ChannelModel):
+      k_factor: float = 3.0
+      ...
+
+Composition is explicit: wrapper models (PathLossGeometry, ImperfectCSI,
+OutageModel) hold a `base` ChannelModel field and post-process its trace.
+`from_config(ChannelConfig)` builds the composed stack a run config asks
+for; `realize_from_config` is the one-call convenience fedsim uses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Type
+
+from repro.channel.trace import ChannelTrace
+
+
+@dataclass(frozen=True)
+class ChannelModel:
+    """One wireless channel model. Subclass + `@register(name)` to add one.
+
+    Subclasses are frozen dataclasses: every parameter that changes the
+    realized trace (K-factor, correlation, thresholds) is part of equality
+    and hash.
+    """
+
+    #: registry name (set by @register)
+    name = "?"
+
+    @classmethod
+    def from_config(cls, cc) -> "ChannelModel":
+        """Build an instance from a ChannelConfig. The default suits
+        parameter-free models; override to consume config fields."""
+        return cls()
+
+    def realize(self, seed: int, rounds: int,
+                n_clients: int) -> ChannelTrace:
+        """Synthesize the [T, K] channel trace for this seed/horizon."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Type[ChannelModel]] = {}
+
+
+def register(name: str):
+    """Class decorator: `@register("rayleigh")` adds a ChannelModel to the
+    registry under `name` (and sets `cls.name`)."""
+    def deco(cls: Type[ChannelModel]) -> Type[ChannelModel]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Type[ChannelModel]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown channel model {name!r} "
+                         f"(registered: {available()})") from None
+
+
+def from_config(cc) -> ChannelModel:
+    """Build the (possibly wrapped) ChannelModel a ChannelConfig asks for.
+
+    `cc.model` names the small-scale fading base (falling back to the
+    legacy `cc.fading` string); geometry / imperfect-CSI / outage wrappers
+    are stacked on top when their config fields are set. Wrapper order is
+    fixed — geometry scales magnitudes, CSI error rotates phases, outage
+    thresholds the result — so equal configs compose identical stacks.
+    """
+    from repro.channel import wrappers as wr
+    base_name = cc.model or cc.fading
+    model = get(base_name).from_config(cc)
+    if cc.cell_radius > 0.0:
+        model = wr.PathLossGeometry(base=model, cell_radius=cc.cell_radius,
+                                    pathloss_exp=cc.pathloss_exp)
+    if cc.phase_err_std > 0.0:
+        model = wr.ImperfectCSI(base=model, phase_err_std=cc.phase_err_std)
+    if cc.outage_db is not None:
+        model = wr.OutageModel(base=model, threshold_db=cc.outage_db)
+    return model
+
+
+def realize_from_config(cc, seed: int, rounds: int,
+                        n_clients: int) -> ChannelTrace:
+    """One-call convenience: config -> composed model -> realized trace."""
+    return from_config(cc).realize(seed, rounds, n_clients)

@@ -1,0 +1,85 @@
+"""ChannelTrace: one realized wireless channel for a training horizon.
+
+A trace is the *output* of a ChannelModel's host-side synthesis — everything
+the base station learns (or mis-learns) about the physical layer before a
+round executes:
+
+  h             [T, K] true channel magnitudes |h_k(t)| — what the Theorem-3/4
+                power-control solves consume (magnitude CSI is assumed known;
+                the modeled imperfection is residual *phase* error).
+  phase         [T, K] residual phase error θ_k(t) (radians) left over after
+                pre-compensation. Perfect CSI ⇒ θ ≡ 0, and the standard OTA
+                assumption h_k α_k = c(t) holds exactly. Imperfect CSI rotates
+                each client's aligned signal by e^{jθ}; the coherent receiver
+                keeps the real part, so the per-client effective-gain factor
+                entering the superposition is cos θ (the `csi` view below).
+  participation [T, K] 0/1 outage mask — 1 means client k's SNR clears the
+                deep-fade threshold and it transmits in round t. Feeds the
+                survival-mask plumbing (ota superposition, K_eff inversion,
+                mask-aware uplink-bit accounting, straggler-aware TDMA).
+
+The trace is host-side numpy (float64, like the power-control solves); the
+engine packs the per-round slices it needs (csi factors, participation) into
+the device-resident ControlTrace consumed inside `lax.scan`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ChannelTrace:
+    """Realized channel for T rounds and K clients (see module docstring)."""
+    h: np.ndarray                    # [T, K] float64 magnitudes
+    phase: np.ndarray = None         # [T, K] float64 residual phase error
+    participation: np.ndarray = None  # [T, K] float32 0/1 outage mask
+    meta: dict = field(default_factory=dict)   # model provenance (name, params)
+
+    def __post_init__(self):
+        h = np.asarray(self.h, dtype=np.float64)
+        object.__setattr__(self, "h", h)
+        if self.phase is None:
+            object.__setattr__(self, "phase", np.zeros_like(h))
+        if self.participation is None:
+            object.__setattr__(
+                self, "participation", np.ones(h.shape, dtype=np.float32))
+        if self.phase.shape != h.shape or self.participation.shape != h.shape:
+            raise ValueError(
+                f"trace field shapes disagree: h{h.shape} "
+                f"phase{self.phase.shape} "
+                f"participation{self.participation.shape}")
+
+    # -- shape ------------------------------------------------------------
+    @property
+    def rounds(self) -> int:
+        return int(self.h.shape[0])
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.h.shape[1])
+
+    # -- derived views ----------------------------------------------------
+    @property
+    def gain(self) -> np.ndarray:
+        """[T, K] complex effective gains h·e^{jθ} after pre-compensation."""
+        return self.h * np.exp(1j * self.phase)
+
+    @property
+    def csi(self) -> np.ndarray:
+        """[T, K] per-client effective-gain factor cos θ ∈ [-1, 1].
+
+        This is what the coherent OTA receiver actually sees per client:
+        perfect CSI ⇒ exactly 1.0 (so multiplying by it is a bitwise no-op
+        in the jitted step)."""
+        return np.cos(self.phase)
+
+    def mean_power(self) -> np.ndarray:
+        """[K] per-client mean channel power E_t[|h_k|²] — the quantity a
+        PathLossGeometry wrapper skews away from the unit-power symmetry."""
+        return np.mean(self.h ** 2, axis=0)
+
+    def outage_rate(self) -> float:
+        """Fraction of (t, k) slots lost to deep fade."""
+        return float(1.0 - np.mean(self.participation))

@@ -1,0 +1,168 @@
+"""Wrapper channel models: geometry, imperfect CSI, deep-fade outage.
+
+Each wrapper is itself a registered ChannelModel holding a `base` model; it
+realizes the base trace and post-processes exactly one physical aspect:
+
+  PathLossGeometry  scales magnitudes by per-client large-scale gains from
+                    a cell placement + log-distance path loss (breaks the
+                    unit-mean-power symmetry the power-cap constraint
+                    silently assumed),
+  ImperfectCSI      adds residual phase error to the pre-compensation (the
+                    h_k α_k = c alignment no longer holds exactly),
+  OutageModel       thresholds instantaneous channel power into a per-round
+                    participation mask (deep-fade stragglers).
+
+Wrapper randomness uses seeds derived from the run seed with fixed XOR
+tags, independent of the base draw — wrapping never perturbs the base
+fading realization, so `ImperfectCSI(base).h == base.h` bitwise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.channel.models import RayleighFading
+from repro.channel.registry import ChannelModel, register
+from repro.channel.trace import ChannelTrace
+
+# seed tags: keep wrapper RNG streams disjoint from the base fading draw
+# (which consumes the raw seed) and from each other
+_GEOMETRY_TAG = 0x6E0
+_CSI_TAG = 0xC51
+
+
+class _WrapperFromConfig:
+    """Wrappers are registered (introspection, docs, direct construction)
+    but are NOT base models: selecting one via ChannelConfig.model would
+    silently ignore its config fields and then double-wrap it. Point the
+    user at the config fields that compose the wrapper instead."""
+
+    _select_via = "?"
+
+    @classmethod
+    def from_config(cls, cc) -> "ChannelModel":
+        raise ValueError(
+            f"channel model {cls.name!r} is a wrapper, not a base fading "
+            f"model: pick a base (e.g. model='rayleigh') and set "
+            f"{cls._select_via} to compose it (see "
+            "repro.channel.registry.from_config)")
+
+
+@register("geometry")
+@dataclass(frozen=True)
+class PathLossGeometry(_WrapperFromConfig, ChannelModel):
+    """Cell geometry + 3GPP-style log-distance path loss over a base model.
+
+    Clients are placed uniformly by area in the annulus
+    [0.05·cell_radius, cell_radius] around the base station (placement is a
+    function of the run seed — one cell layout per run, constant over
+    rounds). Path loss follows the log-distance law
+
+        PL_k ∝ pathloss_exp · 10 log10(d_k / d_ref)   [dB]
+
+    and the resulting linear power gains are normalized to mean 1 across
+    clients: the *relative* heterogeneity (near clients strong, edge
+    clients weak) is what matters to the power-cap min over k in the
+    Theorem-3/4 solves, while the absolute link budget stays comparable to
+    the unit-power configs every baseline was tuned against.
+    """
+    _select_via = "cell_radius > 0"
+    base: ChannelModel = field(default_factory=RayleighFading)
+    cell_radius: float = 100.0      # meters
+    pathloss_exp: float = 3.76      # 3GPP UMa-style NLOS exponent
+
+    def client_gains(self, seed: int, n_clients: int) -> np.ndarray:
+        """[K] linear per-client power gains (mean 1 across the cell)."""
+        if self.cell_radius <= 0.0:
+            raise ValueError(f"cell_radius must be > 0, "
+                             f"got {self.cell_radius}")
+        rng = np.random.default_rng(seed ^ _GEOMETRY_TAG)
+        r_min = 0.05 * self.cell_radius
+        # uniform by area on the annulus [r_min, cell_radius]
+        u = rng.random(n_clients)
+        d = np.sqrt(u * (self.cell_radius ** 2 - r_min ** 2) + r_min ** 2)
+        pl_db = 10.0 * self.pathloss_exp * np.log10(d / r_min)
+        g = 10.0 ** (-pl_db / 10.0)
+        return g / np.mean(g)
+
+    def realize(self, seed: int, rounds: int,
+                n_clients: int) -> ChannelTrace:
+        base = self.base.realize(seed, rounds, n_clients)
+        g = self.client_gains(seed, n_clients)
+        return ChannelTrace(h=base.h * np.sqrt(g)[None, :],
+                            phase=base.phase,
+                            participation=base.participation,
+                            meta={**base.meta, "geometry": "pathloss",
+                                  "cell_radius": self.cell_radius,
+                                  "pathloss_exp": self.pathloss_exp,
+                                  "client_gains": g})
+
+
+@register("imperfect_csi")
+@dataclass(frozen=True)
+class ImperfectCSI(_WrapperFromConfig, ChannelModel):
+    """Residual phase error in the OTA pre-compensation.
+
+    Magnitude CSI stays perfect (the power-control solve still sees the
+    true |h|), but each client's phase alignment misses by
+    θ_k(t) ~ N(0, phase_err_std²) i.i.d. per slot. The coherent receiver's
+    real part then superposes cos θ_k-weighted signals instead of perfectly
+    aligned ones — an attenuation *and* a client-dependent bias the
+    transports must read from the trace rather than recompute from
+    magnitudes. phase_err_std = 0 draws θ ≡ 0 exactly, keeping the perfect-
+    CSI path bitwise intact.
+    """
+    _select_via = "phase_err_std > 0"
+    base: ChannelModel = field(default_factory=RayleighFading)
+    phase_err_std: float = 0.1      # radians
+
+    def realize(self, seed: int, rounds: int,
+                n_clients: int) -> ChannelTrace:
+        if self.phase_err_std < 0.0:
+            raise ValueError(f"phase_err_std must be >= 0, "
+                             f"got {self.phase_err_std}")
+        base = self.base.realize(seed, rounds, n_clients)
+        rng = np.random.default_rng(seed ^ _CSI_TAG)
+        theta = self.phase_err_std * rng.normal(size=base.h.shape)
+        return ChannelTrace(h=base.h, phase=base.phase + theta,
+                            participation=base.participation,
+                            meta={**base.meta,
+                                  "phase_err_std": self.phase_err_std})
+
+
+@register("outage")
+@dataclass(frozen=True)
+class OutageModel(_WrapperFromConfig, ChannelModel):
+    """Deep-fade outage: clients whose instantaneous channel power drops
+    below the threshold miss the round (straggle) instead of transmitting.
+
+    participation_k(t) = 1{ |h_k(t)|² ≥ 10^(threshold_db/10) }.
+
+    The threshold is absolute, in dB relative to unit mean power — for the
+    unit-power Rayleigh base the per-slot outage probability is the
+    analytic CDF 1 - exp(-10^(threshold_db/10)), and under a geometry
+    wrapper the weak cell-edge clients straggle more often, exactly the
+    heterogeneity a straggler-aware schedule has to survive. If every
+    client of a round fades out, the strongest one is re-admitted (the
+    server falls back to the best pilot — mirrors FaultModel's never-empty
+    convention, and keeps OTA inversion by K_eff ≥ 1 meaningful).
+    """
+    _select_via = "outage_db"
+    base: ChannelModel = field(default_factory=RayleighFading)
+    threshold_db: float = -10.0
+
+    def realize(self, seed: int, rounds: int,
+                n_clients: int) -> ChannelTrace:
+        base = self.base.realize(seed, rounds, n_clients)
+        tau = 10.0 ** (self.threshold_db / 10.0)
+        up = (base.h ** 2 >= tau).astype(np.float32)
+        participation = base.participation * up
+        empty = participation.sum(axis=1) == 0
+        if np.any(empty):
+            rows = np.flatnonzero(empty)
+            participation[rows, np.argmax(base.h[rows], axis=1)] = 1.0
+        return ChannelTrace(h=base.h, phase=base.phase,
+                            participation=participation,
+                            meta={**base.meta,
+                                  "outage_db": self.threshold_db})

@@ -43,7 +43,8 @@ def save(directory: str, step: int, params: PyTree,
     os.makedirs(tmp)
 
     names, leaves, _ = _leaf_paths(params)
-    arrays = {n: np.asarray(l) for n, l in zip(names, leaves)}
+    arrays = {n: np.asarray(leaf)
+              for n, leaf in zip(names, leaves, strict=True)}
     npz_path = os.path.join(tmp, "arrays.npz")
     np.savez(npz_path, **arrays)
 
@@ -123,7 +124,7 @@ def restore(path: str, params_like: PyTree
 
     names, leaves, treedef = _leaf_paths(params_like)
     restored = []
-    for n, like in zip(names, leaves):
+    for n, like in zip(names, leaves, strict=True):
         arr = data[n]
         crc = zlib.crc32(arr.tobytes())
         if crc != manifest["crc32"][n]:

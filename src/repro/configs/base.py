@@ -190,11 +190,28 @@ class ZOConfig:
 
 @dataclass(frozen=True)
 class ChannelConfig:
-    """Block-fading wireless channel (paper Sec. III-B)."""
+    """Wireless channel (paper Sec. III-B), realized by repro.channel.
+
+    `model` names a registered ChannelModel (rayleigh | rician | static |
+    ar1 | anything user-registered); the geometry / imperfect-CSI / outage
+    wrappers stack on top when their fields are set (see
+    repro.channel.registry.from_config). `fading` is the DEPRECATED
+    pre-registry spelling, kept one release as the fallback when `model`
+    is None — the default config (rayleigh, perfect CSI, no outage)
+    realizes the bit-identical trace the historical `ota.draw_channels`
+    produced.
+    """
     n0: float = 1.0                 # server noise power N0
     power: float = 100.0            # per-client power budget P
-    fading: str = "rayleigh"        # rayleigh | static
+    fading: str = "rayleigh"        # DEPRECATED alias for `model`
     d: int = 1                      # model dimension (enters (C2) + SNR_max)
+    model: Optional[str] = None     # channel-registry name; None → `fading`
+    rician_k: float = 3.0           # K-factor for model="rician"
+    ar1_rho: float = 0.9            # lag-1 correlation for model="ar1"
+    phase_err_std: float = 0.0      # >0 → ImperfectCSI wrapper (radians)
+    outage_db: Optional[float] = None   # set → OutageModel threshold (dB)
+    cell_radius: float = 0.0        # >0 → PathLossGeometry wrapper (meters)
+    pathloss_exp: float = 3.76      # log-distance path-loss exponent
 
     @property
     def snr_max(self) -> float:     # Eq. (37)

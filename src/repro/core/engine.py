@@ -54,6 +54,7 @@ class ControlTrace:
 
     `ctl` mirrors `pairzero.make_control` exactly, with a leading round axis:
       seed [R] u32, c [R] f32, sigma [R,K] f32, n0 [R] f32, mask [R,K] f32,
+      g [R,K] f32 (per-client cos θ CSI factors from the channel trace),
       noise_bits [R,2] u32.
     """
     t0: int
@@ -80,13 +81,21 @@ def _noise_bits_trace(key_base: jax.Array, ts: jnp.ndarray) -> jnp.ndarray:
 
 
 def build_trace(schedule, pz, t0: int, t1: int, *,
-                transport=None, fault=None, elastic=None) -> ControlTrace:
+                transport=None, fault=None, elastic=None,
+                channel=None) -> ControlTrace:
     """Precompute the control trace for rounds [t0, t1).
 
     Mask generation consumes the (stateful) FaultModel RNG in round order, so
     calling build_trace over consecutive chunks replays the identical fault
     trace the per-round loop would draw. DP accounting (per-round cost,
     whether the rounds are charged at all) is delegated to the Transport.
+
+    `channel` is the horizon's realized ChannelTrace (repro.channel); its
+    per-round views ride device-resident inside the scanned chunk: cos θ
+    CSI factors as ctl["g"], deep-fade participation folded into
+    ctl["mask"] alongside the fault/elastic survival masks. None (or a
+    perfect-CSI, no-outage trace) reproduces the historical control block
+    bit for bit.
     """
     if transport is None:
         transport = tp.resolve(pz)
@@ -106,6 +115,22 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
         masks = np.stack([combined_mask(int(t), fault, elastic, n_clients=k)
                           for t in ts])
 
+    if channel is None:
+        g = np.ones((rounds, k), dtype=np.float32)
+    else:
+        g = np.asarray(np.cos(channel.phase[t0:t1]), dtype=np.float32)
+        participation = np.asarray(channel.participation[t0:t1], np.float32)
+        survival = masks                 # fault/elastic view, pre-outage
+        masks = masks * participation
+        # outage x faults can zero a whole round even though each mask
+        # alone never does; re-admit the strongest FAULT-SURVIVING client
+        # that round (combined_mask's never-empty convention, pilot-
+        # informed — a crashed client must never be resurrected)
+        empty = np.flatnonzero(masks.sum(axis=1) == 0)
+        if empty.size:
+            h_rows = np.asarray(channel.h[t0:t1])[empty] * survival[empty]
+            masks[empty, np.argmax(h_rows, axis=1)] = 1.0
+
     c_slice = np.asarray(schedule.c[t0:t1], dtype=np.float64)
     sigma_slice = np.asarray(schedule.sigma[t0:t1], dtype=np.float64)
     ctl = {
@@ -114,6 +139,7 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
         "sigma": jnp.asarray(sigma_slice, jnp.float32),
         "n0": jnp.full((rounds,), schedule.n0, jnp.float32),
         "mask": jnp.asarray(masks, jnp.float32),
+        "g": jnp.asarray(g, jnp.float32),
         "noise_bits": noise_bits.astype(jnp.uint32),
     }
 

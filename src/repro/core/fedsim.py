@@ -3,7 +3,9 @@
 `Experiment` is the single host-side orchestrator (what the edge server +
 base station do):
 
-  1. draw the block-fading channel trace h_k(t) for the horizon,
+  1. realize the wireless channel for the horizon via the channel registry
+     (repro.channel: fading magnitudes, residual CSI phases, deep-fade
+     participation — whatever stack pz.channel configures),
   2. ask the run's Transport (repro.core.transport) for its schedule —
      Theorem-3/4 power control for the OTA mechanisms, a trivial plan for
      the digital/FO baselines,
@@ -37,10 +39,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import channel
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ModelConfig, PairZeroConfig
 from repro.core import engine as eng
-from repro.core import ota, pairzero
+from repro.core import pairzero
 from repro.core import transport as tp
 from repro.core.dp import PrivacyAccountant
 from repro.data.pipeline import FederatedPipeline
@@ -195,6 +198,7 @@ class Experiment:
                  pipeline: FederatedPipeline, rounds: int, *,
                  engine: str = "loop", chunk_rounds: int = 32,
                  transport: Optional[tp.Transport] = None,
+                 channel_model: Optional[channel.ChannelModel] = None,
                  hooks: Sequence[RoundHook] = (),
                  fault: Optional[FaultModel] = None,
                  elastic: Optional[ElasticSchedule] = None,
@@ -211,6 +215,10 @@ class Experiment:
         self.chunk_rounds = chunk_rounds
         self.transport = transport if transport is not None \
             else tp.resolve(pz)
+        # explicit ChannelModel overrides the pz.channel config stack
+        # (mirrors `transport=`) — how user-built/wrapped models run
+        self.channel_model = channel_model if channel_model is not None \
+            else channel.from_config(pz.channel)
         self.hooks = list(hooks)
         self.fault = fault
         self.elastic = elastic
@@ -247,13 +255,13 @@ class Experiment:
         result.privacy_budget = self.accountant.budget
 
         # channel + transmit schedule (the base station's offline solve).
-        # Solved over the PLANNED horizon (pz.rounds), not this invocation's
-        # `rounds`: Theorem 3/4 budget privacy across all T, and a resumed
-        # run must replay the identical schedule.
+        # Realized/solved over the PLANNED horizon (pz.rounds), not this
+        # invocation's `rounds`: Theorem 3/4 budget privacy across all T,
+        # and a resumed run must replay the identical channel + schedule.
         horizon = max(pz.rounds, self.rounds)
-        h = ota.draw_channels(pz.seed ^ 0xC4A7, horizon, pz.n_clients,
-                              pz.channel.fading)
-        schedule = self.transport.make_schedule(h, pz)
+        ctrace = self.channel_model.realize(pz.seed ^ 0xC4A7, horizon,
+                                            pz.n_clients)
+        schedule = self.transport.make_schedule(ctrace, pz)
 
         if self.params is None:
             self.params = registry.init_params(jax.random.key(pz.seed),
@@ -296,7 +304,8 @@ class Experiment:
                                          span, align):
             trace = eng.build_trace(schedule, pz, a, b,
                                     transport=self.transport,
-                                    fault=self.fault, elastic=self.elastic)
+                                    fault=self.fault, elastic=self.elastic,
+                                    channel=ctrace)
             n_ok = eng.affordable_rounds(self.accountant, trace)
             if n_ok == 0:
                 result.privacy_exhausted_at = a
@@ -356,6 +365,7 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         params: Optional[Any] = None,
         on_round: Optional[Callable[[int, Dict], None]] = None,
         transport: Optional[tp.Transport] = None,
+        channel_model: Optional[channel.ChannelModel] = None,
         variant: Optional[str] = None,
         scheme: Optional[str] = None) -> RunResult:
     """Run T rounds of pAirZero (or a baseline transport) on one host.
@@ -383,5 +393,6 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         hooks.append(CallbackHook(on_round))
     return Experiment(model_cfg, pz, pipeline, rounds, engine=engine,
                       chunk_rounds=chunk_rounds, transport=transport,
-                      hooks=hooks, fault=fault, elastic=elastic, impl=impl,
-                      dtype=dtype, params=params).run()
+                      channel_model=channel_model, hooks=hooks, fault=fault,
+                      elastic=elastic, impl=impl, dtype=dtype,
+                      params=params).run()

@@ -34,19 +34,27 @@ import numpy as np
 
 def draw_channels(seed: int, rounds: int, n_clients: int,
                   fading: str = "rayleigh") -> np.ndarray:
-    """Block-fading channel magnitudes h_k(t) ∈ [T, K].
+    """DEPRECATED shim — kept for one release.
 
-    rayleigh: |h| with h ~ CN(0, 1)  (unit average power).
-    static:   h ≡ 1 (AWGN-only channel).
+    Block-fading channel magnitudes h_k(t) ∈ [T, K], routed through the
+    channel registry (repro.channel): bit-identical to the historical
+    inline draw for "rayleigh"/"static" at equal seed. New code should
+    build a ChannelModel (`repro.channel.get(name)(...)`) and consume the
+    full `realize(...)` ChannelTrace (magnitudes + CSI phases +
+    participation), not just magnitudes.
     """
-    rng = np.random.default_rng(seed)
-    if fading == "rayleigh":
-        re = rng.normal(size=(rounds, n_clients)) / np.sqrt(2.0)
-        im = rng.normal(size=(rounds, n_clients)) / np.sqrt(2.0)
-        return np.sqrt(re * re + im * im)
-    if fading == "static":
-        return np.ones((rounds, n_clients))
-    raise ValueError(f"unknown fading model: {fading}")
+    import warnings
+
+    from repro import channel as ch
+    warnings.warn(
+        "ota.draw_channels is deprecated; use "
+        "repro.channel.get(name)().realize(seed, rounds, n_clients) and "
+        "consume the ChannelTrace. The shim routes through the channel "
+        "registry and will be removed next release.",
+        DeprecationWarning, stacklevel=2)
+    if fading not in ("rayleigh", "static"):
+        raise ValueError(f"unknown fading model: {fading}")
+    return ch.get(fading)().realize(seed, rounds, n_clients).h
 
 
 # ---------------------------------------------------------------------------
@@ -55,7 +63,8 @@ def draw_channels(seed: int, rounds: int, n_clients: int,
 
 def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
                n0: jnp.ndarray, key: jax.Array,
-               mask: Optional[jnp.ndarray] = None
+               mask: Optional[jnp.ndarray] = None,
+               g: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Analog pAirZero uplink (Eqs. 8–9) + channel inversion (Eq. 5).
 
@@ -67,6 +76,11 @@ def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
       key:   PRNG key for this round's noise (shared across devices so every
              replica sees the *same* channel draw — replicas stay in sync).
       mask:  [K] 0/1 survival mask (1 = client transmitted this round).
+      g:     [K] per-client effective-gain factor cos θ_k from the channel
+             trace (residual CSI phase error after pre-compensation). None
+             or all-ones is the perfect-CSI h_k α_k = c alignment; the
+             all-ones multiply is bitwise neutral, so perfect-CSI runs are
+             unchanged by the trace plumbing.
 
     Returns:
       (p_hat, k_eff): the recovered noisy mean and the surviving client count.
@@ -80,8 +94,10 @@ def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
                                                     dtype=p.dtype)
     z = jnp.sqrt(n0).astype(p.dtype) * jax.random.normal(z_key, (),
                                                          dtype=p.dtype)
-    # superposition: only surviving clients contribute signal AND noise
-    y = c * jnp.sum(mask * (p + n_k)) + z
+    # superposition: only surviving clients contribute signal AND noise,
+    # each rotated to cos θ of its residual pre-compensation error
+    w = mask if g is None else mask * g.astype(p.dtype)
+    y = c * jnp.sum(w * (p + n_k)) + z
     k_eff = jnp.maximum(jnp.sum(mask), 1.0)
     # c == 0 means a SILENT round (the sign-variant schedule zeroes early
     # rounds when Ã^{-t} weighting concentrates the privacy budget late):
@@ -93,15 +109,17 @@ def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
 
 def sign_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
              n0: jnp.ndarray, key: jax.Array,
-             mask: Optional[jnp.ndarray] = None
+             mask: Optional[jnp.ndarray] = None,
+             g: Optional[jnp.ndarray] = None
              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sign-pAirZero uplink (Eq. 11): clients transmit sign{p_k} + n_k.
 
     Majority consensus emerges from the superposition itself; the server
     inverts by (K c) exactly as in the analog case and updates with the
-    recovered p̂ (Algorithm 1, line 14).
+    recovered p̂ (Algorithm 1, line 14). Imperfect CSI weighs each vote by
+    cos θ_k — a deeply misaligned client can even flip its ballot.
     """
-    return analog_ota(jnp.sign(p), c, sigma, n0, key, mask)
+    return analog_ota(jnp.sign(p), c, sigma, n0, key, mask, g)
 
 
 def perfect_analog(p: jnp.ndarray,

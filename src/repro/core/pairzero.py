@@ -57,8 +57,12 @@ def control_spec(n_clients: int,
 
 
 def make_control(t: int, schedule, base_seed: int, n_clients: int,
-                 mask=None) -> Dict:
-    """Host-side: build round-t control block from a PowerSchedule."""
+                 mask=None, g=None) -> Dict:
+    """Host-side: build round-t control block from a PowerSchedule.
+
+    `g` is the round's [K] per-client effective-gain (cos θ) vector from
+    the channel trace; None means perfect CSI (all ones — bitwise neutral
+    in the step)."""
     key = jax.random.fold_in(jax.random.key(base_seed ^ 0x5EED), t)
     return {
         "seed": zo.round_seed(base_seed, t),
@@ -67,6 +71,8 @@ def make_control(t: int, schedule, base_seed: int, n_clients: int,
         "n0": jnp.float32(schedule.n0),
         "mask": jnp.ones((n_clients,), jnp.float32) if mask is None
         else jnp.asarray(mask, jnp.float32),
+        "g": jnp.ones((n_clients,), jnp.float32) if g is None
+        else jnp.asarray(g, jnp.float32),
         "noise_bits": jax.random.key_data(key),
     }
 

@@ -90,16 +90,20 @@ class Transport:
             "sigma": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
             "n0": jax.ShapeDtypeStruct((), jnp.float32),
             "mask": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
+            "g": jax.ShapeDtypeStruct((n_clients,), jnp.float32),
             "noise_bits": jax.ShapeDtypeStruct((2,), jnp.uint32),
         }
 
     # -- host side --------------------------------------------------------
-    def make_schedule(self, h: np.ndarray, pz) -> "object":
+    def make_schedule(self, trace, pz) -> "object":
         """Solve the transmit plan for the horizon (a PowerSchedule).
 
-        `h` is the [T, K] block-fading trace; OTA transports run the
-        Theorem-3/4 solvers, non-OTA transports return a trivial plan."""
-        return _trivial_schedule(h, scheme="perfect")
+        `trace` is the realized ChannelTrace (repro.channel) — or, for
+        backward compatibility, a bare [T, K] magnitude array. OTA
+        transports run the Theorem-3/4 solvers on the trace magnitudes
+        (per-client mean powers from a geometry wrapper enter the power-cap
+        min over k); non-OTA transports return a trivial plan."""
+        return _trivial_schedule(trace_magnitudes(trace), scheme="perfect")
 
     def charges_privacy(self, schedule, pz) -> bool:
         """Whether rounds under this transport spend (eps, delta) budget."""
@@ -122,9 +126,15 @@ class Transport:
         return pz.n_clients * self.payload_bits(pz, d)
 
 
+def trace_magnitudes(trace) -> np.ndarray:
+    """[T, K] channel magnitudes from a ChannelTrace or a bare array (the
+    pre-channel-registry calling convention, kept working one release)."""
+    return np.asarray(getattr(trace, "h", trace), dtype=np.float64)
+
+
 def _trivial_schedule(h: np.ndarray, scheme: str = "perfect"):
     from repro.core.power_control import PowerSchedule
-    t, k = np.asarray(h).shape
+    t, k = trace_magnitudes(h).shape
     return PowerSchedule(c=np.ones(t), sigma=np.zeros((t, k)),
                          scheme=scheme, n0=0.0)
 
@@ -227,10 +237,11 @@ class AnalogOTA(Transport):
         if self.scheme == "perfect":
             return ota.perfect_analog(p, ctl["mask"])
         return ota.analog_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
-                              ctl["mask"])[0]
+                              ctl["mask"], ctl.get("g"))[0]
 
-    def make_schedule(self, h, pz):
+    def make_schedule(self, trace, pz):
         from repro.core import power_control as pc
+        h = trace_magnitudes(trace)
         if self.scheme == "perfect":
             return _trivial_schedule(h)
         kw = dict(power=pz.channel.power, n0=pz.channel.n0,
@@ -269,10 +280,11 @@ class SignOTA(AnalogOTA):
         if self.scheme == "perfect":
             return ota.perfect_sign(p, ctl["mask"])
         return ota.sign_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
-                            ctl["mask"])[0]
+                            ctl["mask"], ctl.get("g"))[0]
 
-    def make_schedule(self, h, pz):
+    def make_schedule(self, trace, pz):
         from repro.core import power_control as pc
+        h = trace_magnitudes(trace)
         if self.scheme == "perfect":
             return _trivial_schedule(h)
         kw = dict(power=pz.channel.power, n0=pz.channel.n0,
@@ -359,12 +371,17 @@ class DigitalTDMA(Transport):
         return cls(quant_bits=tc.quant_bits, clip=float(pz.zo.clip_gamma))
 
     def aggregate(self, p, ctl, key):
+        # straggler-aware TDMA: clients masked out (faults OR deep-fade
+        # outage from the channel trace) yield their slots — the decode
+        # averages only scheduled slots, and the mask-aware bit accounting
+        # never bills an unscheduled payload. Per-slot decode is coherent,
+        # so the OTA CSI phase factor `g` does not distort the scalar.
         mask = ctl["mask"].astype(p.dtype)
         q = stochastic_quantize(p, key, bits=self.quant_bits, clip=self.clip)
         return jnp.sum(mask * q) / jnp.maximum(jnp.sum(mask), 1.0)
 
-    def make_schedule(self, h, pz):
-        return _trivial_schedule(h, scheme="digital")
+    def make_schedule(self, trace, pz):
+        return _trivial_schedule(trace_magnitudes(trace), scheme="digital")
 
     def payload_bits(self, pz, d):
         # one combined d-dimensional update per round, b bits per coordinate

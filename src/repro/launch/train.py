@@ -6,7 +6,11 @@
 
 The uplink mechanism is any registered Transport (analog | sign | perfect |
 digital | fo — see repro.core.transport); `--variant` remains as a
-deprecated alias for one release.
+deprecated alias for one release. The wireless channel is any registered
+ChannelModel (see repro.channel), optionally wrapped:
+
+    --channel rician --rician-k 4 --csi-phase-err 0.1 --outage-db -10 \
+        --cell-radius 150
 
 On a real multi-host TPU fleet this process runs once per host after
 jax.distributed.initialize() (see launch/scripts/); on CPU it runs the same
@@ -48,6 +52,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="power-control schedule for the OTA transports")
     ap.add_argument("--quant-bits", type=int, default=8,
                     help="bits/coordinate for --transport digital")
+    ap.add_argument("--channel", default=None,
+                    help="base fading model from the channel registry "
+                         "(rayleigh | rician | static | ar1 | user-"
+                         "registered); default rayleigh. The geometry/"
+                         "imperfect-CSI/outage wrappers compose on top via "
+                         "--cell-radius/--csi-phase-err/--outage-db")
+    ap.add_argument("--rician-k", type=float, default=3.0,
+                    help="K-factor for --channel rician")
+    ap.add_argument("--ar1-rho", type=float, default=0.9,
+                    help="lag-1 temporal correlation for --channel ar1")
+    ap.add_argument("--csi-phase-err", type=float, default=0.0,
+                    help="residual CSI phase-error std (radians); >0 wraps "
+                         "the channel in ImperfectCSI")
+    ap.add_argument("--outage-db", type=float, default=None,
+                    help="deep-fade outage threshold (dB); set to wrap the "
+                         "channel in OutageModel (straggling clients)")
+    ap.add_argument("--cell-radius", type=float, default=0.0,
+                    help="cell radius (m); >0 wraps the channel in "
+                         "PathLossGeometry (per-client mean powers)")
     ap.add_argument("--rounds", type=int, default=800)
     ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
                     help="round executor: per-round dispatch (loop) or the "
@@ -92,7 +115,12 @@ def main() -> None:
         zo=ZOConfig(mu=args.mu, lr=args.lr, clip_gamma=args.gamma,
                     n_perturb=args.n_perturb),
         channel=ChannelConfig(n0=args.n0, power=args.power,
-                              d=cfg.param_count()),
+                              d=cfg.param_count(),
+                              model=args.channel, rician_k=args.rician_k,
+                              ar1_rho=args.ar1_rho,
+                              phase_err_std=args.csi_phase_err,
+                              outage_db=args.outage_db,
+                              cell_radius=args.cell_radius),
         dp=DPConfig(epsilon=args.epsilon, delta=args.delta),
         power=PowerControlConfig(scheme=args.scheme),
         transport=TransportConfig(mechanism=mechanism, scheme=args.scheme,
@@ -130,6 +158,7 @@ def main() -> None:
 
     summary = {
         "arch": cfg.name, "transport": mechanism, "scheme": args.scheme,
+        "channel": args.channel or "rayleigh",
         "engine": args.engine,
         "rounds": res.steps,
         "uplink_bits": res.uplink_bits,

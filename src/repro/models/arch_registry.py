@@ -15,7 +15,8 @@ def arch_builder(arch_id: str) -> Callable:
         return _ARCHS[arch_id]
     except KeyError:
         raise ValueError(
-            f"unknown arch {arch_id!r}; available: {sorted(_ARCHS)}")
+            f"unknown arch {arch_id!r}; available: "
+            f"{sorted(_ARCHS)}") from None
 
 
 def registered() -> list:

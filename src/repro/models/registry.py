@@ -33,7 +33,8 @@ def get_module(cfg: ModelConfig):
     try:
         return _FAMILIES[cfg.family]
     except KeyError:
-        raise ValueError(f"unknown family {cfg.family!r} for {cfg.name}")
+        raise ValueError(
+            f"unknown family {cfg.family!r} for {cfg.name}") from None
 
 
 def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Any:

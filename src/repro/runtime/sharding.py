@@ -232,7 +232,7 @@ def hint(x, *roles):
         return x
     assert len(roles) == x.ndim, (roles, x.shape)
     resolved = []
-    for dim, role in zip(x.shape, roles):
+    for dim, role in zip(x.shape, roles, strict=True):
         if role == "client":
             resolved.append(_maybe(mesh, client_axes(mesh), dim))
         elif role == "model":

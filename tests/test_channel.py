@@ -1,0 +1,363 @@
+"""Channel subsystem: registry, model statistics, trace plumbing, engines.
+
+Three contracts under test:
+  1. statistics — each model realizes the distribution it names (unit mean
+     power, K-factor moments, AR(1) correlation, outage rate = analytic
+     Rayleigh CDF);
+  2. specialization — degenerate parameters reproduce the simpler model
+     *bitwise* (rician K=0 ≡ rayleigh ≡ legacy draw_channels, ar1 ρ=0 ≡
+     rayleigh, phase_err_std=0 ≡ perfect CSI end to end);
+  3. engine equivalence — scan and loop stay bit-identical on every
+     registered channel model, and outage masks flow into uplink-bit
+     accounting.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import channel as ch
+from repro.configs.base import ChannelConfig, TransportConfig
+from repro.core import fedsim, ota
+from repro.core import transport as tp
+
+
+def _cc(**kw) -> ChannelConfig:
+    return ChannelConfig(n0=1.0, power=100.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry + composition
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtin_models():
+    assert set(ch.available()) >= {"rayleigh", "rician", "static", "ar1",
+                                   "geometry", "imperfect_csi", "outage"}
+    with pytest.raises(ValueError, match="unknown channel model"):
+        ch.get("carrier-pigeon")
+
+
+def test_models_are_hashable_config_keys():
+    assert ch.RicianFading(3.0) == ch.RicianFading(3.0)
+    assert hash(ch.AR1Correlated(0.5)) == hash(ch.AR1Correlated(0.5))
+    assert ch.RicianFading(3.0) != ch.RicianFading(4.0)
+    wrapped = ch.ImperfectCSI(base=ch.RicianFading(2.0), phase_err_std=0.1)
+    assert wrapped == ch.ImperfectCSI(base=ch.RicianFading(2.0),
+                                      phase_err_std=0.1)
+
+
+def test_from_config_composes_wrapper_stack():
+    model = ch.from_config(_cc(model="rician", rician_k=7.0,
+                               phase_err_std=0.2, outage_db=-12.0,
+                               cell_radius=200.0))
+    assert isinstance(model, ch.OutageModel)
+    assert model.threshold_db == -12.0
+    assert isinstance(model.base, ch.ImperfectCSI)
+    assert isinstance(model.base.base, ch.PathLossGeometry)
+    assert isinstance(model.base.base.base, ch.RicianFading)
+    assert model.base.base.base.k_factor == 7.0
+    # legacy `fading` string still resolves when `model` is unset
+    assert isinstance(ch.from_config(_cc(fading="static")),
+                      ch.StaticChannel)
+
+
+def test_wrappers_rejected_as_base_model():
+    """Selecting a wrapper by name would silently ignore its config fields
+    and double-wrap it — from_config must refuse and point at the config
+    fields that compose it."""
+    for name in ("geometry", "imperfect_csi", "outage"):
+        with pytest.raises(ValueError, match="is a wrapper"):
+            ch.from_config(_cc(model=name))
+
+
+def test_empty_round_readmission_respects_fault_mask(make_pz):
+    """When outage x faults zero a round, the re-admitted client must be
+    fault-surviving — never a crashed one, however strong its channel."""
+    from repro.core import engine as eng
+    from repro.core.power_control import PowerSchedule
+
+    pz = make_pz(rounds=4, n_clients=2, scheme="perfect")
+    sched = PowerSchedule(c=np.ones(4), sigma=np.zeros((4, 2)),
+                          scheme="perfect", n0=0.0)
+    # hand-built trace: client 0 has the STRONG channel but the fault
+    # model crashed it; client 1 is weak and in outage
+    ctrace = ch.ChannelTrace(
+        h=np.asarray([[9.0, 1.0]] * 4),
+        participation=np.asarray([[1.0, 0.0]] * 4, np.float32))
+
+    class KillClient0:
+        def survival_mask(self, t):
+            return np.asarray([0.0, 1.0], np.float32)  # client 0 crashed
+
+    trace = eng.build_trace(sched, pz, 0, 4, fault=KillClient0(),
+                            channel=ctrace)
+    # combined mask is all-zero; re-admission must pick client 1 (fault-
+    # surviving, outage notwithstanding) — a naive argmax over h would
+    # resurrect the crashed-but-strong client 0
+    np.testing.assert_array_equal(np.asarray(trace.ctl["mask"]),
+                                  np.asarray([[0.0, 1.0]] * 4, np.float32))
+
+
+def test_trace_shape_validation():
+    with pytest.raises(ValueError, match="shapes disagree"):
+        ch.ChannelTrace(h=np.ones((4, 3)), phase=np.zeros((4, 2)))
+
+
+# ---------------------------------------------------------------------------
+# Statistics (fixed seed)
+# ---------------------------------------------------------------------------
+
+def test_rayleigh_unit_mean_power():
+    trace = ch.RayleighFading().realize(0, 4000, 8)
+    assert abs((trace.h ** 2).mean() - 1.0) < 0.05
+    np.testing.assert_allclose(trace.mean_power(), 1.0, atol=0.1)
+    assert (trace.phase == 0).all() and (trace.participation == 1).all()
+
+
+def test_rician_k_factor_moments():
+    """E[|h|²] = 1 for every K, Var(|h|²) = (2K+1)/(K+1)² (noncentral
+    χ²₂), and larger K concentrates the fade."""
+    for k_factor in (0.5, 3.0, 10.0):
+        trace = ch.RicianFading(k_factor).realize(1, 6000, 4)
+        power = trace.h ** 2
+        assert abs(power.mean() - 1.0) < 0.05, k_factor
+        var_expect = (2.0 * k_factor + 1.0) / (k_factor + 1.0) ** 2
+        assert abs(power.var() - var_expect) < 0.12 * var_expect, k_factor
+    assert ch.RicianFading(10.0).realize(1, 6000, 4).h.var() < \
+        ch.RicianFading(0.5).realize(1, 6000, 4).h.var()
+
+
+def test_ar1_lag1_autocorrelation():
+    """Power autocorrelation at lag 1 ≈ ρ² (complex-Gaussian AR(1))."""
+    for rho in (0.0, 0.5, 0.9):
+        trace = ch.AR1Correlated(rho).realize(2, 8000, 4)
+        power = trace.h ** 2
+        x, y = power[:-1].ravel(), power[1:].ravel()
+        corr = np.corrcoef(x, y)[0, 1]
+        assert abs(corr - rho ** 2) < 0.05, rho
+        assert abs(power.mean() - 1.0) < 0.05, rho   # stationary unit power
+
+
+def test_outage_rate_matches_rayleigh_cdf():
+    """P(outage) = P(|h|² < τ) = 1 - exp(-τ) for unit-power Rayleigh."""
+    for thr_db in (-20.0, -10.0, -3.0):
+        model = ch.OutageModel(base=ch.RayleighFading(),
+                               threshold_db=thr_db)
+        trace = model.realize(3, 6000, 5)
+        tau = 10.0 ** (thr_db / 10.0)
+        expect = 1.0 - np.exp(-tau)
+        assert abs(trace.outage_rate() - expect) < 0.01 + 0.1 * expect, \
+            thr_db
+        # never a fully-silent round (strongest client re-admitted)
+        assert (trace.participation.sum(axis=1) >= 1).all()
+
+
+def test_geometry_breaks_unit_power_symmetry():
+    model = ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0)
+    trace = model.realize(4, 4000, 6)
+    gains = model.client_gains(4, 6)
+    assert abs(gains.mean() - 1.0) < 1e-12          # normalized
+    assert gains.max() / gains.min() > 3.0           # genuinely heterogeneous
+    np.testing.assert_allclose(trace.mean_power(), gains, rtol=0.15)
+    # placement is a function of the seed: same seed, same cell layout
+    np.testing.assert_array_equal(gains, model.client_gains(4, 6))
+    assert not np.array_equal(gains, model.client_gains(5, 6))
+
+
+def test_imperfect_csi_factors():
+    model = ch.ImperfectCSI(base=ch.RayleighFading(), phase_err_std=0.3)
+    trace = model.realize(5, 2000, 4)
+    base = ch.RayleighFading().realize(5, 2000, 4)
+    np.testing.assert_array_equal(trace.h, base.h)   # magnitudes untouched
+    assert abs(trace.phase.std() - 0.3) < 0.02
+    assert (trace.csi <= 1.0).all()
+    # E[cos θ] = exp(-σ²/2) for θ ~ N(0, σ²)
+    assert abs(trace.csi.mean() - np.exp(-0.045)) < 0.01
+    assert np.iscomplexobj(trace.gain)
+    np.testing.assert_allclose(np.abs(trace.gain), trace.h, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise specializations
+# ---------------------------------------------------------------------------
+
+def test_rician_k0_and_ar1_rho0_are_rayleigh_bitwise():
+    ray = ch.RayleighFading().realize(7, 64, 5).h
+    np.testing.assert_array_equal(ch.RicianFading(0.0).realize(7, 64, 5).h,
+                                  ray)
+    np.testing.assert_array_equal(ch.AR1Correlated(0.0).realize(7, 64, 5).h,
+                                  ray)
+
+
+def test_draw_channels_shim_warns_and_is_bit_identical():
+    """The legacy ota.draw_channels routes through the registry and stays
+    bit-identical for rayleigh/static, so PR-1/PR-2 trajectories still
+    reproduce."""
+    with pytest.deprecated_call():
+        legacy_ray = ota.draw_channels(0, 32, 4, "rayleigh")
+    with pytest.deprecated_call():
+        legacy_static = ota.draw_channels(0, 32, 4, "static")
+    np.testing.assert_array_equal(
+        legacy_ray, ch.RayleighFading().realize(0, 32, 4).h)
+    np.testing.assert_array_equal(
+        legacy_static, ch.StaticChannel().realize(0, 32, 4).h)
+    # and the historical inline formula, re-derived here as the oracle
+    rng = np.random.default_rng(0)
+    re = rng.normal(size=(32, 4)) / np.sqrt(2.0)
+    im = rng.normal(size=(32, 4)) / np.sqrt(2.0)
+    np.testing.assert_array_equal(legacy_ray, np.sqrt(re * re + im * im))
+    with pytest.raises(ValueError, match="unknown fading"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            ota.draw_channels(0, 4, 2, "tropospheric-scatter")
+
+
+def test_phase_err_zero_bit_identical_to_perfect_csi(tiny_model, make_pz,
+                                                     make_pipeline):
+    """An ImperfectCSI wrapper with phase_err_std=0 draws θ ≡ 0: running
+    the *wrapped* model end to end (injected via channel_model=, the same
+    path any user-built wrapper stack takes) must equal the unwrapped
+    perfect-CSI run bitwise, on both engines."""
+    pz = dataclasses.replace(
+        make_pz(rounds=6), channel=_cc(),
+        transport=TransportConfig("analog", "solution"))
+    wrapped = ch.ImperfectCSI(base=ch.RayleighFading(), phase_err_std=0.0)
+    tr = wrapped.realize(0, 6, 5)
+    np.testing.assert_array_equal(tr.csi, np.ones_like(tr.csi))
+    for engine in ("loop", "scan"):
+        res_p = fedsim.run(tiny_model, pz, make_pipeline(),
+                           rounds=6, engine=engine, chunk_rounds=4)
+        res_w = fedsim.run(tiny_model, pz, make_pipeline(), rounds=6,
+                           engine=engine, chunk_rounds=4,
+                           channel_model=wrapped)
+        assert res_p.losses == res_w.losses, engine
+        assert res_p.p_hats == res_w.p_hats, engine
+        assert res_p.privacy_spent == res_w.privacy_spent, engine
+
+
+def test_imperfect_csi_attenuates_not_crashes(tiny_model, make_pz,
+                                              make_pipeline):
+    """Nonzero phase error changes the trajectory (the h_k α_k = c
+    assumption really is consumed from the trace) but stays finite."""
+    base = dataclasses.replace(
+        make_pz(rounds=6), transport=TransportConfig("analog", "solution"))
+    res_perfect = fedsim.run(tiny_model, dataclasses.replace(
+        base, channel=_cc()), make_pipeline(), rounds=6)
+    res_csi = fedsim.run(tiny_model, dataclasses.replace(
+        base, channel=_cc(phase_err_std=0.5)), make_pipeline(), rounds=6)
+    assert np.isfinite(res_csi.losses).all()
+    assert res_csi.p_hats != res_perfect.p_hats
+
+
+# ---------------------------------------------------------------------------
+# Engine bit-identity on every registered model + outage accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cc", [
+    _cc(model="rician", rician_k=4.0),
+    _cc(model="ar1", ar1_rho=0.8),
+    _cc(model="static"),
+    _cc(model="rayleigh", phase_err_std=0.2),
+    _cc(model="rayleigh", outage_db=-6.0),
+    _cc(model="rayleigh", cell_radius=150.0),
+], ids=["rician", "ar1", "static", "imperfect_csi", "outage", "geometry"])
+def test_scan_loop_bit_identical_on_channel_models(tiny_model, make_pz,
+                                                   make_pipeline, cc):
+    pz = dataclasses.replace(
+        make_pz(rounds=7), channel=cc,
+        transport=TransportConfig("analog", "solution"))
+    res_loop = fedsim.run(tiny_model, pz, make_pipeline(), rounds=7,
+                          engine="loop")
+    res_scan = fedsim.run(tiny_model, pz, make_pipeline(), rounds=7,
+                          engine="scan", chunk_rounds=3)
+    assert res_loop.losses == res_scan.losses
+    assert res_loop.p_hats == res_scan.p_hats
+    assert res_loop.privacy_spent == res_scan.privacy_spent
+    assert res_loop.uplink_bits == res_scan.uplink_bits
+    assert np.isfinite(res_loop.losses).all()
+
+
+def test_outage_mask_reduces_uplink_bits(tiny_model, make_pz,
+                                         make_pipeline):
+    """Clients in deep fade transmit nothing and are billed nothing: the
+    run's uplink_bits equals payload x Σ_t K_participating(t), strictly
+    below the full-participation bill."""
+    rounds = 10
+    base = dataclasses.replace(
+        make_pz(rounds=rounds),
+        transport=TransportConfig("analog", "solution"))
+    pz = dataclasses.replace(base, channel=_cc(outage_db=-3.0))
+    res = fedsim.run(tiny_model, pz, make_pipeline(), rounds=rounds)
+    trace = ch.realize_from_config(pz.channel, pz.seed ^ 0xC4A7,
+                                   pz.rounds, pz.n_clients)
+    expect_client_rounds = int(trace.participation[:rounds].sum())
+    payload = tp.resolve(pz).payload_bits(pz, tiny_model.param_count())
+    assert res.uplink_bits == payload * expect_client_rounds
+    full = fedsim.run(tiny_model, dataclasses.replace(base, channel=_cc()),
+                      make_pipeline(), rounds=rounds)
+    assert res.uplink_bits < full.uplink_bits
+    # k_eff metric saw the stragglers too
+    assert expect_client_rounds < rounds * pz.n_clients
+
+
+def test_outage_composes_with_fault_masks(tiny_model, make_pz,
+                                          make_pipeline):
+    """Outage participation multiplies the FaultModel survival mask, and
+    the combined mask still never empties a round — on both engines,
+    identically."""
+    from repro.runtime.fault import FaultModel
+    pz = dataclasses.replace(
+        make_pz(rounds=8), channel=_cc(outage_db=-3.0),
+        transport=TransportConfig("analog", "solution"))
+    results = {}
+    for engine in ("loop", "scan"):
+        results[engine] = fedsim.run(
+            tiny_model, pz, make_pipeline(), rounds=8, engine=engine,
+            chunk_rounds=5,
+            fault=FaultModel(pz.n_clients, dropout_p=0.4, seed=3))
+    assert results["loop"].losses == results["scan"].losses
+    assert results["loop"].uplink_bits == results["scan"].uplink_bits
+    assert np.isfinite(results["loop"].losses).all()
+
+
+# ---------------------------------------------------------------------------
+# Property tests over the model parameter space (slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_hypothesis_unit_mean_power_across_models():
+    """Every small-scale model keeps E[|h|²] = 1 across its parameter
+    space — the normalization the power-control solves assume."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000), st.floats(0.0, 15.0),
+           st.floats(0.0, 0.97))
+    def run(seed, k_factor, rho):
+        for model in (ch.RicianFading(k_factor), ch.AR1Correlated(rho)):
+            power = model.realize(seed, 3000, 4).h ** 2
+            assert abs(power.mean() - 1.0) < 0.08, model
+
+    run()
+
+
+@pytest.mark.slow
+def test_hypothesis_outage_rate_tracks_cdf():
+    """Outage rate stays within sampling error of 1 - exp(-τ) for any
+    threshold, and participation never empties a round."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000), st.floats(-25.0, 0.0))
+    def run(seed, thr_db):
+        trace = ch.OutageModel(base=ch.RayleighFading(),
+                               threshold_db=thr_db).realize(seed, 3000, 5)
+        tau = 10.0 ** (thr_db / 10.0)
+        expect = 1.0 - np.exp(-tau)
+        assert abs(trace.outage_rate() - expect) < 0.02 + 0.12 * expect
+        assert (trace.participation.sum(axis=1) >= 1).all()
+
+    run()

@@ -25,7 +25,7 @@ def test_save_restore_roundtrip(tmp_path, params):
     assert step == 42
     assert extra["accountant"]["spent"] == 0.5
     for a, b in zip(jax.tree_util.tree_leaves(restored),
-                    jax.tree_util.tree_leaves(params)):
+                    jax.tree_util.tree_leaves(params), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

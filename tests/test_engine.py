@@ -11,8 +11,9 @@ import pytest
 
 import jax
 
+from repro.channel import RayleighFading
 from repro.checkpoint import checkpoint as ckpt
-from repro.core import dp, engine as eng, fedsim, ota, pairzero
+from repro.core import dp, engine as eng, fedsim, pairzero
 from repro.core import power_control as pc
 from repro.models import registry
 
@@ -23,7 +24,7 @@ from repro.models import registry
 
 def test_control_trace_matches_make_control(make_pz):
     pz = make_pz(scheme="solution", rounds=16)
-    h = ota.draw_channels(pz.seed ^ 0xC4A7, 16, pz.n_clients, "rayleigh")
+    h = RayleighFading().realize(pz.seed ^ 0xC4A7, 16, pz.n_clients).h
     sched = pc.make_schedule(
         "analog", "solution", h, power=100.0, n0=1.0, gamma=5.0,
         n_clients=pz.n_clients, e0=pz.power.e0,
@@ -156,7 +157,8 @@ def _near_exhausted_checkpoint(cfg, pz, ckdir, start_round, affordable):
     rounds of pz's schedule past `start_round` — the next chunk must trip
     mid-flight."""
     horizon = pz.rounds
-    h = ota.draw_channels(pz.seed ^ 0xC4A7, horizon, pz.n_clients, "rayleigh")
+    h = RayleighFading().realize(pz.seed ^ 0xC4A7, horizon,
+                                 pz.n_clients).h
     sched = pc.make_schedule(
         pz.variant, pz.power.scheme, h, power=pz.channel.power,
         n0=pz.channel.n0, gamma=pz.zo.clip_gamma, n_clients=pz.n_clients,

@@ -68,12 +68,35 @@ def test_effective_noise_std():
 
 
 def test_channel_draws_reproducible():
-    h1 = ota.draw_channels(0, 10, 4)
-    h2 = ota.draw_channels(0, 10, 4)
-    h3 = ota.draw_channels(1, 10, 4)
-    assert np.array_equal(h1, h2)
+    """draw_channels is a deprecated shim over the channel registry; it
+    warns, stays seed-stable, and matches the registry draw bit for bit."""
+    import pytest
+
+    from repro.channel import RayleighFading
+    with pytest.deprecated_call():
+        h1 = ota.draw_channels(0, 10, 4)
+    with pytest.deprecated_call():
+        h3 = ota.draw_channels(1, 10, 4)
+    np.testing.assert_array_equal(h1, RayleighFading().realize(0, 10, 4).h)
     assert not np.array_equal(h1, h3)
     assert (h1 > 0).all()
     # Rayleigh with unit average power: E[h²] = 1
-    big = ota.draw_channels(0, 2000, 8)
+    big = RayleighFading().realize(0, 2000, 8).h
     assert abs((big ** 2).mean() - 1.0) < 0.05
+
+
+def test_analog_ota_csi_gain_factor():
+    """Per-client cos θ factors weight the superposition: g ≡ 1 is bitwise
+    neutral, g < 1 attenuates the recovered mean."""
+    p = jnp.asarray([1.0, 2.0, 3.0])
+    ones = jnp.ones(3)
+    ref, _ = ota.analog_ota(p, jnp.float32(1.0), jnp.zeros(3),
+                            jnp.float32(0.0), jax.random.key(0))
+    with_g, _ = ota.analog_ota(p, jnp.float32(1.0), jnp.zeros(3),
+                               jnp.float32(0.0), jax.random.key(0), None,
+                               ones)
+    assert float(ref) == float(with_g)
+    half, _ = ota.analog_ota(p, jnp.float32(1.0), jnp.zeros(3),
+                             jnp.float32(0.0), jax.random.key(0), None,
+                             jnp.full((3,), 0.5))
+    assert abs(float(half) - 1.0) < 1e-6          # 0.5 * mean(p)

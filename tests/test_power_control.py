@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import ota, power_control as pc
+from repro.channel import RayleighFading
+from repro.core import power_control as pc
 from repro.core.dp import r_dp
 
 EPS, DELTA = 5.0, 0.01
@@ -11,7 +12,7 @@ T, K = 200, 5
 
 @pytest.fixture
 def channels():
-    return ota.draw_channels(0, T, K)
+    return RayleighFading().realize(0, T, K).h
 
 
 def _check_constraints(sched, h, *, power, n0, gamma, budget, d=1):
@@ -37,7 +38,7 @@ def test_analog_solution_constraints(channels):
 
 def test_analog_full_power_branch():
     """With a huge budget the power constraint binds instead."""
-    h = ota.draw_channels(1, 10, K)
+    h = RayleighFading().realize(1, 10, K).h
     sched = pc.solve_analog(h, power=1e-4, n0=1e6, gamma=100.0,
                             contraction_a=0.998, epsilon=50.0, delta=0.1)
     assert sched.zeta == 0.0                    # condition (28) branch
@@ -67,7 +68,7 @@ def test_sign_solution_constraints(channels):
 
 
 def test_sign_full_power_branch():
-    h = ota.draw_channels(2, 10, K)
+    h = RayleighFading().realize(2, 10, K).h
     sched = pc.solve_sign(h, power=1e-6, n0=1e4, n_clients=K, e0=0.496,
                           contraction_a_tilde=0.998, epsilon=50.0, delta=0.1)
     assert sched.zeta == 0.0

@@ -13,6 +13,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.channel import RayleighFading
 from repro.core import dp, ota, power_control as pc, zo
 from repro.kernels import ref
 from repro.kernels.seeded_axpy import fmix32
@@ -49,7 +50,7 @@ def test_c_inverse_is_inverse(y):
 @given(st.integers(0, 10_000), st.integers(2, 8), st.integers(10, 120),
        st.floats(1.0, 1e4), st.floats(0.5, 12.0))
 def test_analog_solution_always_feasible(seed, k, rounds, power, eps):
-    h = ota.draw_channels(seed, rounds, k)
+    h = RayleighFading().realize(seed, rounds, k).h
     budget = dp.r_dp(eps, 0.01)
     sched = pc.solve_analog(h, power=power, n0=1.0, gamma=100.0,
                             contraction_a=0.998, epsilon=eps, delta=0.01)
@@ -64,7 +65,7 @@ def test_analog_solution_always_feasible(seed, k, rounds, power, eps):
 @given(st.integers(0, 10_000), st.integers(2, 8), st.integers(10, 120),
        st.floats(1.0, 1e4), st.floats(0.5, 12.0))
 def test_sign_solution_always_feasible(seed, k, rounds, power, eps):
-    h = ota.draw_channels(seed, rounds, k)
+    h = RayleighFading().realize(seed, rounds, k).h
     budget = dp.r_dp(eps, 0.01)
     sched = pc.solve_sign(h, power=power, n0=1.0, n_clients=k, e0=0.496,
                           contraction_a_tilde=0.998, epsilon=eps,

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,
                                 PairZeroConfig, PowerControlConfig, ZOConfig)
+from repro.channel import RayleighFading
 from repro.core import fedsim
 from repro.data.pipeline import FederatedPipeline
 from repro.data.tasks import TaskSpec
@@ -145,8 +146,9 @@ def test_privacy_guard_halts_overspend():
 
     # force a true overspend: static schedule solved for T=50 but run 120
     import numpy as np_
-    from repro.core import ota, power_control as pc
-    h = ota.draw_channels(0, 50, 5)
+    from repro.channel import RayleighFading
+    from repro.core import power_control as pc
+    h = RayleighFading().realize(0, 50, 5).h
     sched = pc.static_analog(h, power=100.0, n0=1.0, gamma=5.0,
                              epsilon=5.0, delta=0.01)
     # extend the same per-round gain past its designed horizon

@@ -47,8 +47,10 @@ def test_transports_are_hashable_config_keys():
 
 def test_control_spec_owned_by_transport():
     spec = tp.AnalogOTA().control_spec(5)
-    assert set(spec) == {"seed", "c", "sigma", "n0", "mask", "noise_bits"}
+    assert set(spec) == {"seed", "c", "sigma", "n0", "mask", "g",
+                         "noise_bits"}
     assert spec["sigma"].shape == (5,)
+    assert spec["g"].shape == (5,)
 
 
 # ---------------------------------------------------------------------------
@@ -183,7 +185,8 @@ def test_round_dp_costs_match_accountant_path(make_pz):
     charge(c, gamma, m) sequence bit for bit."""
     from repro.core.dp import PrivacyAccountant
     pz = make_pz(scheme="static", rounds=12)
-    h = ota.draw_channels(pz.seed ^ 0xC4A7, 12, pz.n_clients, "rayleigh")
+    from repro.channel import RayleighFading
+    h = RayleighFading().realize(pz.seed ^ 0xC4A7, 12, pz.n_clients).h
     t = tp.resolve(pz)
     sched = t.make_schedule(h, pz)
     costs = t.round_dp_costs(sched, 0, 12, pz)
