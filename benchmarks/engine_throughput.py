@@ -1,40 +1,73 @@
-"""Rounds/sec: scan-over-rounds engine vs. per-round dispatch.
+"""Engine throughput: loop vs scan vs scan+mesh, with overlap breakdown.
 
     PYTHONPATH=src python benchmarks/engine_throughput.py \
-        [--rounds 96] [--chunk-rounds 16] [--n-perturb 1] [--json out.json]
+        [--rounds 128] [--chunk-rounds 32] [--clients 8] \
+        [--sizes tiny,opt-125m-reduced] [--json BENCH_engine.json]
 
-Measures the end-to-end federated driver (`fedsim.run`) on the paper's own
-architecture reduced to CPU scale (`opt-125m --reduced`), identical config
-for both engines. The first run of each engine is a throwaway warmup that
-pays tracing + XLA compile (cached across runs via the memoized step
-factory); the timed run is steady-state throughput — what a long training
-horizon actually sees per round.
+Measures the end-to-end federated driver (`fedsim.run`) at 2-3 model sizes,
+identical config across engines:
 
-The scan engine's win is pure dispatch economics: the loop pays a
-host→device control-block rebuild, a kernel launch, and a blocking metric
-sync every round; scan pays them once per chunk. The loss trajectories are
-asserted bit-identical, so the speedup is free.
+  loop       per-round dispatch (the bit-identity oracle)
+  scan       chunked lax.scan, device-resident params, prefetch overlap
+  scan_mesh  scan + clients shard_map'd over a ('data',) device mesh (runs
+             when >1 device is visible and divides --clients; on CPU set
+             XLA_FLAGS=--xla_force_host_platform_device_count=8)
+
+plus the chunk-boundary overlap breakdown at the primary size:
+
+  prefetch    scan with the chunk-prep thread on vs off (`overlap=`),
+              reporting the driver's boundary stall (RunResult.prep_stall_s)
+  checkpoint  scan + checkpoint_every=chunk_rounds with the double-buffered
+              snapshot vs the synchronous device_get baseline
+              (CheckpointHook(double_buffer=)), reporting ckpt_stall_s
+
+The first run of each config is a throwaway warmup that pays tracing + XLA
+compile (cached via the memoized step factories); timed passes are
+interleaved best-of-N so machine drift hits every engine equally. Loss
+trajectories are asserted bit-identical to the loop engine, so every
+speedup is free.
+
+`--json` writes the machine-readable BENCH_engine.json
+(schema "bench_engine/v1"); `tools/check_bench.py` validates it and gates
+the scan speedup + stall reductions in CI.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, "src")
 
-from repro.configs.base import (ChannelConfig, DPConfig, PairZeroConfig,
-                                PowerControlConfig, ZOConfig)
-from repro.core import fedsim
-from repro.data.pipeline import FederatedPipeline
-from repro.data.tasks import TaskSpec
-from repro.models import registry
+import jax  # noqa: E402
+
+from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,  # noqa: E402
+                                PairZeroConfig, PowerControlConfig, ZOConfig)
+from repro.core import fedsim  # noqa: E402
+from repro.data.pipeline import FederatedPipeline  # noqa: E402
+from repro.data.tasks import TaskSpec  # noqa: E402
+from repro.launch.mesh import make_client_mesh  # noqa: E402
+from repro.models import registry  # noqa: E402
+
+SCHEMA = "bench_engine/v1"
 
 
-def build(args):
-    cfg = registry.get_arch("opt-125m").reduced()
-    pz = PairZeroConfig(
+def model_sizes() -> dict:
+    """The benchmark's size ladder (all CPU-runnable)."""
+    return {
+        "tiny": ModelConfig(name="tiny", family="dense", n_layers=2,
+                            d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                            vocab_size=64, head_dim=16),
+        "opt-125m-reduced": registry.get_arch("opt-125m").reduced(),
+        "opt-125m-wide": registry.get_arch("opt-125m").reduced(
+            d_model=128, d_ff=256, vocab_size=2048, head_dim=32),
+    }
+
+
+def build_pz(args) -> PairZeroConfig:
+    return PairZeroConfig(
         variant="analog", n_clients=args.clients, rounds=args.rounds,
         zo=ZOConfig(mu=1e-3, lr=5e-3, clip_gamma=5.0,
                     n_perturb=args.n_perturb),
@@ -42,69 +75,150 @@ def build(args):
         dp=DPConfig(epsilon=5.0, delta=0.01),
         power=PowerControlConfig(scheme="solution"), seed=0)
 
-    def pipe():
-        return FederatedPipeline(
-            task="sst2", spec=TaskSpec("sst2", cfg.vocab_size, args.seq),
-            n_clients=args.clients, per_client_batch=args.batch, seed=0)
 
-    return cfg, pz, pipe
+def make_pipe(cfg, args) -> FederatedPipeline:
+    return FederatedPipeline(
+        task="sst2", spec=TaskSpec("sst2", cfg.vocab_size, args.seq),
+        n_clients=args.clients, per_client_batch=args.batch, seed=0)
+
+
+def bench_mesh(args):
+    """Client mesh for the scan_mesh lane — exactly the mesh that
+    `train.py --mesh auto` would build — or None on a 1-device host."""
+    mesh = make_client_mesh("auto", n_clients=args.clients)
+    return mesh if mesh.devices.size > 1 else None
+
+
+def timed(fn, rounds: int, repeats: int):
+    """Best-of-N rounds/s plus the RunResult of the best pass."""
+    best_rps, best_res = 0.0, None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn()
+        rps = rounds / (time.perf_counter() - t0)
+        if rps > best_rps:
+            best_rps, best_res = rps, res
+    return best_rps, best_res
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--rounds", type=int, default=128)
     ap.add_argument("--chunk-rounds", type=int, default=32)
-    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--batch", type=int, default=1)
     ap.add_argument("--seq", type=int, default=16)
     ap.add_argument("--n-perturb", type=int, default=1)
-    ap.add_argument("--repeats", type=int, default=5,
-                    help="timed passes per engine (interleaved, best-of)")
-    ap.add_argument("--json", default=None)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed passes per config (interleaved, best-of)")
+    ap.add_argument("--sizes", default="tiny,opt-125m-reduced",
+                    help=f"comma list from {sorted(model_sizes())}")
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="skip the scan_mesh lane even when devices allow")
+    ap.add_argument("--json", default=None,
+                    help="write BENCH_engine.json here")
     args = ap.parse_args()
 
-    cfg, pz, pipe = build(args)
-    print(f"== engine throughput: {cfg.name} (reduced, "
-          f"{cfg.param_count() / 1e3:.0f}k params), {args.rounds} rounds, "
+    sizes = {name: model_sizes()[name] for name in args.sizes.split(",")}
+    pz = build_pz(args)
+    mesh = None if args.no_mesh else bench_mesh(args)
+
+    def runner(cfg, engine, mesh_=None, overlap=True):
+        return lambda: fedsim.run(cfg, pz, make_pipe(cfg, args),
+                                  rounds=args.rounds, engine=engine,
+                                  chunk_rounds=args.chunk_rounds,
+                                  mesh=mesh_, overlap=overlap)
+
+    print(f"== engine throughput: {args.rounds} rounds, "
           f"{args.clients} clients, chunk={args.chunk_rounds}, "
-          f"n_perturb={args.n_perturb} ==")
+          f"n_perturb={args.n_perturb}, devices={len(jax.devices())}, "
+          f"mesh={'off' if mesh is None else dict(mesh.shape)} ==")
 
-    engines = {"loop": dict(engine="loop"),
-               "scan": dict(engine="scan", chunk_rounds=args.chunk_rounds)}
-    losses = {}
-    for name, kw in engines.items():       # warmup: tracing + XLA compile
-        losses[name] = fedsim.run(cfg, pz, pipe(), rounds=args.rounds,
-                                  **kw).losses
-    identical = losses["scan"] == losses["loop"]
+    grid = []
+    for name, cfg in sizes.items():
+        lanes = {"loop": runner(cfg, "loop"), "scan": runner(cfg, "scan")}
+        if mesh is not None:
+            lanes["scan_mesh"] = runner(cfg, "scan", mesh_=mesh)
+        losses = {lane: fn().losses for lane, fn in lanes.items()}  # warmup
+        best = {}
+        for _ in range(args.repeats):       # interleaved best-of
+            for lane, fn in lanes.items():
+                t0 = time.perf_counter()
+                fn()
+                best[lane] = max(best.get(lane, 0.0),
+                                 args.rounds / (time.perf_counter() - t0))
+        for lane in lanes:
+            row = {
+                "size": name, "engine": lane,
+                "rounds_per_s": round(best[lane], 2),
+                "speedup_vs_loop": round(best[lane] / best["loop"], 3),
+                "bit_identical_to_loop": losses[lane] == losses["loop"],
+                "mesh": dict(mesh.shape) if lane == "scan_mesh" else None,
+            }
+            grid.append(row)
+            print(f"  {name:18s} {lane:10s} {row['rounds_per_s']:8.1f} r/s "
+                  f"({row['speedup_vs_loop']:.2f}x loop, bitwise="
+                  f"{row['bit_identical_to_loop']})")
+        if not all(r["bit_identical_to_loop"] for r in grid
+                   if r["size"] == name):
+            raise SystemExit(f"FAIL: {name}: an engine diverged from loop")
 
-    # interleaved best-of-N so machine drift hits both engines equally
-    best = {name: 0.0 for name in engines}
-    for _ in range(args.repeats):
-        for name, kw in engines.items():
-            t0 = time.perf_counter()
-            fedsim.run(cfg, pz, pipe(), rounds=args.rounds, **kw)
-            best[name] = max(best[name],
-                             args.rounds / (time.perf_counter() - t0))
-    loop_rps, scan_rps = best["loop"], best["scan"]
-    speedup = scan_rps / loop_rps
-    print(f"loop (per-round dispatch): {loop_rps:8.1f} rounds/s")
-    print(f"scan (chunked, device-resident): {scan_rps:8.1f} rounds/s")
-    print(f"speedup: {speedup:.2f}x   loss traces bit-identical: {identical}")
+    # -- overlap breakdown at the primary size ---------------------------
+    primary = "opt-125m-reduced" if "opt-125m-reduced" in sizes \
+        else next(iter(sizes))
+    cfg = sizes[primary]
+    print(f"-- overlap breakdown @ {primary} --")
 
+    runner(cfg, "scan")()                                   # warm
+    prefetch = {}
+    for label, ov in (("on", True), ("off", False)):
+        rps, res = timed(runner(cfg, "scan", overlap=ov),
+                         args.rounds, args.repeats)
+        prefetch[label] = {"rounds_per_s": round(rps, 2),
+                           "prep_stall_s": round(res.prep_stall_s, 4)}
+        print(f"  prefetch {label:3s}: {rps:8.1f} r/s, "
+              f"boundary prep stall {res.prep_stall_s * 1e3:7.1f} ms")
+
+    def ckpt_runner(double_buffer: bool):
+        def go():
+            with tempfile.TemporaryDirectory() as d:
+                hooks = [fedsim.CheckpointHook(
+                    d, every=args.chunk_rounds,
+                    double_buffer=double_buffer)]
+                return fedsim.Experiment(
+                    cfg, pz, make_pipe(cfg, args), args.rounds,
+                    engine="scan", chunk_rounds=args.chunk_rounds,
+                    hooks=hooks).run()
+        return go
+
+    ckpt_runner(True)()                                     # warm
+    checkpoint = {}
+    for label, db in (("double_buffer", True), ("sync", False)):
+        rps, res = timed(ckpt_runner(db), args.rounds, args.repeats)
+        checkpoint[label] = {"rounds_per_s": round(rps, 2),
+                             "ckpt_stall_s": round(res.ckpt_stall_s, 4)}
+        print(f"  checkpoint {label:13s}: {rps:8.1f} r/s, "
+              f"snapshot stall {res.ckpt_stall_s * 1e3:7.1f} ms")
+
+    report = {
+        "schema": SCHEMA,
+        "created_unix": int(time.time()),
+        "host": {"devices": len(jax.devices()),
+                 "platform": jax.devices()[0].platform},
+        "config": {"rounds": args.rounds, "chunk_rounds": args.chunk_rounds,
+                   "clients": args.clients, "batch": args.batch,
+                   "seq": args.seq, "n_perturb": args.n_perturb,
+                   "repeats": args.repeats},
+        "sizes": {name: {"param_count": int(cfg_.param_count())}
+                  for name, cfg_ in sizes.items()},
+        "grid": grid,
+        "overlap": {"size": primary, "prefetch": prefetch,
+                    "checkpoint": checkpoint},
+    }
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"loop_rounds_per_s": loop_rps,
-                       "scan_rounds_per_s": scan_rps,
-                       "speedup": speedup,
-                       "bit_identical": identical,
-                       "chunk_rounds": args.chunk_rounds,
-                       "rounds": args.rounds}, f, indent=2)
-
-    if not identical:
-        raise SystemExit("FAIL: scan and loop trajectories diverged")
-    if speedup < 2.0:
-        print("WARNING: speedup below the 2x acceptance target "
-              "(contended machine?)")
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

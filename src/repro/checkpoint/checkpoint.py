@@ -75,30 +75,72 @@ def _retain(directory: str, keep: int) -> None:
         shutil.rmtree(os.path.join(directory, stale))
 
 
-class AsyncCheckpointer:
-    """Non-blocking checkpointing: snapshot to host, write on a worker thread.
+@jax.jit
+def _device_snapshot(params: PyTree) -> PyTree:
+    """Bit-exact on-device copy of the pytree into fresh (non-donated)
+    buffers. The training carry is buffer-donated through the next chunk,
+    so snapshotting the *carry itself* would either block the next dispatch
+    (sync device_get) or race the donation; copying first decouples the
+    checkpoint's device→host transfer from the training stream entirely.
+    `optimization_barrier` (not a bare identity) defeats jit's input→output
+    forwarding fast path, which would hand back the original buffers."""
+    return jax.lax.optimization_barrier(params)
 
-    The training loop only pays for the device→host transfer (which must be
-    synchronous to get a consistent snapshot); serialization, CRC and fsync
-    happen off-thread. `wait()` joins the in-flight write (called before
-    shutdown and before starting a newer write — writes never interleave).
+
+class AsyncCheckpointer:
+    """Non-blocking checkpointing: double-buffered snapshot, write off-thread.
+
+    Default (`double_buffer=True`) boundary cost on the training thread is
+    one async dispatch: the params are copied on-device into fresh buffers,
+    the device→host transfer is started with `copy_to_host_async`, and the
+    worker thread materializes the host copy (blocking only itself until
+    the transfer lands) before serializing + CRC + fsync. The donated carry
+    is never touched after dispatch, so the next chunk launches without
+    waiting for the snapshot — the historical synchronous `device_get`
+    serialized compute-finish + D2H onto the training thread.
+
+    `double_buffer=False` keeps that historical synchronous snapshot (the
+    measurement baseline). `stall_s` accumulates the training-thread time
+    spent inside `save()` either way, so the boundary stall attributable to
+    the snapshot is directly comparable across modes. `wait()` joins the
+    in-flight write (writes never interleave).
     """
 
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 double_buffer: bool = True):
         self.directory = directory
         self.keep = keep
+        self.double_buffer = double_buffer
+        self.stall_s = 0.0
         self._thread = None
+
+    def _write(self, step: int, snap: PyTree, extra: Optional[Dict]) -> None:
+        host_params = jax.tree_util.tree_map(lambda a: np.asarray(a), snap)
+        save(self.directory, step, host_params, extra=extra, keep=self.keep)
 
     def save(self, step: int, params: PyTree,
              extra: Optional[Dict] = None) -> None:
         import threading
+        import time
 
+        t0 = time.perf_counter()
         self.wait()
-        host_params = jax.tree_util.tree_map(lambda a: np.asarray(a), params)
-        self._thread = threading.Thread(
-            target=save, args=(self.directory, step, host_params),
-            kwargs={"extra": extra, "keep": self.keep}, daemon=True)
+        if self.double_buffer and any(
+                isinstance(leaf, jax.Array)
+                for leaf in jax.tree_util.tree_leaves(params)):
+            snap = _device_snapshot(params)
+            for leaf in jax.tree_util.tree_leaves(snap):
+                leaf.copy_to_host_async()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, snap, extra), daemon=True)
+        else:
+            host_params = jax.tree_util.tree_map(
+                lambda a: np.asarray(a), params)     # sync D2H baseline
+            self._thread = threading.Thread(
+                target=save, args=(self.directory, step, host_params),
+                kwargs={"extra": extra, "keep": self.keep}, daemon=True)
         self._thread.start()
+        self.stall_s += time.perf_counter() - t0
 
     def wait(self) -> None:
         if self._thread is not None:

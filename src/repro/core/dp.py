@@ -23,6 +23,8 @@ import math
 from dataclasses import dataclass, field
 from typing import List
 
+import numpy as np
+
 
 SQRT_PI = math.sqrt(math.pi)
 
@@ -112,6 +114,23 @@ class PrivacyAccountant:
         self.spent += cost
         self.history.append(cost)
         return cost
+
+    def spend_batch(self, costs) -> float:
+        """Charge a whole chunk of per-round costs in one call.
+
+        The ledger advances by the same float64 left fold the per-round
+        `spend` loop performs (`np.cumsum` accumulates strictly
+        sequentially), so the final spent value — and therefore any
+        downstream budget comparison — is bit-identical to charging round
+        by round. Returns the total charged.
+        """
+        costs = np.asarray(costs, dtype=np.float64)
+        if costs.size == 0:
+            return 0.0
+        before = self.spent
+        self.spent = float(np.cumsum(np.concatenate(([before], costs)))[-1])
+        self.history.extend(float(c) for c in costs)
+        return self.spent - before
 
     def would_exceed(self, cost: float, slack: float = 1e-9) -> bool:
         return self.spent + cost > self.budget * (1.0 + slack)

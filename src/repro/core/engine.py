@@ -28,8 +28,10 @@ under scan).
 from __future__ import annotations
 
 import functools
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,11 +58,15 @@ class ControlTrace:
       seed [R] u32, c [R] f32, sigma [R,K] f32, n0 [R] f32, mask [R,K] f32,
       g [R,K] f32 (per-client cos θ CSI factors from the channel trace),
       noise_bits [R,2] u32.
+
+    `host_masks` is the host-side numpy view of ctl["mask"] — the driver's
+    uplink-bit accounting reads it instead of syncing the device copy back.
     """
     t0: int
     ctl: Dict[str, jnp.ndarray]
     acct_cost: np.ndarray     # [R] per-round DP cost (Transport.round_dp_costs)
     charged: bool             # whether these rounds cost privacy at all
+    host_masks: Optional[np.ndarray] = None   # [R, K] survival view
 
     def __len__(self) -> int:
         return int(self.ctl["seed"].shape[0])
@@ -82,7 +88,7 @@ def _noise_bits_trace(key_base: jax.Array, ts: jnp.ndarray) -> jnp.ndarray:
 
 def build_trace(schedule, pz, t0: int, t1: int, *,
                 transport=None, fault=None, elastic=None,
-                channel=None) -> ControlTrace:
+                channel=None, ctl_sharding=None) -> ControlTrace:
     """Precompute the control trace for rounds [t0, t1).
 
     Mask generation consumes the (stateful) FaultModel RNG in round order, so
@@ -96,6 +102,11 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
     ctl["mask"] alongside the fault/elastic survival masks. None (or a
     perfect-CSI, no-outage trace) reproduces the historical control block
     bit for bit.
+
+    The whole control block is staged host-side and shipped in ONE
+    `jax.device_put` of the dict — with `ctl_sharding` (a pytree of
+    NamedShardings from `runtime.sharding.control_sharding`) the block
+    lands replicated across the client mesh at transfer time.
     """
     if transport is None:
         transport = tp.resolve(pz)
@@ -133,61 +144,191 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
 
     c_slice = np.asarray(schedule.c[t0:t1], dtype=np.float64)
     sigma_slice = np.asarray(schedule.sigma[t0:t1], dtype=np.float64)
-    ctl = {
-        "seed": seeds.astype(jnp.uint32),
-        "c": jnp.asarray(c_slice, jnp.float32),
-        "sigma": jnp.asarray(sigma_slice, jnp.float32),
-        "n0": jnp.full((rounds,), schedule.n0, jnp.float32),
-        "mask": jnp.asarray(masks, jnp.float32),
-        "g": jnp.asarray(g, jnp.float32),
-        "noise_bits": noise_bits.astype(jnp.uint32),
+    masks = np.asarray(masks, dtype=np.float32)
+    host_ctl = {
+        "seed": np.asarray(seeds, dtype=np.uint32),
+        "c": np.asarray(c_slice, dtype=np.float32),
+        "sigma": np.asarray(sigma_slice, dtype=np.float32),
+        "n0": np.full((rounds,), schedule.n0, dtype=np.float32),
+        "mask": masks,
+        "g": np.asarray(g, dtype=np.float32),
+        "noise_bits": np.asarray(noise_bits, dtype=np.uint32),
     }
+    # one transfer for the whole block (sharded placement, when requested,
+    # happens here rather than as a post-hoc reshard)
+    ctl = jax.device_put(host_ctl, ctl_sharding)
 
     charged = bool(transport.charges_privacy(schedule, pz))
     acct_cost = transport.round_dp_costs(schedule, t0, t1, pz) if charged \
         else np.zeros(rounds)
-    return ControlTrace(t0=t0, ctl=ctl, acct_cost=acct_cost, charged=charged)
+    return ControlTrace(t0=t0, ctl=ctl, acct_cost=acct_cost, charged=charged,
+                        host_masks=masks)
 
 
 def affordable_rounds(accountant: PrivacyAccountant, trace: ControlTrace,
                       slack: float = 1e-6) -> int:
     """How many leading rounds of `trace` the DP budget affords.
 
-    Pure lookahead — charges nothing. Uses the same slack as the historical
-    per-round `would_violate` guard, so a mid-chunk trip lands on the
-    identical round under either engine.
+    Pure lookahead — charges nothing. One `np.cumsum` over the cost vector,
+    seeded with the current ledger so the accumulation is the same float64
+    left fold the historical per-round `would_violate` loop performed
+    (cumsum is strictly sequential): a mid-chunk trip lands on the
+    bit-identical round under either engine and either implementation
+    (tests/test_engine.py pins this against the reference loop).
     """
     if not trace.charged:
         return len(trace)
-    spent = accountant.spent
-    for r in range(len(trace)):
-        cost = float(trace.acct_cost[r])
-        if spent + cost > accountant.budget * (1.0 + slack):
-            return r
-        spent += cost
-    return len(trace)
+    costs = np.asarray(trace.acct_cost, dtype=np.float64)
+    # cum[r] = ledger after charging rounds < r, starting from `spent`
+    cum = np.cumsum(np.concatenate(([accountant.spent], costs)))
+    over = np.flatnonzero(cum[1:] > accountant.budget * (1.0 + slack))
+    return int(over[0]) if over.size else len(trace)
 
 
 def charge_rounds(accountant: PrivacyAccountant, trace: ControlTrace,
                   n: int) -> None:
     """Charge the accountant for the first n rounds of the trace (what the
-    loop does before each step, batched between chunks)."""
-    if not trace.charged:
+    loop does before each step, batched into one `spend_batch` call with
+    the identical sequential-accumulation semantics)."""
+    if not trace.charged or n <= 0:
         return
-    for r in range(n):
-        accountant.spend(float(trace.acct_cost[r]))
+    accountant.spend_batch(np.asarray(trace.acct_cost[:n], dtype=np.float64))
 
 
 # ---------------------------------------------------------------------------
-# Batch stacking (host → device, one transfer per chunk)
+# Batch staging (host → device, one transfer per chunk)
 # ---------------------------------------------------------------------------
+
+class BatchStager:
+    """Preallocated, slot-rotated host staging for chunk batches.
+
+    Per (slot, chunk shape) this keeps ONE host buffer per batch key; each
+    chunk is stacked *into* the buffer in place and shipped with a single
+    `jax.device_put` of the whole dict, carrying the target NamedShardings
+    when a mesh is active — sharded placement happens at transfer time, not
+    as a post-hoc reshard, and no per-key np.stack→jnp.asarray round trip
+    ever materializes a second host copy.
+
+    Slots exist because the prefetch thread prepares chunk i+1 while chunk
+    i may still be in flight. NOTE the lifetime contract: on the CPU
+    backend `device_put` may zero-copy ALIAS the host buffer, so staged
+    arrays are valid only until their slot is rewritten (two `stage` calls
+    later) — the driver guarantees safety by kicking chunk i+1's prep only
+    after chunk i-1's execution has been synced (ChunkPrefetcher.kick);
+    the belt-and-braces `block_until_ready` below additionally covers
+    real-transfer backends where readiness lags the `device_put` call.
+    """
+
+    def __init__(self, pipeline, sharding_fn: Optional[Callable] = None,
+                 slots: int = 2):
+        self._pipeline = pipeline
+        self._sharding_fn = sharding_fn
+        self._slots: List[Dict] = [{"bufs": {}, "inflight": None}
+                                   for _ in range(max(1, slots))]
+        self._next = 0
+
+    def stage(self, t0: int, t1: int) -> Dict[str, jnp.ndarray]:
+        """Stacked round batches [R, ...] for rounds [t0, t1), on device
+        (labels dropped, exactly as the loop path feeds the step)."""
+        slot = self._slots[self._next]
+        self._next = (self._next + 1) % len(self._slots)
+        if slot["inflight"] is not None:
+            jax.block_until_ready(slot["inflight"])  # host buffer reusable
+            slot["inflight"] = None
+        per_round = [self._pipeline.batch(int(t)) for t in range(t0, t1)]
+        rounds = len(per_round)
+        host: Dict[str, np.ndarray] = {}
+        for k, first in per_round[0].items():
+            if k == "labels":
+                continue
+            shape = (rounds,) + np.shape(first)
+            buf = slot["bufs"].get(k)
+            if buf is None or buf.shape != shape:
+                buf = np.empty(shape, dtype=np.asarray(first).dtype)
+                slot["bufs"][k] = buf
+            for r, b in enumerate(per_round):
+                buf[r] = b[k]
+            host[k] = buf
+        sharding = self._sharding_fn(host) if self._sharding_fn else None
+        out = jax.device_put(host, sharding)
+        slot["inflight"] = out
+        return out
+
 
 def stack_batches(pipeline, t0: int, t1: int) -> Dict[str, jnp.ndarray]:
-    """Stacked round batches [R, ...] for rounds [t0, t1) (labels dropped,
-    exactly as the loop path feeds the step)."""
-    per_round = [pipeline.batch(int(t)) for t in range(t0, t1)]
-    return {k: jnp.asarray(np.stack([b[k] for b in per_round]))
-            for k in per_round[0] if k != "labels"}
+    """Stacked round batches [R, ...] for rounds [t0, t1) — one-shot
+    convenience over `BatchStager` (no buffer reuse across calls)."""
+    return BatchStager(pipeline, slots=1).stage(t0, t1)
+
+
+# ---------------------------------------------------------------------------
+# Chunk prefetch (host-side prep of chunk i+1 overlaps device compute of i)
+# ---------------------------------------------------------------------------
+
+class ChunkPrefetcher:
+    """One-chunk-ahead host pipeline with an explicit safety handshake.
+
+    `prepare(a, b)` does the host work for chunk [a, b) — control-trace
+    build (which consumes the stateful FaultModel RNG, so chunks MUST be
+    prepared in round order: one worker, submissions in sequence) plus
+    batch staging. The driver calls `kick(i + 1)` only AFTER it has synced
+    chunk i-1's metrics: chunk i-1's execution is then provably complete,
+    so the stager slot that chunk shares with i+1 can be rewritten — this
+    matters because `jax.device_put` may ZERO-COPY alias host buffers on
+    the CPU backend, making "transfer complete" no guarantee that the
+    execution stopped reading them.
+
+    `get(i)` waits for the kicked prep (or runs it inline when nothing was
+    kicked — chunk 0, or `overlap=False`); the wait time accumulates in
+    `stall_s`, so the no-overlap control measures the full prep cost and
+    the overlapped path only the residual.
+    """
+
+    def __init__(self, prepare: Callable[[int, int], Any],
+                 bounds: Sequence[Tuple[int, int]], overlap: bool = True):
+        self._prepare = prepare
+        self._bounds = list(bounds)
+        self._overlap = overlap and len(self._bounds) > 0
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="chunk-prefetch") \
+            if self._overlap else None
+        self._fut: Optional[Future] = None
+        self._fut_i = -1
+        self._next = 0            # next chunk index the driver may get()
+        self.stall_s = 0.0
+
+    def kick(self, i: int) -> None:
+        """Start chunk i's prep on the worker thread (no-op when overlap
+        is off, i is out of range, or i was already kicked/consumed)."""
+        if (self._overlap and self._fut is None and i == self._next
+                and i < len(self._bounds)):
+            self._fut_i = i
+            self._fut = self._pool.submit(self._prepare, *self._bounds[i])
+
+    def get(self, i: int) -> Any:
+        """Prepared payload for chunk i (blocks; stall time recorded)."""
+        assert i == self._next, "chunks must be consumed in order"
+        self._next += 1
+        t0 = time.perf_counter()
+        if self._fut is not None:
+            assert self._fut_i == i
+            out = self._fut.result()
+            self._fut = None
+        else:
+            out = self._prepare(*self._bounds[i])
+        self.stall_s += time.perf_counter() - t0
+        return out
+
+    def close(self) -> None:
+        if self._pool is not None:
+            if self._fut is not None:              # drain an abandoned prep
+                try:
+                    self._fut.result()
+                except Exception:
+                    pass
+                self._fut = None
+            self._pool.shutdown(wait=True)
+            self._pool = None
 
 
 # ---------------------------------------------------------------------------
@@ -208,7 +349,7 @@ class LoopExecutor:
 
     def run(self, carry: PyTree, ctl_stack: Dict[str, jnp.ndarray],
             batch_stack: Dict[str, jnp.ndarray]
-            ) -> Tuple[PyTree, Dict[str, np.ndarray]]:
+            ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
         rounds = int(ctl_stack["seed"].shape[0])
         collected: Optional[Dict[str, list]] = None
         for r in range(rounds):
@@ -218,10 +359,12 @@ class LoopExecutor:
             if collected is None:
                 collected = {k: [] for k in metrics}
             for k, v in metrics.items():
-                collected[k].append(v)
+                collected[k].append(v)    # device arrays — no per-round sync
+        # stacked device-side; the driver's flush path converts to host in
+        # ONE np.asarray per metric (for the 1-round spans the loop engine
+        # runs on, that flush is immediate, so on_round stays live)
         metrics = {} if collected is None else \
-            {k: np.stack([np.asarray(x) for x in v])
-             for k, v in collected.items()}
+            {k: jnp.stack(v) for k, v in collected.items()}
         return carry, metrics
 
 

@@ -38,6 +38,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro import channel
 from repro.checkpoint import checkpoint as ckpt
@@ -49,6 +50,7 @@ from repro.core.dp import PrivacyAccountant
 from repro.data.pipeline import FederatedPipeline
 from repro.models import registry
 from repro.optim import fo as fo_opt
+from repro.runtime import sharding as shd
 from repro.runtime.fault import ElasticSchedule, FaultModel
 
 
@@ -74,6 +76,10 @@ class RunResult:
     resumed_from: int = 0
     privacy_exhausted_at: int = -1   # round at which the guard tripped
     uplink_bits: int = 0             # total uplink spend (Transport-accounted)
+    params: Optional[Any] = None     # final model parameters
+    # chunk-boundary stall accounting (seconds over the whole run):
+    prep_stall_s: float = 0.0        # driver blocked on host-side chunk prep
+    ckpt_stall_s: float = 0.0        # driver blocked on checkpoint snapshots
 
 
 # ---------------------------------------------------------------------------
@@ -140,11 +146,19 @@ class EvalHook(RoundHook):
 
 
 class CheckpointHook(RoundHook):
-    """Crash-safe restore-on-start + async save every `cadence` rounds."""
+    """Crash-safe restore-on-start + async save every `cadence` rounds.
 
-    def __init__(self, directory: str, every: int = 0):
+    `double_buffer` selects the non-blocking snapshot path (on-device copy
+    + `copy_to_host_async`, materialized on the writer thread) — the next
+    chunk dispatches without waiting for the device→host transfer. False
+    keeps the historical synchronous `device_get` (the stall baseline).
+    """
+
+    def __init__(self, directory: str, every: int = 0,
+                 double_buffer: bool = True):
         self.directory = directory
         self.cadence = every
+        self.double_buffer = double_buffer
         self._saver = None
 
     def on_start(self, exp: "Experiment") -> None:
@@ -156,7 +170,8 @@ class CheckpointHook(RoundHook):
                 extra["accountant"])
             exp.result.resumed_from = exp.start_round
         if self.cadence:
-            self._saver = ckpt.AsyncCheckpointer(self.directory)
+            self._saver = ckpt.AsyncCheckpointer(
+                self.directory, double_buffer=self.double_buffer)
 
     def on_boundary(self, t_done: int, exp: "Experiment") -> None:
         if self._saver is not None and t_done % self.cadence == 0:
@@ -203,7 +218,8 @@ class Experiment:
                  fault: Optional[FaultModel] = None,
                  elastic: Optional[ElasticSchedule] = None,
                  impl: Optional[str] = None, dtype=jnp.float32,
-                 params: Optional[Any] = None):
+                 params: Optional[Any] = None,
+                 mesh: Optional[Mesh] = None, overlap: bool = True):
         if engine not in ("scan", "loop"):
             raise ValueError(
                 f"unknown engine: {engine!r} (want 'scan'|'loop')")
@@ -225,6 +241,24 @@ class Experiment:
         self.impl = impl
         self.dtype = dtype
         self.params = params
+        self.mesh = mesh
+        self.overlap = overlap
+        if mesh is not None:
+            cl = shd.client_axes(mesh)
+            n_shards = shd.axis_size(mesh, cl)
+            if not cl or n_shards <= 0:
+                raise ValueError(f"mesh {mesh.axis_names} has no client "
+                                 "axes (want 'pod' and/or 'data')")
+            if pz.n_clients % n_shards != 0:
+                raise ValueError(
+                    f"n_clients={pz.n_clients} must divide evenly over the "
+                    f"{n_shards} client shards of mesh {dict(mesh.shape)} — "
+                    "pAirZero clients split evenly or not at all")
+            if self.transport.kind == "fo":
+                raise ValueError(
+                    "the FO baseline has no shard_map variant (it uploads "
+                    "d-dimensional gradients, not a scalar) — run it "
+                    "without mesh=")
         # populated by run()/hooks
         self.result = RunResult()
         self.accountant = PrivacyAccountant(pz.dp.epsilon, pz.dp.delta)
@@ -240,7 +274,7 @@ class Experiment:
             return _fo_scan_step(raw), (self.params,
                                         optimizer.init(self.params))
         raw = pairzero.make_zo_step(self.model_cfg, self.pz, impl=self.impl,
-                                    transport=self.transport)
+                                    transport=self.transport, mesh=self.mesh)
         return raw, self.params
 
     def _executor(self, step_fn):
@@ -268,6 +302,12 @@ class Experiment:
                                                self.model_cfg, self.dtype)
         for hook in self.hooks:
             hook.on_start(self)
+        if self.mesh is not None:
+            # FSDP placement over the client axes ('model' TP when present);
+            # restored checkpoints land default-placed, so this reshards
+            # fresh-init and resumed runs alike
+            self.params = jax.device_put(
+                self.params, shd.params_sharding(self.mesh, self.params))
 
         step_fn, carry = self._build_step()
         executor = self._executor(step_fn)
@@ -278,11 +318,35 @@ class Experiment:
         # Span length never changes numerics (trace values are split-
         # invariant); only the scan engine benefits from longer spans.
         span = 1 if self.engine == "loop" else self.chunk_rounds
+        bounds = eng.chunk_boundaries(self.start_round, self.rounds,
+                                      span, align)
+
+        # Host-side chunk prep — control trace (+ its single device_put,
+        # replicated over the mesh) and batch staging into preallocated
+        # buffers — runs one chunk ahead on the prefetch thread while the
+        # device executes the current chunk. Prep order == round order, so
+        # the stateful FaultModel RNG replays exactly the per-round draw.
+        ctl_shard = NamedSharding(self.mesh, PartitionSpec()) \
+            if self.mesh is not None else None
+        stager = eng.BatchStager(
+            self.pipeline,
+            sharding_fn=(lambda like:
+                         shd.chunk_batch_sharding(self.mesh, like))
+            if self.mesh is not None else None)
+
+        def prepare(a: int, b: int):
+            trace = eng.build_trace(schedule, pz, a, b,
+                                    transport=self.transport,
+                                    fault=self.fault, elastic=self.elastic,
+                                    channel=ctrace, ctl_sharding=ctl_shard)
+            return trace, stager.stage(a, b)
+
+        prefetch = eng.ChunkPrefetcher(prepare, bounds, overlap=self.overlap)
 
         # Software-pipelined chunk loop: the metric sync for chunk i is
-        # deferred until chunk i+1 has been *dispatched*, so the host-side
-        # prep of the next chunk (control trace, DP lookahead, batch
-        # stacking) overlaps the device executing the current one.
+        # deferred until chunk i+1 has been *dispatched*, so both the
+        # prefetch thread and the flush overlap the device executing the
+        # current chunk.
         pending = None            # (first_round, n_rounds, metrics)
         client_rounds = 0.0       # Σ_t K_eff(t) over executed rounds
 
@@ -300,38 +364,42 @@ class Experiment:
                 for r in range(n_rounds):
                     hook.on_round(a0 + r, {k: v[r] for k, v in host.items()})
 
-        for a, b in eng.chunk_boundaries(self.start_round, self.rounds,
-                                         span, align):
-            trace = eng.build_trace(schedule, pz, a, b,
-                                    transport=self.transport,
-                                    fault=self.fault, elastic=self.elastic,
-                                    channel=ctrace)
-            n_ok = eng.affordable_rounds(self.accountant, trace)
-            if n_ok == 0:
-                result.privacy_exhausted_at = a
-                break
-            eng.charge_rounds(self.accountant, trace, n_ok)
-            # uplink accounting: only clients that actually transmit
-            # (survival mask 1) are billed their payload this round
-            client_rounds += float(np.asarray(
-                trace.ctl["mask"][:n_ok]).sum())
-            batches = eng.stack_batches(self.pipeline, a, a + n_ok)
-            carry, metrics = executor.run(carry, trace.rows(n_ok), batches)
-            flush()               # sync chunk i-1 while chunk i runs
-            pending = (a, n_ok, metrics)
-            if self.engine == "loop":
-                # per-round dispatch already synced each round — deliver
-                # metrics/on_round immediately (live logging), nothing to
-                # pipeline against.
-                flush()
-            self.params = carry[0] if self.transport.kind == "fo" else carry
-            t_done = a + n_ok
-            if n_ok < b - a:      # guard tripped mid-chunk: hard stop
-                flush()
-                result.privacy_exhausted_at = t_done
-                break
-            for hook in self.hooks:
-                hook.on_boundary(t_done, self)
+        try:
+            for i, (a, b) in enumerate(bounds):
+                trace, batches = prefetch.get(i)
+                n_ok = eng.affordable_rounds(self.accountant, trace)
+                if n_ok == 0:
+                    result.privacy_exhausted_at = a
+                    break
+                eng.charge_rounds(self.accountant, trace, n_ok)
+                # uplink accounting: only clients that actually transmit
+                # (survival mask 1) are billed their payload this round
+                client_rounds += float(trace.host_masks[:n_ok].sum())
+                if n_ok < b - a:  # guard trips mid-chunk: truncated dispatch
+                    batches = {k: v[:n_ok] for k, v in batches.items()}
+                carry, metrics = executor.run(carry, trace.rows(n_ok),
+                                              batches)
+                flush()           # sync chunk i-1 while chunk i runs
+                pending = (a, n_ok, metrics)
+                if self.engine == "loop":
+                    # per-round dispatch already synced each round — deliver
+                    # metrics/on_round immediately (live logging), nothing
+                    # to pipeline against.
+                    flush()
+                # chunk i-1 is now synced ⇒ its stager slot (shared with
+                # chunk i+1) is reusable: start the next prep
+                prefetch.kick(i + 1)
+                self.params = carry[0] if self.transport.kind == "fo" \
+                    else carry
+                t_done = a + n_ok
+                if n_ok < b - a:  # guard tripped mid-chunk: hard stop
+                    flush()
+                    result.privacy_exhausted_at = t_done
+                    break
+                for hook in self.hooks:
+                    hook.on_boundary(t_done, self)
+        finally:
+            prefetch.close()
         flush()
 
         for hook in self.hooks:
@@ -345,8 +413,12 @@ class Experiment:
         result.uplink_bits = int(round(
             self.transport.payload_bits(pz, self.model_cfg.param_count())
             * client_rounds))
+        result.prep_stall_s = prefetch.stall_s
+        result.ckpt_stall_s = sum(
+            hk._saver.stall_s for hk in self.hooks
+            if isinstance(hk, CheckpointHook) and hk._saver is not None)
         result.wall_time_s = time.time() - t0
-        result.params = self.params  # type: ignore[attr-defined]
+        result.params = self.params
         return result
 
 
@@ -366,15 +438,19 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         on_round: Optional[Callable[[int, Dict], None]] = None,
         transport: Optional[tp.Transport] = None,
         channel_model: Optional[channel.ChannelModel] = None,
+        mesh: Optional[Mesh] = None, overlap: bool = True,
         variant: Optional[str] = None,
         scheme: Optional[str] = None) -> RunResult:
     """Run T rounds of pAirZero (or a baseline transport) on one host.
 
     Thin wrapper over `Experiment`: builds the eval/checkpoint/logging
-    hooks from the historical kwargs and delegates. `variant=`/`scheme=`
-    are the DEPRECATED string spellings, routed through the transport
-    registry for one more release — pass `transport=` or put a
-    TransportConfig in `pz.transport` instead.
+    hooks from the historical kwargs and delegates. `mesh=` runs the
+    shard_map'd step with clients mapped over the mesh's (pod, data) axes
+    (see `pairzero.make_zo_step`); `overlap=False` disables the prefetch
+    thread (the no-overlap stall control). `variant=`/`scheme=` are the
+    DEPRECATED string spellings, routed through the transport registry for
+    one more release — pass `transport=` or put a TransportConfig in
+    `pz.transport` instead.
     """
     if variant is not None or scheme is not None:
         tp.deprecated_strings(variant or pz.variant,
@@ -395,4 +471,4 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
                       chunk_rounds=chunk_rounds, transport=transport,
                       channel_model=channel_model, hooks=hooks, fault=fault,
                       elastic=elastic, impl=impl, dtype=dtype,
-                      params=params).run()
+                      params=params, mesh=mesh, overlap=overlap).run()

@@ -24,6 +24,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, PairZeroConfig
 from repro.core import transport as tp
@@ -81,7 +83,8 @@ def make_control(t: int, schedule, base_seed: int, n_clients: int,
 def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                  impl: Optional[str] = None,
                  scheme: Optional[str] = None,
-                 transport: Optional[tp.Transport] = None) -> Callable:
+                 transport: Optional[tp.Transport] = None,
+                 mesh: Optional[Mesh] = None) -> Callable:
     """Build the jitted ZO train step for any scalar-payload Transport
     (analog / sign / perfect / digital / user-registered).
 
@@ -93,6 +96,16 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
     the scan engine stay compile-once across invocations (benchmarks,
     tests, resumed runs). `scheme` is the deprecated string override kept
     for one release; prefer `transport` or `pz.transport`.
+
+    `mesh` (hashable, part of the memo key) selects the shard_map'd
+    variant: the per-client dual forward runs on the mesh's (pod, data)
+    client axes — each shard holds its clients' batch slice and evaluates
+    only their losses — and the Transport's scalar decode consumes ONE
+    `jax.lax.psum` over those axes (`Transport.aggregate_mesh`), the
+    cross-device all-reduce the paper's O(1) uplink maps onto. Params and
+    control enter replicated w.r.t. the client axes (a 'model' axis, if
+    present, stays under GSPMD auto for TP/FSDP); the trajectory is
+    bit-identical to the single-device step (tests/test_mesh_engine.py).
     """
     loss_fn = make_loss_fn(model_cfg, impl=impl)
     transport = transport if transport is not None \
@@ -104,20 +117,38 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
     mode = "chained" if pz.zo.dual_mode in ("chained", "sequential") \
         else "fresh"
 
-    def step(params: PyTree, batch: Dict, ctl: Dict
-             ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
+    def round_body(params: PyTree, batch: Dict, ctl: Dict,
+                   client_ids: Optional[jnp.ndarray] = None,
+                   client_axes: Tuple[str, ...] = ()
+                   ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
+        """One pAirZero round. With `client_axes` set this runs as a
+        shard_map body: the dual forward sees only the local client shard
+        (`client_ids` is its slice of the global client-id iota — data, not
+        `axis_index`, so the same body lowers on partial-auto meshes);
+        (L+, L−) are reassembled across shards for the loss/projection
+        metrics while the Transport performs its own client-axis psum."""
         metrics = {}
         p_hat_sum = jnp.float32(0.0)
         loss_acc = jnp.float32(0.0)
+        k_total = ctl["mask"].shape[-1]
         for j in range(n_perturb):
             seed = fmix32(ctl["seed"]
                           + jnp.uint32((0x9E3779B9 * (j + 1)) & 0xFFFFFFFF))
             lp, lm, params_at = zo.dual_forward(
                 lambda p: loss_fn(p, batch), params, seed, mu, mode=mode)
-            p_k = zo.projection(lp, lm, mu, gamma)            # [K]
             noise_key = jax.random.wrap_key_data(ctl["noise_bits"])
-            p_hat = transport.aggregate(p_k, ctl,
-                                        jax.random.fold_in(noise_key, j))
+            round_key = jax.random.fold_in(noise_key, j)
+            if client_axes:
+                offset = client_ids[0]        # shard's first global client
+                p_local = zo.projection(lp, lm, mu, gamma)    # [K/n]
+                p_hat = transport.aggregate_mesh(p_local, ctl, round_key,
+                                                 client_axes, offset)
+                lp, lm = tp.client_all_gather(
+                    jnp.stack([lp, lm]), client_axes, offset, k_total)
+                p_k = zo.projection(lp, lm, mu, gamma)        # [K], full
+            else:
+                p_k = zo.projection(lp, lm, mu, gamma)        # [K]
+                p_hat = transport.aggregate(p_k, ctl, round_key)
             # restore + update fused into one axpy (chained mode)
             params = zo.apply_update(params_at, seed, p_hat,
                                      lr / n_perturb, mu, mode=mode)
@@ -130,7 +161,46 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
         metrics["k_eff"] = jnp.sum(ctl["mask"])
         return params, metrics
 
-    return step
+    if mesh is None:
+        return round_body
+
+    from repro.runtime import sharding as shd
+    axes = shd.client_axes(mesh)
+    if not axes:
+        raise ValueError(f"mesh {mesh.axis_names} has no client axes "
+                         "(want 'pod' and/or 'data')")
+    auto = frozenset(a for a in mesh.axis_names if a not in axes)
+    body = functools.partial(round_body, client_axes=axes)
+
+    def sharded_step(params: PyTree, batch: Dict, ctl: Dict
+                     ) -> Tuple[PyTree, Dict[str, jnp.ndarray]]:
+        repl = lambda tree: jax.tree_util.tree_map(lambda _: P(), tree)
+        bspecs = jax.tree_util.tree_map(
+            lambda l: P(axes, *([None] * (l.ndim - 1))), batch)
+        out_specs = (repl(params),
+                     {"p_clients": P(), "loss": P(), "p_hat": P(),
+                      "k_eff": P()})
+        k_total = ctl["mask"].shape[-1]
+        ids = jnp.arange(k_total, dtype=jnp.int32)
+
+        def manual_body(pr, ba, ct, ci):
+            # model-side sharding hints must not mention the now-manual
+            # client axes (with_sharding_constraint would reject them)
+            with shd.manual_axes(axes):
+                return body(pr, ba, ct, client_ids=ci)
+
+        new_params, metrics = shard_map(
+            manual_body, mesh=mesh,
+            in_specs=(repl(params), bspecs, repl(ctl), P(axes)),
+            out_specs=out_specs, check_rep=False, auto=auto)(
+                params, batch, ctl, ids)
+        # pin the carry back to the FSDP layout so a surrounding lax.scan
+        # keeps one stable placement instead of round-tripping per round
+        new_params = jax.lax.with_sharding_constraint(
+            new_params, shd.params_sharding(mesh, new_params))
+        return new_params, metrics
+
+    return sharded_step
 
 
 @functools.lru_cache(maxsize=128)

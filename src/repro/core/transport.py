@@ -48,6 +48,27 @@ from repro.core.dp import round_privacy_cost
 OTA_SCHEMES = ("solution", "static", "reversed", "perfect")
 
 
+def client_all_gather(x: jnp.ndarray, axis_names: tuple, offset: jnp.ndarray,
+                      k_total: int) -> jnp.ndarray:
+    """Reassemble the full per-client [..., K] array from this shard's
+    [..., K/n] slice, inside a shard_map over the client mesh axes.
+
+    Every shard scatters its slice into a zeroed [..., K] buffer at its
+    `offset` (the shard's first global client id — delivered as *data*, a
+    client-id iota sharded exactly like the batch, because `lax.axis_index`
+    does not lower under partial-auto meshes on jax 0.4.x) and ONE
+    `jax.lax.psum` over the named axes sums the disjoint supports — the
+    all-reduce IS the simulated over-the-air superposition, and it is what
+    shows up in the compiled HLO. Adding zero is bitwise-exact, so the
+    gathered vector is bit-identical to the single-device payload (the
+    only caveat is the sign of a ±0.0 payload, which cannot affect the
+    update).
+    """
+    full = jnp.zeros(x.shape[:-1] + (k_total,), x.dtype)
+    full = jax.lax.dynamic_update_slice_in_dim(full, x, offset, axis=-1)
+    return jax.lax.psum(full, axis_names)
+
+
 # ---------------------------------------------------------------------------
 # Protocol
 # ---------------------------------------------------------------------------
@@ -79,6 +100,25 @@ class Transport:
         """Recover the server-side estimate p_hat from the [K] per-client
         payload vector under this round's control block."""
         raise NotImplementedError
+
+    def aggregate_mesh(self, p_local: jnp.ndarray,
+                       ctl: Dict[str, jnp.ndarray], key: jax.Array,
+                       axis_names: tuple, offset: jnp.ndarray) -> jnp.ndarray:
+        """Cross-device aggregate for the shard_map'd step: the [K] client
+        axis lives on the mesh, so `p_local` is this shard's [K/n] slice
+        and `offset` its first global client id (see `client_all_gather`).
+
+        The default reassembles the full payload with one `jax.lax.psum`
+        over the named client axes (`client_all_gather` — the all-reduce is
+        the over-the-air superposition) and decodes identically to the
+        single-device `aggregate`, which is what makes the mesh engine
+        bit-identical to the single-device engine. A mechanism may override
+        to psum locally-reduced partial sums instead (a scalar-only
+        collective payload — the paper's O(1) uplink taken literally at the
+        cost of fp-reduction-order bit-identity)."""
+        k_total = ctl["mask"].shape[-1]
+        p = client_all_gather(p_local, axis_names, offset, k_total)
+        return self.aggregate(p, ctl, key)
 
     def control_spec(self, n_clients: int) -> Dict[str, jax.ShapeDtypeStruct]:
         """Abstract shapes of the per-round control block this mechanism's

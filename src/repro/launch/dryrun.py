@@ -15,6 +15,7 @@ Usage:
     python -m repro.launch.dryrun --arch yi-6b --shape train_4k
     python -m repro.launch.dryrun --mesh multi            # multi-pod only
     python -m repro.launch.dryrun --variant fo            # FO baseline cells
+    python -m repro.launch.dryrun --shard-clients         # shard_map'd step
 Results append incrementally to --out (default results/dryrun.json).
 """
 # The VERY FIRST lines, before ANY other import (jax locks the device count
@@ -118,8 +119,12 @@ def input_specs(arch: str, shape_name: str, mesh, *,
 # ---------------------------------------------------------------------------
 
 def build_step(cfg: ModelConfig, shape: ShapeConfig, k: int,
-               variant: str = "zo"):
-    """Returns (fn, donate_argnums) for this cell."""
+               variant: str = "zo", shard_clients_mesh=None):
+    """Returns (fn, donate_argnums) for this cell.
+
+    `shard_clients_mesh` compiles the shard_map'd ZO step instead: clients
+    manual over (pod, data), 'model' under GSPMD auto — the dry-run proof
+    that the cross-device psum aggregate lowers on the production mesh."""
     mod = registry.get_module(cfg)
     if shape.kind == "train":
         if variant == "zo":
@@ -127,7 +132,8 @@ def build_step(cfg: ModelConfig, shape: ShapeConfig, k: int,
                                 zo=ZOConfig(mu=1e-3, lr=5e-7,
                                             clip_gamma=100.0))
             step = pairzero.make_zo_step(cfg, pz, impl="xla",
-                                         scheme="solution")
+                                         scheme="solution",
+                                         mesh=shard_clients_mesh)
             return (lambda params, batch, ctl: step(params, batch, ctl)), (0,)
         if variant in ("fo", "fo_sgd"):
             opt = fo_opt.SGD(lr=1e-3) if variant == "fo_sgd" \
@@ -165,10 +171,11 @@ def build_step(cfg: ModelConfig, shape: ShapeConfig, k: int,
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "zo", with_roofline: bool = True,
-             bf16_reduce: bool = False) -> Dict:
+             bf16_reduce: bool = False, shard_clients: bool = False) -> Dict:
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     cell_id = f"{arch}|{shape_name}|{mesh_name}|{variant}" + (
-        "|bf16r" if bf16_reduce else "")
+        "|bf16r" if bf16_reduce else "") + (
+        "|smap" if shard_clients else "")
     cfg = registry.get_arch(arch)
     shape = SHAPES_BY_NAME[shape_name]
     out: Dict = {"cell": cell_id, "arch": arch, "shape": shape_name,
@@ -185,9 +192,19 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
+        if shard_clients and shape.kind == "train" and variant == "zo":
+            # jax-0.4.x workaround: partial-auto (manual clients + auto TP)
+            # aborts XLA on large TP-sharded models, so the shard_map cell
+            # compiles on the client-axes submesh (see mesh.client_submesh)
+            from repro.launch.mesh import client_submesh
+            mesh = client_submesh(mesh)
+            out["client_submesh"] = True
         chips = mesh.devices.size
         specs, meta = input_specs(arch, shape_name, mesh, variant=variant)
-        fn, donate = build_step(cfg, shape, meta["k"], variant)
+        fn, donate = build_step(
+            cfg, shape, meta["k"], variant,
+            shard_clients_mesh=mesh if shard_clients
+            and shape.kind == "train" and variant == "zo" else None)
         with shd.hints(mesh, bf16_reduce):
             lowered = jax.jit(fn, donate_argnums=donate).lower(
                 **{k2: v for k2, v in specs.items()})
@@ -246,6 +263,11 @@ def main() -> None:
     ap.add_argument("--no-roofline", action="store_true")
     ap.add_argument("--bf16-reduce", action="store_true",
                     help="bf16 TP psums (§Perf beyond-paper optimization)")
+    ap.add_argument("--shard-clients", action="store_true",
+                    help="compile the shard_map'd ZO step (clients manual "
+                         "over pod/data, model under GSPMD auto) — proves "
+                         "the cross-device psum aggregate lowers on the "
+                         "production mesh (train cells only)")
     ap.add_argument("--out", default="results/dryrun.json")
     args = ap.parse_args()
 
@@ -267,14 +289,16 @@ def main() -> None:
             for multi in meshes:
                 mesh_name = "pod2x16x16" if multi else "pod16x16"
                 cell_id = (f"{arch}|{shape_name}|{mesh_name}|{args.variant}"
-                           + ("|bf16r" if args.bf16_reduce else ""))
+                           + ("|bf16r" if args.bf16_reduce else "")
+                           + ("|smap" if args.shard_clients else ""))
                 if cell_id in done:
                     print(f"[skip-done] {cell_id}", flush=True)
                     continue
                 print(f"[cell] {cell_id} ...", flush=True)
                 r = run_cell(arch, shape_name, multi, args.variant,
                              with_roofline=not args.no_roofline,
-                             bf16_reduce=args.bf16_reduce)
+                             bf16_reduce=args.bf16_reduce,
+                             shard_clients=args.shard_clients)
                 print(f"  -> {r['status']} ({r.get('wall_s', 0)}s)"
                       + (f" err={r.get('error', '')[:200]}"
                          if r["status"] == "failed" else ""), flush=True)

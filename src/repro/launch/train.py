@@ -12,6 +12,12 @@ ChannelModel (see repro.channel), optionally wrapped:
     --channel rician --rician-k 4 --csi-phase-err 0.1 --outage-db -10 \
         --cell-radius 150
 
+`--mesh auto|8|2x8` shards the clients over a device mesh: each shard runs
+its clients' forwards and the OTA scalar aggregate becomes a real
+cross-device psum (bit-identical to the single-device run). On CPU, set
+XLA_FLAGS=--xla_force_host_platform_device_count=8 before launch to get a
+multi-device mesh.
+
 On a real multi-host TPU fleet this process runs once per host after
 jax.distributed.initialize() (see launch/scripts/); on CPU it runs the same
 code on a 1-device mesh. Architecture choice is --arch <id> over the full
@@ -77,6 +83,16 @@ def build_parser() -> argparse.ArgumentParser:
                          "device-resident chunked scan engine (scan)")
     ap.add_argument("--chunk-rounds", type=int, default=32,
                     help="rounds per device dispatch for --engine scan")
+    ap.add_argument("--mesh", default=None,
+                    help="shard clients over a device mesh: 'auto' (all "
+                         "local devices on a data axis), '8' (data=8), or "
+                         "'2x8' (pod=2, data=8). Clients must divide "
+                         "evenly over the client shards; the OTA scalar "
+                         "aggregate becomes a real cross-device psum")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the chunk-prefetch thread (host prep of "
+                         "chunk i+1 normally overlaps device compute of "
+                         "chunk i) — the stall-measurement control")
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--batch", type=int, default=8,
                     help="per-client batch size")
@@ -148,18 +164,27 @@ def main() -> None:
         if t % 50 == 0:
             print(f"round {t:5d} loss {metrics['loss']:.4f}", flush=True)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh(args.mesh, n_clients=args.clients)
+        print(f"client mesh: {dict(mesh.shape)} over "
+              f"{mesh.devices.size} devices", flush=True)
+
     res = fedsim.run(cfg, pz, pipe, rounds=args.rounds,
                      engine=args.engine, chunk_rounds=args.chunk_rounds,
                      eval_every=args.eval_every,
                      checkpoint_dir=args.checkpoint_dir,
                      checkpoint_every=args.checkpoint_every,
                      fault=fault, elastic=elastic, dtype=jnp.float32,
+                     mesh=mesh, overlap=not args.no_overlap,
                      on_round=log)
 
     summary = {
         "arch": cfg.name, "transport": mechanism, "scheme": args.scheme,
         "channel": args.channel or "rayleigh",
         "engine": args.engine,
+        "mesh": dict(mesh.shape) if mesh is not None else None,
         "rounds": res.steps,
         "uplink_bits": res.uplink_bits,
         "final_loss": res.losses[-1] if res.losses else None,
@@ -167,6 +192,8 @@ def main() -> None:
         "privacy_spent": res.privacy_spent,
         "privacy_budget": res.privacy_budget,
         "wall_time_s": round(res.wall_time_s, 1),
+        "prep_stall_s": round(res.prep_stall_s, 3),
+        "ckpt_stall_s": round(res.ckpt_stall_s, 3),
         "resumed_from": res.resumed_from,
     }
     print(json.dumps(summary, indent=2))

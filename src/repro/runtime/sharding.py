@@ -43,16 +43,29 @@ def client_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def axis_size(mesh: Mesh, axes) -> int:
+    """Product of the named axes' sizes; axes absent from the mesh count as
+    size 1 (a client-only mesh has no 'model' axis, and vice versa)."""
     if axes is None:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
-    return int(np.prod([mesh.shape[a] for a in axes]))
+    return int(np.prod([mesh.shape[a] for a in axes
+                        if a in mesh.axis_names], dtype=np.int64))
 
 
 def _maybe(mesh: Mesh, axes, dim: int):
-    """Use `axes` for this dim only if it divides evenly."""
-    return axes if dim % axis_size(mesh, axes) == 0 else None
+    """Use `axes` for this dim only if every axis exists on the mesh and
+    their product divides the dim evenly (axes absent from the mesh — e.g.
+    'model' on a client-only mesh — are dropped, preserving the original
+    str/tuple spelling when nothing is filtered)."""
+    if axes is None:
+        return None
+    as_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+    present = tuple(a for a in as_tuple if a in mesh.axis_names)
+    if not present:
+        return None
+    filtered = axes if len(present) == len(as_tuple) else present
+    return filtered if dim % axis_size(mesh, present) == 0 else None
 
 
 def param_spec(mesh: Mesh, path: Tuple, leaf, serve: bool = False) -> P:
@@ -123,6 +136,22 @@ def batch_sharding(mesh: Mesh, batch_like: PyTree) -> PyTree:
     return jax.tree_util.tree_map(spec, batch_like)
 
 
+def chunk_batch_sharding(mesh: Mesh, stack_like: PyTree) -> PyTree:
+    """Stacked chunk batches [R, K, b, S, ...]: round dim replicated, client
+    dim over (pod, data). This is the placement `BatchStager` hands to its
+    single per-chunk `device_put`, so the scan engine's batches land sharded
+    at transfer time — slicing round r inside the scanned step yields the
+    [K, ...] layout `batch_sharding` describes, with no post-hoc reshard."""
+    cl = client_axes(mesh)
+
+    def spec(leaf):
+        k = leaf.shape[1]
+        return NamedSharding(mesh, P(None, _maybe(mesh, cl, k),
+                                     *([None] * (len(leaf.shape) - 2))))
+
+    return jax.tree_util.tree_map(spec, stack_like)
+
+
 def control_sharding(mesh: Mesh, ctl_like: PyTree) -> PyTree:
     """Per-round control block: replicated everywhere (scalars + [K])."""
     def spec(leaf):
@@ -185,6 +214,24 @@ _HINT_MESH: "contextvars.ContextVar[Optional[Mesh]]" = \
     contextvars.ContextVar("repro_hint_mesh", default=None)
 _BF16_REDUCE: "contextvars.ContextVar[bool]" = \
     contextvars.ContextVar("repro_bf16_reduce", default=False)
+_MANUAL_AXES: "contextvars.ContextVar[frozenset]" = \
+    contextvars.ContextVar("repro_manual_axes", default=frozenset())
+
+
+@contextmanager
+def manual_axes(axes):
+    """Mark mesh axes as shard_map-manual for the duration.
+
+    Inside a shard_map body the named axes are manual: a
+    with_sharding_constraint mentioning them is illegal (and meaningless —
+    the dim is already local). `hint()` and `current_client_axes()` drop
+    manual axes, so model code written against the GSPMD-auto convention
+    runs unchanged inside the client-sharded step."""
+    token = _MANUAL_AXES.set(_MANUAL_AXES.get() | frozenset(axes))
+    try:
+        yield
+    finally:
+        _MANUAL_AXES.reset(token)
 
 
 @contextmanager
@@ -211,11 +258,14 @@ def current_client_axes():
     """Client mesh axes from the active hint context (None outside it).
 
     Used as vmap(spmd_axis_name=...) so per-row batched ops (e.g. MoE
-    dispatch gather/scatter) keep their batch dim sharded over clients."""
+    dispatch gather/scatter) keep their batch dim sharded over clients.
+    Axes that are shard_map-manual are dropped — inside the client-sharded
+    step the batch dim is already local."""
     mesh = _HINT_MESH.get()
     if mesh is None:
         return None
-    axes = client_axes(mesh)
+    manual = _MANUAL_AXES.get()
+    axes = tuple(a for a in client_axes(mesh) if a not in manual)
     return axes if axes else None
 
 
@@ -230,14 +280,20 @@ def hint(x, *roles):
     mesh = _HINT_MESH.get()
     if mesh is None:
         return x
+    if _MANUAL_AXES.get():
+        # Inside a shard_map body: client dims are already local, and on
+        # jax 0.4.x a with_sharding_constraint inside a partial-auto body
+        # trips an XLA manual-subgroup check — auto-axis (TP) layouts
+        # propagate from the operands' shardings instead.
+        return x
     assert len(roles) == x.ndim, (roles, x.shape)
     resolved = []
     for dim, role in zip(x.shape, roles, strict=True):
         if role == "client":
             resolved.append(_maybe(mesh, client_axes(mesh), dim))
         elif role == "model":
-            resolved.append("model" if dim >= axis_size(mesh, "model")
-                            else None)
+            resolved.append("model" if "model" in mesh.axis_names
+                            and dim >= axis_size(mesh, "model") else None)
         else:
             resolved.append(None)
     return jax.lax.with_sharding_constraint(

@@ -70,9 +70,11 @@ def test_manifest_is_valid_json(tmp_path, params):
     assert set(manifest["crc32"]) == set(manifest["shapes"])
 
 
-def test_async_checkpointer_roundtrip(tmp_path, params):
+@pytest.mark.parametrize("double_buffer", [True, False])
+def test_async_checkpointer_roundtrip(tmp_path, params, double_buffer):
     import jax.numpy as jnp
-    acp = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), keep=2,
+                                 double_buffer=double_buffer)
     for step in (1, 2, 3):
         bumped = jax.tree_util.tree_map(lambda a: a + step, params)
         acp.save(step, bumped, extra={"round": step})
@@ -85,3 +87,38 @@ def test_async_checkpointer_roundtrip(tmp_path, params):
         np.asarray(restored["head"]), np.asarray(params["head"]) + 3)
     assert sorted(os.listdir(tmp_path)) == ["step_00000002",
                                             "step_00000003"]
+    assert acp.stall_s >= 0.0
+
+
+def test_double_buffered_snapshot_survives_donation(tmp_path, params):
+    """The regression the double-buffer exists for: the carry is donated to
+    the next chunk IMMEDIATELY after save() returns, long before the writer
+    thread materializes the snapshot. The checkpoint must still hold the
+    pre-donation values bit for bit."""
+    import jax.numpy as jnp
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), double_buffer=True)
+    acp.save(1, params, extra={})
+    # donate the original buffers (what ScanExecutor's chunk dispatch does)
+    bump = jax.jit(lambda t: jax.tree_util.tree_map(lambda x: x * 2.0, t),
+                   donate_argnums=0)
+    bumped = bump(params)
+    jax.block_until_ready(bumped)
+    acp.wait()
+    like = jax.tree_util.tree_map(jnp.zeros_like, bumped)
+    restored, step, _ = ckpt.restore(ckpt.latest(str(tmp_path)), like)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["layer"]["w"]),
+                                  np.arange(12.0).reshape(3, 4))
+
+
+def test_numpy_params_fall_back_to_sync_snapshot(tmp_path):
+    """Host-side pytrees (no jax arrays) take the synchronous path even
+    with double_buffer on — nothing to copy_to_host_async."""
+    host = {"w": np.arange(6.0).reshape(2, 3)}
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), double_buffer=True)
+    acp.save(5, host, extra={})
+    acp.wait()
+    restored, step, _ = ckpt.restore(ckpt.latest(str(tmp_path)),
+                                     {"w": np.zeros((2, 3))})
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), host["w"])

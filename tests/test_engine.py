@@ -124,6 +124,147 @@ def test_scan_metrics_and_on_round(tiny_model, make_pz, make_pipeline):
 
 
 # ---------------------------------------------------------------------------
+# Vectorized DP lookahead / batched spend == reference per-round loop
+# ---------------------------------------------------------------------------
+
+def _reference_affordable(spent, budget, costs, slack=1e-6):
+    """The historical per-round float loop, kept verbatim as the oracle."""
+    for r in range(len(costs)):
+        cost = float(costs[r])
+        if spent + cost > budget * (1.0 + slack):
+            return r
+        spent += cost
+    return len(costs)
+
+
+def test_affordable_rounds_pins_reference_loop():
+    """The cumsum lookahead trips on the bit-identical round as the
+    per-round loop, including adversarial near-budget cost vectors."""
+    rng = np.random.default_rng(7)
+    acct = dp.PrivacyAccountant(5.0, 0.01)
+    budget = acct.budget
+    for trial in range(200):
+        n = int(rng.integers(1, 40))
+        costs = rng.uniform(0, budget / max(4, n // 2), size=n)
+        if trial % 3 == 0:
+            # exact-boundary adversary: make a prefix sum to ~the budget
+            k = int(rng.integers(1, n + 1))
+            costs[:k] *= budget / max(costs[:k].sum(), 1e-30)
+        spent = float(rng.uniform(0, budget))
+        acct.spent = spent
+        trace = eng.ControlTrace(
+            t0=0, ctl={"seed": np.zeros(n, np.uint32)}, acct_cost=costs,
+            charged=True)
+        assert eng.affordable_rounds(acct, trace) == \
+            _reference_affordable(spent, budget, costs), \
+            f"trial {trial}: vectorized lookahead diverged from the loop"
+
+
+def test_charge_rounds_batched_spend_bitwise():
+    """spend_batch advances the ledger by the same float64 left fold as
+    per-round spend — final spent is bit-identical, history intact."""
+    rng = np.random.default_rng(3)
+    costs = rng.uniform(0, 0.1, size=23)
+    a = dp.PrivacyAccountant(5.0, 0.01, spent=0.123456789)
+    b = dp.PrivacyAccountant(5.0, 0.01, spent=0.123456789)
+    for c in costs:
+        a.spend(float(c))
+    b.spend_batch(costs)
+    assert a.spent == b.spent                      # bitwise, not approx
+    assert len(b.history) == len(a.history)
+    trace = eng.ControlTrace(t0=0, ctl={}, acct_cost=costs, charged=True)
+    c2 = dp.PrivacyAccountant(5.0, 0.01, spent=0.123456789)
+    eng.charge_rounds(c2, trace, 23)
+    assert c2.spent == a.spent
+
+
+# ---------------------------------------------------------------------------
+# Batch staging + chunk prefetch
+# ---------------------------------------------------------------------------
+
+def test_batch_stager_reuses_buffers_and_matches_pipeline(make_pipeline):
+    """Each staged chunk matches pipeline.batch exactly. Staged arrays are
+    valid until their slot is rewritten (device_put may zero-copy alias the
+    host buffer on CPU), so each chunk is verified before the next reuse —
+    the same lifetime the driver guarantees via ChunkPrefetcher.kick."""
+    pipe = make_pipeline()
+    stager = eng.BatchStager(pipe, slots=2)
+    hosts = []
+    for a in (0, 4, 8):                           # slots 0, 1, 0
+        dev = stager.stage(a, a + 4)
+        for r in range(4):
+            want = pipe.batch(a + r)
+            for k in dev:
+                np.testing.assert_array_equal(np.asarray(dev[k][r]), want[k])
+        hosts.append({k: np.asarray(v).copy() for k, v in dev.items()})
+    # slot 0's host buffers were reused for the third chunk (no realloc);
+    # the one-shot wrapper agrees with the staged values
+    one = eng.stack_batches(pipe, 4, 8)
+    for k in one:
+        np.testing.assert_array_equal(np.asarray(one[k]), hosts[1][k])
+
+
+def test_chunk_prefetcher_kick_get_contract():
+    seen = []
+
+    def prepare(a, b):
+        seen.append((a, b))
+        return (a, b)
+
+    bounds = [(0, 3), (3, 6), (6, 8)]
+    pf = eng.ChunkPrefetcher(prepare, bounds, overlap=True)
+    try:
+        assert pf.get(0) == (0, 3)                # nothing kicked: inline
+        pf.kick(1)
+        pf.kick(1)                                # double-kick is a no-op
+        assert pf.get(1) == (3, 6)
+        assert pf.get(2) == (6, 8)                # never kicked: inline
+        assert seen == bounds                     # round order preserved
+        assert pf.stall_s >= 0.0
+        with pytest.raises(AssertionError):
+            pf.get(1)                             # out-of-order consumption
+    finally:
+        pf.close()
+
+
+def test_chunk_prefetcher_kick_out_of_order_ignored():
+    pf = eng.ChunkPrefetcher(lambda a, b: (a, b), [(0, 2), (2, 4)],
+                             overlap=True)
+    try:
+        pf.kick(1)                                # not next: ignored
+        assert pf.get(0) == (0, 2)
+        assert pf.get(1) == (2, 4)
+    finally:
+        pf.close()
+
+
+def test_scan_overlap_off_bitwise(tiny_model, make_pz, make_pipeline):
+    """The prefetch thread is pure pipelining — overlap off/on and the
+    no-overlap control produce the identical trajectory."""
+    pz = make_pz(scheme="solution", rounds=7)
+    pipe = lambda: make_pipeline()
+    on = fedsim.run(tiny_model, pz, pipe(), rounds=7, engine="scan",
+                    chunk_rounds=3)
+    off = fedsim.run(tiny_model, pz, pipe(), rounds=7, engine="scan",
+                     chunk_rounds=3, overlap=False)
+    assert on.losses == off.losses
+    assert on.p_hats == off.p_hats
+    assert on.prep_stall_s >= 0.0 and off.prep_stall_s >= 0.0
+
+
+def test_run_result_declares_params(tiny_model, make_pz, make_pipeline):
+    """RunResult.params is a first-class field (no attribute smuggling)."""
+    import dataclasses
+    assert "params" in {f.name for f in dataclasses.fields(fedsim.RunResult)}
+    res = fedsim.run(tiny_model, make_pz(rounds=2), make_pipeline(),
+                     rounds=2, engine="scan", chunk_rounds=2)
+    assert res.params is not None
+    import jax.numpy as jnp
+    assert all(isinstance(leaf, jnp.ndarray)
+               for leaf in jax.tree_util.tree_leaves(res.params))
+
+
+# ---------------------------------------------------------------------------
 # Checkpoint/resume across chunk boundaries
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,212 @@
+"""Client-mesh lane: shard_map scan engine ≡ single-device engine, bitwise.
+
+These tests need a multi-device host. CI runs them in a dedicated lane:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_mesh_engine.py -q
+
+On a single-device host every test skips (the flag must be set before the
+first jax import, so it cannot be applied from inside the suite).
+
+The contract under test: with `mesh=`, the per-client dual forward runs
+shard_map'd over the mesh's (pod, data) client axes and the Transport's
+scalar decode consumes a genuine cross-device `jax.lax.psum` (asserted
+against the compiled HLO) — while the loss/p_hat/privacy trajectory stays
+*bitwise* identical to the single-device engines at fixed seed.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.channel import RayleighFading
+from repro.core import fedsim, pairzero
+from repro.core import transport as tp
+from repro.launch.mesh import make_client_mesh
+from repro.models import registry
+from repro.runtime import sharding as shd
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="client-mesh lane needs >= 8 devices (set XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8 before jax imports)")
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    return make_client_mesh("8")
+
+
+def _runs(cfg, pz, make_pipeline, mesh, *, rounds=6, chunk=4, **kw):
+    pipe = lambda: make_pipeline(vocab=cfg.vocab_size, n_clients=8, batch=2,
+                                 seq=16)
+    ref = fedsim.run(cfg, pz, pipe(), rounds=rounds, engine="scan",
+                     chunk_rounds=chunk, **kw)
+    res = fedsim.run(cfg, pz, pipe(), rounds=rounds, engine="scan",
+                     chunk_rounds=chunk, mesh=mesh, **kw)
+    return ref, res
+
+
+# ---------------------------------------------------------------------------
+# Bitwise identity: mesh scan == single-device scan (== loop)
+# ---------------------------------------------------------------------------
+
+def test_mesh_scan_bitwise_analog_opt125m(opt125m_reduced, make_pz,
+                                          make_pipeline, mesh8):
+    """The acceptance-criterion test, on the paper's own architecture:
+    8 clients shard_map'd over an 8-device ('data',) mesh, uneven chunks."""
+    pz = make_pz(scheme="solution", n_perturb=1, rounds=8, n_clients=8)
+    pipe = lambda: make_pipeline(vocab=opt125m_reduced.vocab_size,
+                                 n_clients=8, batch=2, seq=16)
+    res_loop = fedsim.run(opt125m_reduced, pz, pipe(), rounds=8,
+                          engine="loop")
+    res_scan = fedsim.run(opt125m_reduced, pz, pipe(), rounds=8,
+                          engine="scan", chunk_rounds=3)
+    res_mesh = fedsim.run(opt125m_reduced, pz, pipe(), rounds=8,
+                          engine="scan", chunk_rounds=3, mesh=mesh8)
+    assert res_mesh.losses == res_scan.losses == res_loop.losses
+    assert res_mesh.p_hats == res_scan.p_hats
+    assert res_mesh.privacy_spent == res_scan.privacy_spent
+    assert len(res_mesh.losses) == 8
+
+
+def test_mesh_scan_bitwise_sign(tiny_model, make_pz, make_pipeline, mesh8):
+    pz = make_pz(variant="sign", scheme="solution", lr=2e-2, rounds=6,
+                 n_clients=8)
+    ref, res = _runs(tiny_model, pz, make_pipeline, mesh8)
+    assert res.losses == ref.losses
+    assert res.p_hats == ref.p_hats
+
+
+def test_mesh_scan_bitwise_digital(tiny_model, make_pz, make_pipeline,
+                                   mesh8):
+    """The quantizer draws from the replicated round key, so the digital
+    baseline is bit-identical under the mesh too."""
+    pz = make_pz(scheme="perfect", rounds=6, n_clients=8)
+    transport = tp.DigitalTDMA(quant_bits=8, clip=float(pz.zo.clip_gamma))
+    ref, res = _runs(tiny_model, pz, make_pipeline, mesh8,
+                     transport=transport)
+    assert res.losses == ref.losses
+
+
+def test_mesh_multiple_clients_per_shard(tiny_model, make_pz,
+                                         make_pipeline):
+    """K=8 over 4 shards (2 clients per device) — the gather reassembles
+    multi-client slices, not just scalars."""
+    mesh4 = make_client_mesh("4")
+    pz = make_pz(scheme="solution", rounds=6, n_clients=8)
+    ref, res = _runs(tiny_model, pz, make_pipeline, mesh4)
+    assert res.losses == ref.losses
+
+
+def test_mesh_pod_data_axes(tiny_model, make_pz, make_pipeline):
+    """(pod=2, data=4): client ids linearize pod-major, matching the
+    PartitionSpec(('pod','data')) batch tiling."""
+    mesh2x4 = make_client_mesh("2x4")
+    pz = make_pz(scheme="solution", rounds=6, n_clients=8)
+    ref, res = _runs(tiny_model, pz, make_pipeline, mesh2x4)
+    assert res.losses == ref.losses
+    assert res.p_hats == ref.p_hats
+
+
+def test_mesh_loop_engine_bitwise(tiny_model, make_pz, make_pipeline,
+                                  mesh8):
+    """The shard_map'd step under per-round dispatch (engine='loop') —
+    executors only change dispatch granularity, never numerics."""
+    pz = make_pz(scheme="solution", rounds=5, n_clients=8)
+    pipe = lambda: make_pipeline(vocab=tiny_model.vocab_size, n_clients=8,
+                                 batch=2, seq=16)
+    ref = fedsim.run(tiny_model, pz, pipe(), rounds=5, engine="loop")
+    res = fedsim.run(tiny_model, pz, pipe(), rounds=5, engine="loop",
+                     mesh=mesh8)
+    assert res.losses == ref.losses
+
+
+def test_mesh_with_model_axis_runs(tiny_model, make_pz, make_pipeline):
+    """(data=4, model=2): the 'model' axis stays under GSPMD auto inside
+    the shard_map (TP). TP re-tiles contractions, so this is fp-tolerance
+    equivalence, not bitwise — the lane proves the partial-auto path
+    compiles and trains."""
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
+    pz = make_pz(scheme="solution", rounds=4, n_clients=8)
+    ref, res = _runs(tiny_model, pz, make_pipeline, mesh, rounds=4, chunk=2)
+    np.testing.assert_allclose(res.losses, ref.losses, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# The collective is real: all-reduce in the compiled HLO
+# ---------------------------------------------------------------------------
+
+def test_mesh_hlo_contains_client_all_reduce(tiny_model, make_pz,
+                                             make_pipeline, mesh8):
+    """The scalar aggregate of the mesh step lowers to a cross-replica
+    all-reduce (the psum in Transport.aggregate_mesh); the single-device
+    step compiles collective-free."""
+    pz = make_pz(scheme="solution", rounds=4, n_clients=8)
+    transport = tp.resolve(pz)
+    pipe = make_pipeline(vocab=tiny_model.vocab_size, n_clients=8, batch=2,
+                         seq=16)
+    batch = {k: v for k, v in pipe.batch(0).items() if k != "labels"}
+    params = registry.init_params(jax.random.key(0), tiny_model,
+                                  jax.numpy.float32)
+    h = RayleighFading().realize(pz.seed ^ 0xC4A7, 4, 8).h
+    sched = transport.make_schedule(h, pz)
+    ctl = pairzero.make_control(0, sched, pz.seed, 8)
+
+    step = pairzero.make_zo_step(tiny_model, pz, transport=transport)
+    single = jax.jit(step).lower(params, batch, ctl).compile().as_text()
+    assert "all-reduce" not in single
+
+    mstep = pairzero.make_zo_step(tiny_model, pz, transport=transport,
+                                  mesh=mesh8)
+    args = (jax.device_put(params, shd.params_sharding(mesh8, params)),
+            jax.device_put(batch, shd.batch_sharding(mesh8, batch)),
+            jax.device_put(ctl, shd.control_sharding(mesh8, ctl)))
+    meshed = jax.jit(mstep).lower(*args).compile().as_text()
+    assert "all-reduce" in meshed
+
+
+# ---------------------------------------------------------------------------
+# Sharded checkpoint / resume
+# ---------------------------------------------------------------------------
+
+def test_mesh_checkpoint_resume_bitwise(tiny_model, make_pz, make_pipeline,
+                                        mesh8, tmp_path):
+    """Interrupt a mesh run at a chunk-boundary checkpoint, resume on the
+    mesh — the tail matches the uninterrupted single-device loop bitwise
+    (FSDP-sharded params gather into the npz and reshard on restore)."""
+    pz = make_pz(scheme="solution", rounds=8, n_clients=8)
+    pipe = lambda: make_pipeline(vocab=tiny_model.vocab_size, n_clients=8,
+                                 batch=2, seq=16)
+    res_ref = fedsim.run(tiny_model, pz, pipe(), rounds=8, engine="loop")
+
+    ck = str(tmp_path / "ck")
+    fedsim.run(tiny_model, pz, pipe(), rounds=4, engine="scan",
+               chunk_rounds=4, mesh=mesh8, checkpoint_dir=ck,
+               checkpoint_every=4)
+    res = fedsim.run(tiny_model, pz, pipe(), rounds=8, engine="scan",
+                     chunk_rounds=4, mesh=mesh8, checkpoint_dir=ck,
+                     checkpoint_every=1000)
+    assert res.resumed_from == 4
+    assert res.losses == res_ref.losses[4:]
+    assert res.privacy_spent == pytest.approx(res_ref.privacy_spent)
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+def test_mesh_rejects_indivisible_clients(tiny_model, make_pz,
+                                          make_pipeline, mesh8):
+    pz = make_pz(rounds=4, n_clients=5)
+    with pytest.raises(ValueError, match="divide evenly"):
+        fedsim.run(tiny_model, pz, make_pipeline(n_clients=5), rounds=4,
+                   engine="scan", mesh=mesh8)
+
+
+def test_mesh_rejects_fo(tiny_model, make_pz, make_pipeline, mesh8):
+    pz = make_pz(variant="fo", scheme="perfect", rounds=4, n_clients=8)
+    with pytest.raises(ValueError, match="FO baseline"):
+        fedsim.run(tiny_model, pz, make_pipeline(n_clients=8), rounds=4,
+                   engine="scan", mesh=mesh8)

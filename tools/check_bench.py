@@ -1,0 +1,114 @@
+"""Validate BENCH_engine.json (schema "bench_engine/v1") and gate CI on it.
+
+    python tools/check_bench.py BENCH_engine.json --min-speedup 1.3
+
+Checks, in order:
+  1. schema shape: required top-level keys, grid rows, overlap breakdown —
+     a benchmark refactor that silently changes the artifact fails here;
+  2. correctness: every engine row is bit-identical to the loop engine;
+  3. performance gates:
+       - scan speedup_vs_loop >= --min-speedup at --gate-size (default
+         opt-125m-reduced, falling back to the first benchmarked size),
+       - the prefetch thread reduces the chunk-boundary prep stall vs the
+         no-overlap control,
+       - the double-buffered checkpoint snapshot stalls the driver less
+         than the synchronous device_get baseline.
+Exit code 0 on pass; 1 with a reason on any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+REQUIRED_TOP = ("schema", "created_unix", "host", "config", "sizes",
+                "grid", "overlap")
+REQUIRED_ROW = ("size", "engine", "rounds_per_s", "speedup_vs_loop",
+                "bit_identical_to_loop", "mesh")
+ENGINES = ("loop", "scan", "scan_mesh")
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path")
+    ap.add_argument("--min-speedup", type=float, default=1.0,
+                    help="required scan speedup over loop at --gate-size")
+    ap.add_argument("--gate-size", default="opt-125m-reduced")
+    args = ap.parse_args()
+
+    with open(args.path) as f:
+        rep = json.load(f)
+
+    # 1. schema ----------------------------------------------------------
+    for key in REQUIRED_TOP:
+        if key not in rep:
+            fail(f"missing top-level key {key!r}")
+    if rep["schema"] != "bench_engine/v1":
+        fail(f"unknown schema {rep['schema']!r}")
+    if not isinstance(rep["grid"], list) or not rep["grid"]:
+        fail("empty grid")
+    for row in rep["grid"]:
+        for key in REQUIRED_ROW:
+            if key not in row:
+                fail(f"grid row {row.get('size')}/{row.get('engine')} "
+                     f"missing {key!r}")
+        if row["engine"] not in ENGINES:
+            fail(f"unknown engine {row['engine']!r}")
+        if not (isinstance(row["rounds_per_s"], (int, float))
+                and row["rounds_per_s"] > 0):
+            fail(f"non-positive rounds_per_s in {row}")
+    ov = rep["overlap"]
+    for section, keys in (("prefetch", ("on", "off")),
+                          ("checkpoint", ("double_buffer", "sync"))):
+        if section not in ov:
+            fail(f"overlap missing {section!r}")
+        for k in keys:
+            if k not in ov[section]:
+                fail(f"overlap.{section} missing {k!r}")
+    for name, meta in rep["sizes"].items():
+        if "param_count" not in meta:
+            fail(f"sizes[{name!r}] missing param_count")
+
+    # 2. correctness -----------------------------------------------------
+    for row in rep["grid"]:
+        if not row["bit_identical_to_loop"]:
+            fail(f"{row['size']}/{row['engine']} diverged from loop")
+
+    # 3. performance gates -----------------------------------------------
+    gate_size = args.gate_size if any(
+        r["size"] == args.gate_size for r in rep["grid"]) \
+        else rep["grid"][0]["size"]
+    scan_rows = [r for r in rep["grid"]
+                 if r["size"] == gate_size and r["engine"] == "scan"]
+    if not scan_rows:
+        fail(f"no scan row at gate size {gate_size!r}")
+    speedup = scan_rows[0]["speedup_vs_loop"]
+    if speedup < args.min_speedup:
+        fail(f"scan speedup {speedup:.2f}x < required "
+             f"{args.min_speedup:.2f}x at {gate_size}")
+
+    pf = ov["prefetch"]
+    if pf["on"]["prep_stall_s"] > pf["off"]["prep_stall_s"]:
+        fail(f"prefetch did not reduce the boundary prep stall "
+             f"(on={pf['on']['prep_stall_s']}s, "
+             f"off={pf['off']['prep_stall_s']}s)")
+    ck = ov["checkpoint"]
+    if ck["double_buffer"]["ckpt_stall_s"] > ck["sync"]["ckpt_stall_s"]:
+        fail(f"double-buffered snapshot did not reduce the checkpoint "
+             f"stall (db={ck['double_buffer']['ckpt_stall_s']}s, "
+             f"sync={ck['sync']['ckpt_stall_s']}s)")
+
+    print(f"check_bench: OK ({args.path}: scan {speedup:.2f}x loop at "
+          f"{gate_size}; prefetch stall "
+          f"{pf['off']['prep_stall_s']}s -> {pf['on']['prep_stall_s']}s; "
+          f"ckpt stall {ck['sync']['ckpt_stall_s']}s -> "
+          f"{ck['double_buffer']['ckpt_stall_s']}s)")
+
+
+if __name__ == "__main__":
+    main()
