@@ -44,6 +44,9 @@ CURVES = {
     "analog": TransportConfig("analog", "solution"),
     "sign": TransportConfig("sign", "solution"),
     "digital": TransportConfig("digital", quant_bits=8),
+    # FedZO-style seed-and-scalar digital: the strongest digital competitor
+    # on comm (b bits/slot instead of b·d) — still no privacy (Fig. privacy)
+    "smart_digital": TransportConfig("smart_digital", quant_bits=8),
 }
 
 # Table I analogue, scaled to the reduced model (paper grid spans 1.5 orders

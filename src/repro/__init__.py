@@ -1,6 +1,8 @@
 """pAirZero: ZO + over-the-air federated LLM fine-tuning, multi-pod JAX.
 
-Subpackages: core (the paper), models (architecture zoo), kernels (Pallas),
-configs (assigned archs), runtime (sharding/faults), launch (mesh/dryrun/
-train/serve), data, optim, checkpoint. See README.md / DESIGN.md.
+Subpackages: core (the paper), channel (wireless channel registry),
+privacy (adversary/attacks/DP audit), models (architecture zoo), kernels
+(Pallas), configs (assigned archs), runtime (sharding/faults), launch
+(mesh/dryrun/train/serve), data, optim, checkpoint. See README.md /
+DESIGN.md.
 """

@@ -38,7 +38,8 @@ resident ControlTrace consumed inside `lax.scan`. See README "Adding a
 channel model".
 """
 from repro.channel.models import (AR1Correlated, RayleighFading,
-                                  RicianFading, StaticChannel)
+                                  RicianFading, StaticChannel, bessel_j0,
+                                  jakes_rho)
 from repro.channel.registry import (ChannelModel, available, from_config,
                                     get, realize_from_config, register)
 from repro.channel.trace import ChannelTrace
@@ -47,6 +48,6 @@ from repro.channel.wrappers import ImperfectCSI, OutageModel, PathLossGeometry
 __all__ = [
     "AR1Correlated", "ChannelModel", "ChannelTrace", "ImperfectCSI",
     "OutageModel", "PathLossGeometry", "RayleighFading", "RicianFading",
-    "StaticChannel", "available", "from_config", "get",
-    "realize_from_config", "register",
+    "StaticChannel", "available", "bessel_j0", "from_config", "get",
+    "jakes_rho", "realize_from_config", "register",
 ]

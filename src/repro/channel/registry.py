@@ -84,6 +84,14 @@ def from_config(cc) -> ChannelModel:
     """
     from repro.channel import wrappers as wr
     base_name = cc.model or cc.fading
+    if getattr(cc, "doppler_hz", None) is not None and base_name != "ar1":
+        # same convention as the wrapper guard below: a config field that
+        # would be silently dropped is rejected, not ignored — Doppler
+        # mobility only parameterizes the temporally-correlated model
+        raise ValueError(
+            f"doppler_hz is set but channel model is {base_name!r}: the "
+            "Jakes mapping parameterizes the AR(1) correlation — select "
+            "model='ar1' (or unset doppler_hz)")
     model = get(base_name).from_config(cc)
     if cc.cell_radius > 0.0:
         model = wr.PathLossGeometry(base=model, cell_radius=cc.cell_radius,

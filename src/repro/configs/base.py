@@ -208,6 +208,11 @@ class ChannelConfig:
     model: Optional[str] = None     # channel-registry name; None → `fading`
     rician_k: float = 3.0           # K-factor for model="rician"
     ar1_rho: float = 0.9            # lag-1 correlation for model="ar1"
+    # physical mobility spec for model="ar1": set doppler_hz to derive
+    # ρ = J₀(2π f_D τ) (Jakes) from the Doppler shift and the round period
+    # τ = round_duration_s; None keeps the raw ar1_rho path bitwise intact
+    doppler_hz: Optional[float] = None
+    round_duration_s: float = 1e-3  # τ: one communication round (seconds)
     phase_err_std: float = 0.0      # >0 → ImperfectCSI wrapper (radians)
     outage_db: Optional[float] = None   # set → OutageModel threshold (dB)
     cell_radius: float = 0.0        # >0 → PathLossGeometry wrapper (meters)

@@ -78,6 +78,26 @@ def r_dp(epsilon: float, delta: float) -> float:
     return (math.sqrt(epsilon + cinv * cinv) - cinv) ** 2
 
 
+def epsilon_for_budget(spent: float, delta: float) -> float:
+    """Inverse accountant: the analytic ε implied by a spent Eq.-16 sum.
+
+    R_dp(ε, δ) = (√(ε + c²) − c)² with c = C⁻¹(1/δ) inverts in closed form
+    to ε = R + 2c√R, so a partially-executed run (spent = Σ_t round costs)
+    carries the tight analytic guarantee (ε_spent, δ) with
+    ε_spent ≤ the configured ε whenever the accountant admitted the rounds.
+    This is the ceiling the empirical audit's ε̂ lower bound is checked
+    against (repro.privacy.audit).
+    """
+    if spent < 0:
+        raise ValueError("spent budget must be >= 0")
+    if not (0 < delta < 1):
+        raise ValueError("delta must be in (0, 1)")
+    if spent == 0.0:
+        return 0.0
+    cinv = c_inverse(1.0 / delta)
+    return spent + 2.0 * cinv * math.sqrt(spent)
+
+
 def round_privacy_cost(c_t: float, gamma_t: float, m_t: float) -> float:
     """Per-round term (√2 c γ / m)² of the accountant sum (Eq. 16).
 

@@ -77,6 +77,10 @@ class RunResult:
     privacy_exhausted_at: int = -1   # round at which the guard tripped
     uplink_bits: int = 0             # total uplink spend (Transport-accounted)
     params: Optional[Any] = None     # final model parameters
+    # the base station's offline solve, exposed for post-hoc analysis
+    # (privacy audits/attacks consume the realized schedule + transport)
+    schedule: Optional[Any] = None
+    transport: Optional[Any] = None
     # chunk-boundary stall accounting (seconds over the whole run):
     prep_stall_s: float = 0.0        # driver blocked on host-side chunk prep
     ckpt_stall_s: float = 0.0        # driver blocked on checkpoint snapshots
@@ -219,7 +223,8 @@ class Experiment:
                  elastic: Optional[ElasticSchedule] = None,
                  impl: Optional[str] = None, dtype=jnp.float32,
                  params: Optional[Any] = None,
-                 mesh: Optional[Mesh] = None, overlap: bool = True):
+                 mesh: Optional[Mesh] = None, overlap: bool = True,
+                 adversary: Optional[Any] = None):
         if engine not in ("scan", "loop"):
             raise ValueError(
                 f"unknown engine: {engine!r} (want 'scan'|'loop')")
@@ -243,6 +248,13 @@ class Experiment:
         self.params = params
         self.mesh = mesh
         self.overlap = overlap
+        # eavesdropper observation capture (repro.privacy.Adversary): the
+        # step emits obs_* metrics; pair with an AttackHook to collect them
+        self.adversary = adversary
+        # realized channel + schedule, exposed after run() for post-hoc
+        # attacks/audits (the adversary knows both — they are broadcast)
+        self.channel_trace = None
+        self.schedule = None
         if mesh is not None:
             cl = shd.client_axes(mesh)
             n_shards = shd.axis_size(mesh, cl)
@@ -270,11 +282,13 @@ class Experiment:
         if self.transport.kind == "fo":
             optimizer = fo_opt.make("adam", self.pz.zo.lr)
             raw = pairzero.make_fo_step(self.model_cfg, optimizer,
-                                        impl=self.impl)
+                                        impl=self.impl,
+                                        adversary=self.adversary)
             return _fo_scan_step(raw), (self.params,
                                         optimizer.init(self.params))
         raw = pairzero.make_zo_step(self.model_cfg, self.pz, impl=self.impl,
-                                    transport=self.transport, mesh=self.mesh)
+                                    transport=self.transport, mesh=self.mesh,
+                                    adversary=self.adversary)
         return raw, self.params
 
     def _executor(self, step_fn):
@@ -296,6 +310,8 @@ class Experiment:
         ctrace = self.channel_model.realize(pz.seed ^ 0xC4A7, horizon,
                                             pz.n_clients)
         schedule = self.transport.make_schedule(ctrace, pz)
+        self.channel_trace, self.schedule = ctrace, schedule
+        result.schedule, result.transport = schedule, self.transport
 
         if self.params is None:
             self.params = registry.init_params(jax.random.key(pz.seed),
@@ -439,6 +455,8 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         transport: Optional[tp.Transport] = None,
         channel_model: Optional[channel.ChannelModel] = None,
         mesh: Optional[Mesh] = None, overlap: bool = True,
+        adversary: Optional[Any] = None,
+        hooks: Sequence[RoundHook] = (),
         variant: Optional[str] = None,
         scheme: Optional[str] = None) -> RunResult:
     """Run T rounds of pAirZero (or a baseline transport) on one host.
@@ -447,7 +465,10 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
     hooks from the historical kwargs and delegates. `mesh=` runs the
     shard_map'd step with clients mapped over the mesh's (pod, data) axes
     (see `pairzero.make_zo_step`); `overlap=False` disables the prefetch
-    thread (the no-overlap stall control). `variant=`/`scheme=` are the
+    thread (the no-overlap stall control). `adversary=` (a
+    `repro.privacy.Adversary`) switches on eavesdropper observation
+    capture — pair it with a `repro.privacy.AttackHook` in `hooks=` to
+    collect the observations. `variant=`/`scheme=` are the
     DEPRECATED string spellings, routed through the transport registry for
     one more release — pass `transport=` or put a TransportConfig in
     `pz.transport` instead.
@@ -460,15 +481,16 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
             power=dataclasses.replace(pz.power,
                                       scheme=scheme or pz.power.scheme),
             transport=None)
-    hooks: List[RoundHook] = []
+    all_hooks: List[RoundHook] = list(hooks)
     if eval_every:
-        hooks.append(EvalHook(eval_every, eval_n))
+        all_hooks.append(EvalHook(eval_every, eval_n))
     if checkpoint_dir:
-        hooks.append(CheckpointHook(checkpoint_dir, checkpoint_every))
+        all_hooks.append(CheckpointHook(checkpoint_dir, checkpoint_every))
     if on_round is not None:
-        hooks.append(CallbackHook(on_round))
+        all_hooks.append(CallbackHook(on_round))
     return Experiment(model_cfg, pz, pipeline, rounds, engine=engine,
                       chunk_rounds=chunk_rounds, transport=transport,
-                      channel_model=channel_model, hooks=hooks, fault=fault,
-                      elastic=elastic, impl=impl, dtype=dtype,
-                      params=params, mesh=mesh, overlap=overlap).run()
+                      channel_model=channel_model, hooks=all_hooks,
+                      fault=fault, elastic=elastic, impl=impl, dtype=dtype,
+                      params=params, mesh=mesh, overlap=overlap,
+                      adversary=adversary).run()

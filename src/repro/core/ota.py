@@ -61,6 +61,41 @@ def draw_channels(seed: int, rounds: int, n_clients: int,
 # OTA aggregation (jit-side)
 # ---------------------------------------------------------------------------
 
+def superpose(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
+              n0: jnp.ndarray, key: jax.Array,
+              mask: Optional[jnp.ndarray] = None,
+              g: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The raw RF observation at the receiver front-end (Eq. 4):
+
+        y = c Σ_k w_k (p_k + n_k) + z
+
+    This is the superposed noisy scalar BEFORE channel inversion — exactly
+    what an over-the-air eavesdropper (or the honest-but-curious server)
+    sees, and the signal Lemma 1's DP analysis privatizes. The decode path
+    (`analog_ota`) and the privacy subsystem's observation capture
+    (repro.privacy) both call this function with the same key, so the
+    captured observation is bit-identical to the signal the server decoded.
+
+    Returns (y, k_eff): the observation and the surviving client count.
+    """
+    k_clients = p.shape[0]
+    if mask is None:
+        mask = jnp.ones((k_clients,), dtype=p.dtype)
+    mask = mask.astype(p.dtype)
+    nk_key, z_key = jax.random.split(key)
+    n_k = sigma.astype(p.dtype) * jax.random.normal(nk_key, (k_clients,),
+                                                    dtype=p.dtype)
+    z = jnp.sqrt(n0).astype(p.dtype) * jax.random.normal(z_key, (),
+                                                         dtype=p.dtype)
+    # superposition: only surviving clients contribute signal AND noise,
+    # each rotated to cos θ of its residual pre-compensation error
+    w = mask if g is None else mask * g.astype(p.dtype)
+    y = c * jnp.sum(w * (p + n_k)) + z
+    k_eff = jnp.maximum(jnp.sum(mask), 1.0)
+    return y, k_eff
+
+
 def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
                n0: jnp.ndarray, key: jax.Array,
                mask: Optional[jnp.ndarray] = None,
@@ -85,20 +120,7 @@ def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
     Returns:
       (p_hat, k_eff): the recovered noisy mean and the surviving client count.
     """
-    k_clients = p.shape[0]
-    if mask is None:
-        mask = jnp.ones((k_clients,), dtype=p.dtype)
-    mask = mask.astype(p.dtype)
-    nk_key, z_key = jax.random.split(key)
-    n_k = sigma.astype(p.dtype) * jax.random.normal(nk_key, (k_clients,),
-                                                    dtype=p.dtype)
-    z = jnp.sqrt(n0).astype(p.dtype) * jax.random.normal(z_key, (),
-                                                         dtype=p.dtype)
-    # superposition: only surviving clients contribute signal AND noise,
-    # each rotated to cos θ of its residual pre-compensation error
-    w = mask if g is None else mask * g.astype(p.dtype)
-    y = c * jnp.sum(w * (p + n_k)) + z
-    k_eff = jnp.maximum(jnp.sum(mask), 1.0)
+    y, k_eff = superpose(p, c, sigma, n0, key, mask, g)
     # c == 0 means a SILENT round (the sign-variant schedule zeroes early
     # rounds when Ã^{-t} weighting concentrates the privacy budget late):
     # nobody transmits, the server applies no update.

@@ -30,7 +30,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs.base import ModelConfig, PairZeroConfig
 from repro.core import transport as tp
 from repro.core import zo
-from repro.kernels.seeded_axpy import fmix32
 from repro.models import registry
 
 PyTree = Any
@@ -84,7 +83,8 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                  impl: Optional[str] = None,
                  scheme: Optional[str] = None,
                  transport: Optional[tp.Transport] = None,
-                 mesh: Optional[Mesh] = None) -> Callable:
+                 mesh: Optional[Mesh] = None,
+                 adversary: Optional[Any] = None) -> Callable:
     """Build the jitted ZO train step for any scalar-payload Transport
     (analog / sign / perfect / digital / user-registered).
 
@@ -106,6 +106,15 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
     control enter replicated w.r.t. the client axes (a 'model' axis, if
     present, stays under GSPMD auto for TP/FSDP); the trajectory is
     bit-identical to the single-device step (tests/test_mesh_engine.py).
+
+    `adversary` (a frozen `repro.privacy.Adversary`, hashable — part of the
+    memo key) switches on eavesdropper observation capture: the round's
+    Transport recomputes what an over-the-air listener sees (same per-round
+    key as the decode ⇒ bit-identical noise draws) and the observation
+    rides the metrics stream as `obs_*` entries — device-resident through a
+    scanned chunk, stacked identically by both executors. Capture is
+    passive: the training trajectory is bitwise unchanged, and
+    `adversary=None` traces the exact historical program.
     """
     loss_fn = make_loss_fn(model_cfg, impl=impl)
     transport = transport if transport is not None \
@@ -132,8 +141,7 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
         loss_acc = jnp.float32(0.0)
         k_total = ctl["mask"].shape[-1]
         for j in range(n_perturb):
-            seed = fmix32(ctl["seed"]
-                          + jnp.uint32((0x9E3779B9 * (j + 1)) & 0xFFFFFFFF))
+            seed = zo.perturb_seed(ctl["seed"], j)
             lp, lm, params_at = zo.dual_forward(
                 lambda p: loss_fn(p, batch), params, seed, mu, mode=mode)
             noise_key = jax.random.wrap_key_data(ctl["noise_bits"])
@@ -156,6 +164,13 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
             loss_acc += jnp.mean(0.5 * (lp + lm)).astype(jnp.float32)
             if j == 0:
                 metrics["p_clients"] = p_k
+                if adversary is not None:
+                    # what the eavesdropper records this round (first
+                    # perturbation direction): same payload vector and same
+                    # round key as the decode, so the captured observation
+                    # is bit-identical to the signal the server inverted
+                    metrics.update(
+                        adversary.observe(transport, p_k, ctl, round_key))
         metrics["loss"] = loss_acc / n_perturb
         metrics["p_hat"] = p_hat_sum / n_perturb
         metrics["k_eff"] = jnp.sum(ctl["mask"])
@@ -177,9 +192,15 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
         repl = lambda tree: jax.tree_util.tree_map(lambda _: P(), tree)
         bspecs = jax.tree_util.tree_map(
             lambda l: P(axes, *([None] * (l.ndim - 1))), batch)
-        out_specs = (repl(params),
-                     {"p_clients": P(), "loss": P(), "p_hat": P(),
-                      "k_eff": P()})
+        metric_specs = {"p_clients": P(), "loss": P(), "p_hat": P(),
+                        "k_eff": P()}
+        if adversary is not None:
+            # observations are computed from the gathered [K] payload and
+            # the replicated control block — replicated w.r.t. the client
+            # axes like every other scalar metric
+            metric_specs.update({k: P() for k in adversary.observation_spec(
+                transport, pz.n_clients)})
+        out_specs = (repl(params), metric_specs)
         k_total = ctl["mask"].shape[-1]
         ids = jnp.arange(k_total, dtype=jnp.int32)
 
@@ -205,12 +226,23 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
 
 @functools.lru_cache(maxsize=128)
 def make_fo_step(model_cfg: ModelConfig, optimizer,
-                 impl: Optional[str] = None) -> Callable:
+                 impl: Optional[str] = None,
+                 adversary: Optional[Any] = None) -> Callable:
     """First-order FedSGD baseline: full backprop + cross-client grad
     averaging (the d-dimensional all-reduce the paper eliminates).
 
     Memoized like `make_zo_step` — optimizers are frozen dataclasses, so
-    equal configs return the same function object and jit caches hit."""
+    equal configs return the same function object and jit caches hit.
+
+    `adversary` captures what the FO uplink leaks: the victim client's raw
+    d-dimensional gradient (flattened, f32) as the `obs_grad0` metric — the
+    classic gradient-inversion surface repro.privacy's DLG attack consumes.
+    Capture is honest about FO's cost: one EXTRA per-client backward per
+    round, and a [d] f32 observation riding every round's metrics (a scan
+    chunk carries chunk_rounds of them) — at production model sizes run
+    audited FO on short horizons/small chunks and cap the host-side stream
+    with `AttackHook(max_rounds=...)`.
+    """
     loss_fn = make_loss_fn(model_cfg, impl=impl)
 
     def step(params: PyTree, opt_state: PyTree, batch: Dict, ctl: Dict
@@ -222,8 +254,16 @@ def make_fo_step(model_cfg: ModelConfig, optimizer,
                 jnp.sum(mask), 1.0)
 
         loss, grads = jax.value_and_grad(mean_loss)(params)
+        metrics = {"loss": loss}
+        if adversary is not None:
+            from jax.flatten_util import ravel_pytree
+            from repro.privacy.adversary import OBS_PREFIX
+            g0 = jax.grad(lambda p: loss_fn(p, batch)[0])(params)
+            metrics[OBS_PREFIX + "grad0"] = ravel_pytree(
+                jax.tree_util.tree_map(
+                    lambda x: x.astype(jnp.float32), g0))[0]
         params, opt_state = optimizer.update(params, grads, opt_state)
-        return params, opt_state, {"loss": loss}
+        return params, opt_state, metrics
 
     return step
 

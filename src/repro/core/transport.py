@@ -24,7 +24,15 @@ and the jit/scan caches key on them) registered by name:
   perfect  — noise-free superposition upper bound (Eq. 38).
   digital  — conventional baseline: per-client b-bit stochastic quantization
              over orthogonal TDMA slots, no superposition, no DP mechanism.
+  smart_digital — FedZO-style seed-and-scalar digital: the shared-seed trick
+             shrinks the slot payload to b bits per perturbation, but
+             orthogonal decoding still leaks every client's scalar.
   fo       — first-order FedSGD/Adam baseline (d-dimensional uplink).
+
+Each mechanism additionally exposes its *eavesdropper observation model*
+(`observe`/`observation_spec`) — what an over-the-air listener records per
+round — consumed by the privacy subsystem (repro.privacy: attacks + the
+empirical DP audit).
 
 New scenarios (imperfect CSI, straggler-aware schemes, RIS channels) plug in
 here: subclass `Transport`, decorate with `@register("name")`, and every
@@ -134,6 +142,35 @@ class Transport:
             "noise_bits": jax.ShapeDtypeStruct((2,), jnp.uint32),
         }
 
+    # -- eavesdropper observation model (repro.privacy) -------------------
+    def observe(self, p: jnp.ndarray, ctl: Dict[str, jnp.ndarray],
+                key: jax.Array) -> Dict[str, jnp.ndarray]:
+        """What an over-the-air listener at the receiver front-end sees
+        when the [K] payload vector `p` is transmitted under this round's
+        control block — BEFORE any server-side decode.
+
+        Called with the same per-round key as `aggregate`, so noise draws
+        are bit-identical to the signal the server actually decoded: for
+        the OTA mechanisms the observation is the superposed noisy scalar
+        of Eq. 4 (the quantity Lemma 1 privatizes); for digital orthogonal
+        transmission every client's payload is individually decodable (the
+        trilemma's third corner). Pure and passive — calling it never
+        perturbs the training trajectory. Default: nothing observable
+        (mechanisms without a modeled eavesdropper)."""
+        return {}
+
+    def observation_spec(self, n_clients: int
+                         ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Abstract shapes of the `observe()` dict (capture/dry-run spec)."""
+        return {}
+
+    def transmitted(self, p: jnp.ndarray) -> jnp.ndarray:
+        """The [K] payload actually radiated given the clipped projections
+        `p` — the ground truth observation-based attacks score against.
+        Identity for the scalar-payload mechanisms; the sign transport
+        radiates ±1 ballots."""
+        return p
+
     # -- host side --------------------------------------------------------
     def make_schedule(self, trace, pz) -> "object":
         """Solve the transmit plan for the horizon (a PowerSchedule).
@@ -148,6 +185,12 @@ class Transport:
     def charges_privacy(self, schedule, pz) -> bool:
         """Whether rounds under this transport spend (eps, delta) budget."""
         return False
+
+    def canary_payload(self, pz) -> Optional[float]:
+        """Worst-case payload magnitude one client can contribute — the
+        canary the empirical DP audit (repro.privacy.audit) injects. None
+        means the mechanism provides no DP guarantee to audit."""
+        return None
 
     def round_dp_costs(self, schedule, t0: int, t1: int, pz) -> np.ndarray:
         """Per-round DP cost vector for rounds [t0, t1) (Eq. 16 terms);
@@ -279,6 +322,22 @@ class AnalogOTA(Transport):
         return ota.analog_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
                               ctl["mask"], ctl.get("g"))[0]
 
+    def observe(self, p, ctl, key):
+        # the eavesdropper hears the same electromagnetic superposition the
+        # server front-end receives: one noisy scalar per round (Eq. 4),
+        # bit-identical to the decode path's input (same key, same draws).
+        # Noise-free "perfect" rounds superpose without channel/artificial
+        # noise — the observation is the bare masked sum.
+        if self.scheme == "perfect":
+            w = ctl["mask"].astype(p.dtype)
+            return {"y": jnp.sum(w * p)}
+        y, _ = ota.superpose(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
+                             ctl["mask"], ctl.get("g"))
+        return {"y": y}
+
+    def observation_spec(self, n_clients):
+        return {"y": jax.ShapeDtypeStruct((), jnp.float32)}
+
     def make_schedule(self, trace, pz):
         from repro.core import power_control as pc
         h = trace_magnitudes(trace)
@@ -304,6 +363,11 @@ class AnalogOTA(Transport):
     def round_dp_costs(self, schedule, t0, t1, pz):
         return ota_dp_costs(schedule, t0, t1, pz.zo.clip_gamma)
 
+    def canary_payload(self, pz):
+        # projections are clipped to ±γ (Assumption 3) — the canary
+        # transmits the clip boundary
+        return None if self.scheme == "perfect" else float(pz.zo.clip_gamma)
+
     def payload_bits(self, pz, d):
         return 16 * pz.zo.n_perturb          # fp16 scalar per perturbation
 
@@ -321,6 +385,15 @@ class SignOTA(AnalogOTA):
             return ota.perfect_sign(p, ctl["mask"])
         return ota.sign_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
                             ctl["mask"], ctl.get("g"))[0]
+
+    def observe(self, p, ctl, key):
+        # the radiated payload is the ±1 ballot, so the listener hears the
+        # superposed noisy vote count — individual sign bits only superpose,
+        # they are never separable over the air (unlike digital slots).
+        return super().observe(jnp.sign(p), ctl, key)
+
+    def transmitted(self, p):
+        return jnp.sign(p)
 
     def make_schedule(self, trace, pz):
         from repro.core import power_control as pc
@@ -344,6 +417,9 @@ class SignOTA(AnalogOTA):
 
     def round_dp_costs(self, schedule, t0, t1, pz):
         return ota_dp_costs(schedule, t0, t1, 1.0)
+
+    def canary_payload(self, pz):
+        return None if self.scheme == "perfect" else 1.0   # a ±1 ballot
 
     def payload_bits(self, pz, d):
         return 1 * pz.zo.n_perturb           # one sign per perturbation
@@ -420,6 +496,18 @@ class DigitalTDMA(Transport):
         q = stochastic_quantize(p, key, bits=self.quant_bits, clip=self.clip)
         return jnp.sum(mask * q) / jnp.maximum(jnp.sum(mask), 1.0)
 
+    def observe(self, p, ctl, key):
+        # orthogonal slots are the privacy failure mode: an eavesdropper
+        # decodes every scheduled client's payload INDIVIDUALLY, exactly as
+        # the base station does (same key ⇒ same dither draw). Unscheduled
+        # slots radiate nothing (masked to 0 in the observation).
+        mask = ctl["mask"].astype(p.dtype)
+        q = stochastic_quantize(p, key, bits=self.quant_bits, clip=self.clip)
+        return {"q": mask * q}
+
+    def observation_spec(self, n_clients):
+        return {"q": jax.ShapeDtypeStruct((n_clients,), jnp.float32)}
+
     def make_schedule(self, trace, pz):
         return _trivial_schedule(trace_magnitudes(trace), scheme="digital")
 
@@ -427,6 +515,33 @@ class DigitalTDMA(Transport):
         # one combined d-dimensional update per round, b bits per coordinate
         # (perturbation directions sum into a single uploaded vector)
         return self.quant_bits * d
+
+
+@register("smart_digital")
+@dataclass(frozen=True)
+class SmartDigital(DigitalTDMA):
+    """FedZO-style seed-and-scalar digital uplink: the strongest digital
+    competitor on communication.
+
+    Clients exploit the same shared-seed reconstruction trick as pAirZero —
+    the perturbation z is regenerated from the broadcast round seed, so the
+    payload per perturbation direction is ONE b-bit quantized scalar sent
+    over an orthogonal TDMA slot (not the d-dimensional update the naive
+    `digital` baseline uploads). Communication therefore matches the OTA
+    mechanisms within a constant factor (`quant_bits` vs 16/1 bits), and
+    memory matches (same ZO step) — but the third bird stays uncaged:
+    orthogonal decoding still exposes each client's scalar exactly, and
+    with the public seed an eavesdropper replays z and reconstructs the
+    client's full gradient estimate p_k·z (see repro.privacy's seed-replay
+    attack). No DP is charged and none is provided.
+
+    Decode/schedule are inherited from DigitalTDMA (per-slot decode +
+    straggler-aware average); only the comm accounting differs.
+    """
+
+    def payload_bits(self, pz, d):
+        # one quantized scalar per perturbation direction — d drops out
+        return self.quant_bits * pz.zo.n_perturb
 
 
 # ---------------------------------------------------------------------------

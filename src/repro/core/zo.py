@@ -49,6 +49,15 @@ def round_seed(base_seed: int, t) -> jnp.ndarray:
                      * jnp.uint32(0x85EBCA6B)))
 
 
+def perturb_seed(round_seed_t, j: int) -> jnp.ndarray:
+    """Seed of perturbation direction j within a round (the stream the
+    round body perturbs with). Derived from the broadcast round seed, so it
+    is just as public — an eavesdropper replays z(perturb_seed) exactly,
+    which is the premise of the seed-replay attack (repro.privacy)."""
+    return fmix32(jnp.asarray(round_seed_t).astype(jnp.uint32)
+                  + jnp.uint32((0x9E3779B9 * (j + 1)) & 0xFFFFFFFF))
+
+
 # ---------------------------------------------------------------------------
 # Seeded perturbation
 # ---------------------------------------------------------------------------

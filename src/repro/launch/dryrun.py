@@ -16,6 +16,7 @@ Usage:
     python -m repro.launch.dryrun --mesh multi            # multi-pod only
     python -m repro.launch.dryrun --variant fo            # FO baseline cells
     python -m repro.launch.dryrun --shard-clients         # shard_map'd step
+    python -m repro.launch.dryrun --audit                 # capture variant
 Results append incrementally to --out (default results/dryrun.json).
 """
 # The VERY FIRST lines, before ANY other import (jax locks the device count
@@ -46,6 +47,26 @@ from repro.optim import fo as fo_opt  # noqa: E402
 from repro.runtime import sharding as shd  # noqa: E402
 
 DTYPE = jnp.bfloat16
+
+
+def audit_applies(shape_name: str, variant: str, audit: bool) -> bool:
+    """The eavesdropper-capture variant exists only for the ZO train step."""
+    return (audit and SHAPES_BY_NAME[shape_name].kind == "train"
+            and variant == "zo")
+
+
+def make_cell_id(arch: str, shape_name: str, mesh_name: str, variant: str,
+                 *, bf16_reduce: bool = False, shard_clients: bool = False,
+                 audit: bool = False) -> str:
+    """The one cell-id spelling, shared by run_cell and the done-skip
+    resume in main — a suffix added in only one place would make resume
+    recompute finished cells or skip cells whose variant never lowered.
+    `|audit` marks only cells that actually compile the capture variant."""
+    return (f"{arch}|{shape_name}|{mesh_name}|{variant}"
+            + ("|bf16r" if bf16_reduce else "")
+            + ("|smap" if shard_clients else "")
+            + ("|audit" if audit_applies(shape_name, variant, audit)
+               else ""))
 
 
 def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
@@ -119,21 +140,30 @@ def input_specs(arch: str, shape_name: str, mesh, *,
 # ---------------------------------------------------------------------------
 
 def build_step(cfg: ModelConfig, shape: ShapeConfig, k: int,
-               variant: str = "zo", shard_clients_mesh=None):
+               variant: str = "zo", shard_clients_mesh=None,
+               audit: bool = False):
     """Returns (fn, donate_argnums) for this cell.
 
     `shard_clients_mesh` compiles the shard_map'd ZO step instead: clients
     manual over (pod, data), 'model' under GSPMD auto — the dry-run proof
-    that the cross-device psum aggregate lowers on the production mesh."""
+    that the cross-device psum aggregate lowers on the production mesh.
+    `audit` compiles the eavesdropper-capture variant (repro.privacy): the
+    step additionally emits the adversary's obs_* metrics — the dry-run
+    proof that observation capture lowers at production scale too."""
     mod = registry.get_module(cfg)
     if shape.kind == "train":
         if variant == "zo":
+            adversary = None
+            if audit:
+                from repro.privacy import Adversary
+                adversary = Adversary()
             pz = PairZeroConfig(variant="analog", n_clients=k,
                                 zo=ZOConfig(mu=1e-3, lr=5e-7,
                                             clip_gamma=100.0))
             step = pairzero.make_zo_step(cfg, pz, impl="xla",
                                          scheme="solution",
-                                         mesh=shard_clients_mesh)
+                                         mesh=shard_clients_mesh,
+                                         adversary=adversary)
             return (lambda params, batch, ctl: step(params, batch, ctl)), (0,)
         if variant in ("fo", "fo_sgd"):
             opt = fo_opt.SGD(lr=1e-3) if variant == "fo_sgd" \
@@ -171,11 +201,13 @@ def build_step(cfg: ModelConfig, shape: ShapeConfig, k: int,
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "zo", with_roofline: bool = True,
-             bf16_reduce: bool = False, shard_clients: bool = False) -> Dict:
+             bf16_reduce: bool = False, shard_clients: bool = False,
+             audit: bool = False) -> Dict:
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
-    cell_id = f"{arch}|{shape_name}|{mesh_name}|{variant}" + (
-        "|bf16r" if bf16_reduce else "") + (
-        "|smap" if shard_clients else "")
+    audit = audit_applies(shape_name, variant, audit)
+    cell_id = make_cell_id(arch, shape_name, mesh_name, variant,
+                           bf16_reduce=bf16_reduce,
+                           shard_clients=shard_clients, audit=audit)
     cfg = registry.get_arch(arch)
     shape = SHAPES_BY_NAME[shape_name]
     out: Dict = {"cell": cell_id, "arch": arch, "shape": shape_name,
@@ -204,7 +236,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         fn, donate = build_step(
             cfg, shape, meta["k"], variant,
             shard_clients_mesh=mesh if shard_clients
-            and shape.kind == "train" and variant == "zo" else None)
+            and shape.kind == "train" and variant == "zo" else None,
+            audit=audit)
         with shd.hints(mesh, bf16_reduce):
             lowered = jax.jit(fn, donate_argnums=donate).lower(
                 **{k2: v for k2, v in specs.items()})
@@ -268,6 +301,12 @@ def main() -> None:
                          "over pod/data, model under GSPMD auto) — proves "
                          "the cross-device psum aggregate lowers on the "
                          "production mesh (train cells only)")
+    ap.add_argument("--audit", action="store_true",
+                    help="compile the eavesdropper-capture step variant "
+                         "(repro.privacy observation capture as obs_* "
+                         "metrics) — proves the privacy subsystem's "
+                         "capture path lowers at production scale "
+                         "(train cells only)")
     ap.add_argument("--out", default="results/dryrun.json")
     args = ap.parse_args()
 
@@ -288,9 +327,11 @@ def main() -> None:
         for shape_name in shapes:
             for multi in meshes:
                 mesh_name = "pod2x16x16" if multi else "pod16x16"
-                cell_id = (f"{arch}|{shape_name}|{mesh_name}|{args.variant}"
-                           + ("|bf16r" if args.bf16_reduce else "")
-                           + ("|smap" if args.shard_clients else ""))
+                cell_id = make_cell_id(arch, shape_name, mesh_name,
+                                       args.variant,
+                                       bf16_reduce=args.bf16_reduce,
+                                       shard_clients=args.shard_clients,
+                                       audit=args.audit)
                 if cell_id in done:
                     print(f"[skip-done] {cell_id}", flush=True)
                     continue
@@ -298,7 +339,8 @@ def main() -> None:
                 r = run_cell(arch, shape_name, multi, args.variant,
                              with_roofline=not args.no_roofline,
                              bf16_reduce=args.bf16_reduce,
-                             shard_clients=args.shard_clients)
+                             shard_clients=args.shard_clients,
+                             audit=args.audit)
                 print(f"  -> {r['status']} ({r.get('wall_s', 0)}s)"
                       + (f" err={r.get('error', '')[:200]}"
                          if r["status"] == "failed" else ""), flush=True)

@@ -12,6 +12,13 @@ ChannelModel (see repro.channel), optionally wrapped:
     --channel rician --rician-k 4 --csi-phase-err 0.1 --outage-db -10 \
         --cell-radius 150
 
+Mobility is specified physically for --channel ar1 via --doppler-hz (and
+--round-s): the lag-1 correlation is derived by Jakes' J0(2*pi*f_D*tau).
+`--audit` switches on the privacy subsystem (repro.privacy): eavesdropper
+observation capture, the seed-replay reconstruction attack, and — on DP
+transports — the empirical Clopper-Pearson eps_hat audit checked against
+the analytic accountant (non-zero exit on violation: a CI-able gate).
+
 `--mesh auto|8|2x8` shards the clients over a device mesh: each shard runs
 its clients' forwards and the OTA scalar aggregate becomes a real
 cross-device psum (bit-identical to the single-device run). On CPU, set
@@ -29,6 +36,7 @@ import argparse
 import json
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import (ChannelConfig, DPConfig, PairZeroConfig,
                                 PowerControlConfig, TransportConfig, ZOConfig)
@@ -68,6 +76,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="K-factor for --channel rician")
     ap.add_argument("--ar1-rho", type=float, default=0.9,
                     help="lag-1 temporal correlation for --channel ar1")
+    ap.add_argument("--doppler-hz", type=float, default=None,
+                    help="maximum Doppler shift f_D (Hz) for --channel "
+                         "ar1: rho is derived physically via Jakes' "
+                         "J0(2*pi*f_D*tau) instead of --ar1-rho")
+    ap.add_argument("--round-s", type=float, default=1e-3,
+                    help="round duration tau (s) entering the Jakes "
+                         "mapping of --doppler-hz")
     ap.add_argument("--csi-phase-err", type=float, default=0.0,
                     help="residual CSI phase-error std (radians); >0 wraps "
                          "the channel in ImperfectCSI")
@@ -115,6 +130,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--elastic", default=None,
                     help="membership events: 'round:K,round:K' e.g. "
                          "'200:3,400:5'")
+    ap.add_argument("--audit", action="store_true",
+                    help="eavesdropper capture + empirical privacy audit "
+                         "(repro.privacy): records what an over-the-air "
+                         "listener sees every round, runs the seed-replay "
+                         "reconstruction attack on it, and — for DP "
+                         "transports — checks the Clopper-Pearson eps_hat "
+                         "lower bound against the analytic accountant "
+                         "(exit 1 if the audit ever exceeds it)")
+    ap.add_argument("--audit-trials", type=int, default=1500,
+                    help="paired canary traces for the eps_hat audit")
     ap.add_argument("--out", default=None, help="write result JSON here")
     return ap
 
@@ -134,6 +159,8 @@ def main() -> None:
                               d=cfg.param_count(),
                               model=args.channel, rician_k=args.rician_k,
                               ar1_rho=args.ar1_rho,
+                              doppler_hz=args.doppler_hz,
+                              round_duration_s=args.round_s,
                               phase_err_std=args.csi_phase_err,
                               outage_db=args.outage_db,
                               cell_radius=args.cell_radius),
@@ -171,6 +198,17 @@ def main() -> None:
         print(f"client mesh: {dict(mesh.shape)} over "
               f"{mesh.devices.size} devices", flush=True)
 
+    adversary, attack_hook, extra_hooks = None, None, []
+    if args.audit:
+        from repro import privacy as pv
+        adversary = pv.Adversary()
+        # the OTA/digital observations are scalars per round; FO's is a
+        # full [d] gradient — cap the host-side stream (the attacks
+        # consume the early rounds; the eps_hat audit needs no capture)
+        cap = 8 if mechanism == "fo" else None
+        attack_hook = pv.AttackHook(max_rounds=cap)
+        extra_hooks = [attack_hook]
+
     res = fedsim.run(cfg, pz, pipe, rounds=args.rounds,
                      engine=args.engine, chunk_rounds=args.chunk_rounds,
                      eval_every=args.eval_every,
@@ -178,7 +216,12 @@ def main() -> None:
                      checkpoint_every=args.checkpoint_every,
                      fault=fault, elastic=elastic, dtype=jnp.float32,
                      mesh=mesh, overlap=not args.no_overlap,
+                     adversary=adversary, hooks=extra_hooks,
                      on_round=log)
+
+    audit_summary = None
+    if args.audit:
+        audit_summary = run_audit(pz, res, attack_hook, args)
 
     summary = {
         "arch": cfg.name, "transport": mechanism, "scheme": args.scheme,
@@ -196,10 +239,54 @@ def main() -> None:
         "ckpt_stall_s": round(res.ckpt_stall_s, 3),
         "resumed_from": res.resumed_from,
     }
+    if audit_summary is not None:
+        summary["audit"] = audit_summary
     print(json.dumps(summary, indent=2))
     if args.out:
         with open(args.out, "w") as f:
             json.dump({**summary, "losses": res.losses}, f)
+    if audit_summary is not None and not audit_summary.get("dominated", True):
+        raise SystemExit("AUDIT FAILURE: empirical eps_hat "
+                         f"{audit_summary['eps_hat']:.4f} exceeds the "
+                         "analytic accountant's "
+                         f"{audit_summary['eps_analytic']:.4f}")
+
+
+def run_audit(pz, res, attack_hook, args) -> dict:
+    """Post-run privacy audit: seed-replay reconstruction on the captured
+    observations + the paired-trace eps_hat bound vs the analytic ledger.
+    Consumes the realized schedule/transport the run exposes on its
+    RunResult — the adversary knows both (they are broadcast)."""
+    from repro import privacy as pv
+    out: dict = {}
+    obs = attack_hook.observations()
+    payloads = attack_hook.payloads()
+    if payloads is not None and ("obs_y" in obs or "obs_q" in obs):
+        # score against what was actually radiated (±1 ballots for sign)
+        payloads = np.asarray(res.transport.transmitted(payloads))
+        replay = pv.get("seed_replay")().run(
+            obs, payloads, res.schedule.c, attack_hook.k_eff())
+        out["seed_replay"] = {
+            "victim_rmse": replay["victim_rmse"],
+            "mean_rmse": replay["mean_rmse"],
+            "per_client_exposed": replay["per_client_exposed"],
+        }
+    if res.transport.canary_payload(pz) is not None:
+        audit = pv.audit_transport(
+            res.transport, res.schedule, pz,
+            rounds=max(res.steps, 1), trials=args.audit_trials)
+        out.update(audit.to_dict())
+        verdict = "OK (eps_hat <= analytic)" if audit.dominated \
+            else "VIOLATED"
+        print(f"privacy audit: eps_hat={audit.eps_hat:.4f} <= "
+              f"analytic eps={audit.eps_analytic:.4f}? {verdict}",
+              flush=True)
+    else:
+        out["auditable"] = False
+        print(f"privacy audit: transport {res.transport.name!r} provides "
+              "no DP guarantee (payloads individually exposed; see "
+              "seed_replay metrics)", flush=True)
+    return out
 
 
 if __name__ == "__main__":

@@ -76,10 +76,15 @@ def _block_apply(bp: dict, x: jnp.ndarray, positions: jnp.ndarray,
 
 def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
             prefix_embeds: Optional[jnp.ndarray] = None,
+            inputs_embeds: Optional[jnp.ndarray] = None,
             impl: Optional[str] = None) -> jnp.ndarray:
     """tokens: [B, S] → hidden [B, S(+P), D]. prefix_embeds ([B, P, D])
-    are prepended (VLM stub frontend)."""
-    x = L.embed(params["embed"], tokens)
+    are prepended (VLM stub frontend). inputs_embeds ([B, S, D]) replaces
+    the embedding lookup entirely (tokens may be None) — the continuous
+    input surface gradient-inversion attacks (repro.privacy.attacks) and
+    soft-token methods differentiate through."""
+    x = L.embed(params["embed"], tokens) if inputs_embeds is None \
+        else inputs_embeds
     if prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
     positions = jnp.arange(x.shape[1])
@@ -101,9 +106,11 @@ def logits_from_hidden(params: dict, x: jnp.ndarray) -> jnp.ndarray:
 def token_nll(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
               targets: jnp.ndarray, mask: jnp.ndarray, *,
               prefix_embeds: Optional[jnp.ndarray] = None,
+              inputs_embeds: Optional[jnp.ndarray] = None,
               impl: Optional[str] = None) -> jnp.ndarray:
     """Per-sequence-row mean NLL: [B, S] → [B]. (f32 CE over sharded vocab.)"""
-    x = forward(params, cfg, tokens, prefix_embeds=prefix_embeds, impl=impl)
+    x = forward(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                inputs_embeds=inputs_embeds, impl=impl)
     if prefix_embeds is not None:
         x = x[:, prefix_embeds.shape[1]:]
     logits = logits_from_hidden(params, x)                  # [B, S, V] f32

@@ -1,0 +1,47 @@
+"""Privacy subsystem: adversary, attacks, and the empirical DP audit.
+
+The paper's third bird taken seriously: instead of only *asserting* the
+(ε, δ)-DP guarantee analytically (core/dp.py, Lemma 1 / Eq. 16–17), this
+package simulates the adversary and measures it — the third first-class
+registry subsystem next to Transports (repro.core.transport) and
+ChannelModels (repro.channel):
+
+  adversary   the eavesdropper observation model. `Adversary.observe()`
+              delegates to each Transport's `observe()` spec and rides the
+              engines' metrics stream, so both executors capture — device-
+              resident, bit-identically — exactly what an over-the-air
+              listener sees: the superposed noisy scalar (analog/sign),
+              per-slot quantized payloads (digital/smart_digital), raw
+              gradients (fo).
+  attacks     registry of reconstruction attacks: `dlg` (jit-compiled
+              DLG-style gradient inversion against raw-gradient uplinks)
+              and `seed_replay` (the ZO threat: replay the public round
+              seed, estimate the projection through the Eq.-16 noise).
+  audit       paired-trace canary hypothesis testing → a Clopper–Pearson
+              ε̂ lower bound per run, checked against the analytic
+              accountant (`dp.epsilon_for_budget`): ε̂ ≤ ε, always, on
+              every DP transport × channel × power schedule.
+  hooks       `AttackHook` — RoundHook that stacks the captured
+              observations for post-hoc attacks/audits.
+
+See README "Privacy & attacks" and benchmarks/fig_privacy.py for the
+privacy-vs-utility sweep across the transport × channel grid.
+"""
+from repro.privacy.adversary import OBS_PREFIX, Adversary
+from repro.privacy.attacks import (Attack, GradientInversion,
+                                   SeedReplayAttack, available,
+                                   client_gradient, get,
+                                   reconstruction_error, register,
+                                   zo_gradient_estimate)
+from repro.privacy.audit import (AuditResult, audit_transport,
+                                 clopper_pearson_upper,
+                                 paired_trace_statistics)
+from repro.privacy.hooks import AttackHook
+
+__all__ = [
+    "OBS_PREFIX", "Adversary", "Attack", "AttackHook", "AuditResult",
+    "GradientInversion", "SeedReplayAttack", "audit_transport",
+    "available", "client_gradient", "clopper_pearson_upper", "get",
+    "paired_trace_statistics", "reconstruction_error", "register",
+    "zo_gradient_estimate",
+]

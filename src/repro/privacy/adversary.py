@@ -1,0 +1,65 @@
+"""Eavesdropper observation model: what an over-the-air listener records.
+
+The threat model (paper Sec. IV-C's motivation): an honest-but-curious
+listener at the receiver front-end — the base station itself, or anything
+within radio range with the same channel knowledge — records the uplink
+every round. What it sees is *transport-dependent*, and that difference IS
+the trilemma's privacy axis:
+
+  analog / sign OTA   one superposed noisy scalar per round (Eq. 4) — the
+                      quantity Lemma 1 privatizes; individual clients are
+                      never separable over the air,
+  digital / smart_digital
+                      every scheduled client's quantized payload decoded
+                      individually (orthogonal slots have no crowd to
+                      hide in),
+  fo                  the attacked client's raw d-dimensional gradient —
+                      the classic gradient-inversion surface.
+
+`Adversary` is a frozen dataclass (hashable — it rides the memoized
+`pairzero.make_zo_step` cache key): its `observe()` delegates to the round
+Transport's own observation model (`Transport.observe`, called with the
+SAME per-round key as the decode, so noise draws are bit-identical to the
+signal the server actually inverted) and prefixes the keys so the capture
+rides the engines' existing metrics stream. Both executors stack metrics
+identically, which is what makes scan/loop observation capture bitwise
+equal for free — and because `observe()` is pure and passive, capture
+never perturbs the training trajectory (tests/test_privacy.py pins both).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+#: metric-key prefix under which observations ride the engines' capture path
+OBS_PREFIX = "obs_"
+
+
+@dataclass(frozen=True)
+class Adversary:
+    """Over-the-air eavesdropper at the receiver front-end.
+
+    This is the worst-case listener for privacy: exactly as capable as the
+    base station itself (same front-end, same channel knowledge) — the
+    vantage the DP analysis must survive and the one the empirical audit
+    assumes. Weaker or differently-positioned listeners (extra thermal
+    noise, near-client pre-superposition taps, colluding sets) are
+    deliberately NOT modeled yet — see the ROADMAP privacy follow-ons —
+    rather than half-modeled inconsistently across transports.
+    """
+
+    def observe(self, transport, p: jnp.ndarray,
+                ctl: Dict[str, jnp.ndarray], key: jax.Array
+                ) -> Dict[str, jnp.ndarray]:
+        """Prefixed observation dict for one round's [K] payload vector."""
+        obs = transport.observe(p, ctl, key)
+        return {OBS_PREFIX + k: v for k, v in obs.items()}
+
+    def observation_spec(self, transport, n_clients: int
+                         ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Abstract shapes of `observe()` (mesh out-specs, dry-run cells)."""
+        return {OBS_PREFIX + k: v
+                for k, v in transport.observation_spec(n_clients).items()}

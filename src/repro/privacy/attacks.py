@@ -1,0 +1,320 @@
+"""Attack registry: gradient inversion (DLG) and seed-replay reconstruction.
+
+Attacks are frozen dataclasses registered by name (mirroring the Transport /
+ChannelModel designs): `get("dlg")(steps=300).run(...)`. Each consumes the
+observations an `Adversary` captured through a run (repro.privacy.hooks) and
+produces reconstruction metrics — the empirical counterpart of the paper's
+privacy claim:
+
+  seed_replay  the ZO-specific threat. The round seed is *broadcast in the
+               clear* (that is the whole communication trick), so an
+               eavesdropper replays z(seed) exactly and only needs the
+               scalar to own the full d-dimensional update. Against the
+               digital uplinks the scalar arrives per client and exact (to
+               quantizer resolution) — reconstruction succeeds. Against
+               pAirZero's OTA superposition the listener gets one noisy
+               SUM: the best unbiased estimate of the projection is
+               y/(K_eff·c), corrupted by the Eq.-16 effective noise m/(K·c)
+               that the power control keeps large enough for (ε, δ)-DP.
+
+  dlg          DLG-style iterative gradient inversion [Zhu et al. 2019]
+               against the FO baseline's raw-gradient uplink (and any
+               reconstructed ZO gradient estimate): jit-compiled gradient
+               matching that optimizes a soft token distribution until its
+               induced gradient matches the observed one, then reads the
+               tokens back off the argmax. Labels/mask are assumed known
+               (the iDLG simplification); the paper-relevant signal is the
+               *gap* between transports, not attack optimality.
+
+`client_gradient` / `reconstruction_error` are the shared evaluation
+oracle: every transport's observation is mapped to a gradient estimate ĝ
+and scored as ‖ĝ − g‖/‖g‖ against the victim client's true first-order
+gradient — one number comparable across fo / digital / smart_digital /
+analog / sign (benchmarks/fig_privacy.py plots it against ε̂ and utility).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import zo
+from repro.optim import fo as fo_opt
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type["Attack"]] = {}
+
+
+def register(name: str):
+    """Class decorator: `@register("dlg")` adds an Attack under `name`."""
+    def deco(cls: Type["Attack"]) -> Type["Attack"]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Type["Attack"]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown attack {name!r} "
+                         f"(registered: {available()})") from None
+
+
+@dataclass(frozen=True)
+class Attack:
+    """One reconstruction attack. Subclass + `@register(name)` to add one.
+
+    Frozen dataclass: every knob that changes the attack computation is
+    part of equality/hash, so jitted attack programs cache per-config."""
+
+    #: registry name (set by @register)
+    name = "?"
+
+    def run(self, **kwargs) -> Dict[str, Any]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Shared evaluation oracle
+# ---------------------------------------------------------------------------
+
+def client_gradient(model_cfg, params: PyTree, batch: Dict,
+                    client: int = 0) -> jnp.ndarray:
+    """Flat f32 first-order gradient of ONE client's loss — the ground
+    truth every reconstruction is scored against (and exactly what the FO
+    uplink radiates for that client)."""
+    from repro.core.pairzero import make_loss_fn
+    loss_fn = make_loss_fn(model_cfg)
+    g = jax.grad(lambda p: loss_fn(p, batch)[client])(params)
+    return ravel_pytree(jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), g))[0]
+
+
+def zo_gradient_estimate(params: PyTree, seed, scalar) -> jnp.ndarray:
+    """Seed-replay gradient estimate ĝ = p̃ · z(seed), flat f32.
+
+    `seed` is the broadcast round seed (public); `scalar` the attacker's
+    projection estimate. The z streams match training bitwise (same
+    per-leaf hash as `zo.perturb`)."""
+    z = zo.draw_z(params, jnp.asarray(seed).astype(jnp.uint32))
+    flat = ravel_pytree(jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32), z))[0]
+    return jnp.float32(scalar) * flat
+
+
+def reconstruction_error(g_hat: jnp.ndarray, g_true: jnp.ndarray) -> float:
+    """Relative gradient reconstruction error ‖ĝ − g‖ / ‖g‖ (0 = perfect
+    inversion; ≈ √2 for an uncorrelated unit-scaled guess)."""
+    g_hat = np.asarray(g_hat, dtype=np.float64)
+    g_true = np.asarray(g_true, dtype=np.float64)
+    denom = float(np.linalg.norm(g_true))
+    return float(np.linalg.norm(g_hat - g_true)) / max(denom, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Seed-replay scalar reconstruction (the ZO threat model)
+# ---------------------------------------------------------------------------
+
+@register("seed_replay")
+@dataclass(frozen=True)
+class SeedReplayAttack(Attack):
+    """Estimate the transmitted projection from the uplink observation.
+
+    The attacker knows everything broadcast or publicly scheduled: the
+    round seeds, the schedule (c(t), K) and the channel statistics. Per
+    round it inverts its observation to a scalar estimate p̃ and scores it
+    against the true payload(s):
+
+      OTA ("y" observations)      p̃ = y / (K_eff · c) — estimates only the
+                                  *mean* projection, through the Eq.-16
+                                  noise (per-client payloads unrecoverable);
+      digital ("q" observations)  p̃_k = q_k per client, exact to quantizer
+                                  resolution — each client individually
+                                  exposed.
+    """
+    victim: int = 0     # client index scored by per-client metrics
+
+    def run(self, observations: Dict[str, np.ndarray],
+            payloads: np.ndarray, c: np.ndarray,
+            k_eff: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Score scalar reconstruction over a captured horizon.
+
+        observations: stacked AttackHook capture ({"obs_y": [T]} or
+          {"obs_q": [T, K]}); payloads: the per-client payloads as
+          TRANSMITTED [T, K] — run `Transport.transmitted` over the
+          captured projections first (±1 ballots for sign, identity
+          otherwise) so estimates are scored against the right ground
+          truth; c: schedule gains [T]; k_eff: surviving counts [T].
+        """
+        payloads = np.asarray(payloads, dtype=np.float64)
+        rounds, k = payloads.shape
+        c = np.asarray(c, dtype=np.float64)[:rounds]
+        k_eff = np.full(rounds, float(k)) if k_eff is None \
+            else np.asarray(k_eff, dtype=np.float64)[:rounds]
+        mean_true = payloads.mean(axis=1)
+        out: Dict[str, Any] = {"rounds": rounds}
+
+        if "obs_q" in observations:                  # digital: per client
+            q = np.asarray(observations["obs_q"], dtype=np.float64)[:rounds]
+            # unscheduled slots radiate nothing (masked to exactly 0) —
+            # average over the k_eff clients that actually transmitted,
+            # and score the victim only on rounds its slot was live (slot
+            # occupancy is observable in a TDMA schedule). q == 0 is an
+            # exact liveness sentinel: the 2^b−1-level dither grid spans
+            # [−clip, +clip] with an even number of points, so a LIVE slot
+            # can never quantize to exactly 0.0.
+            est_mean = q.sum(axis=1) / np.maximum(k_eff, 1.0)
+            live = q[:, self.victim] != 0.0
+            err_v = q[live, self.victim] - payloads[live, self.victim]
+            out["victim_rmse"] = float(np.sqrt(np.mean(err_v ** 2))) \
+                if live.any() else float("inf")
+            out["per_client_exposed"] = True
+        elif "obs_y" in observations:                # OTA: noisy sum only
+            y = np.asarray(observations["obs_y"], dtype=np.float64)[:rounds]
+            active = c > 0
+            est_mean = np.where(active, y / (k_eff * np.where(active, c, 1.0)),
+                                0.0)
+            # the victim is hidden in the superposition — best guess is the
+            # (noisy) mean, so per-client exposure degenerates to crowd noise
+            err_v = est_mean - payloads[:, self.victim]
+            out["victim_rmse"] = float(np.sqrt(np.mean(err_v[active] ** 2))) \
+                if active.any() else float("inf")
+            out["per_client_exposed"] = False
+        else:
+            raise ValueError(f"no usable observation stream in "
+                             f"{sorted(observations)} (want obs_y or obs_q)")
+
+        err_m = est_mean - mean_true
+        out["mean_rmse"] = float(np.sqrt(np.mean(err_m ** 2)))
+        out["mean_corr"] = float(np.corrcoef(est_mean, mean_true)[0, 1]) \
+            if rounds > 1 and np.std(est_mean) > 0 and np.std(mean_true) > 0 \
+            else 0.0
+        out["estimates"] = est_mean
+        return out
+
+
+# ---------------------------------------------------------------------------
+# DLG-style gradient inversion (the FO / digital threat model)
+# ---------------------------------------------------------------------------
+
+@register("dlg")
+@dataclass(frozen=True)
+class GradientInversion(Attack):
+    """Iterative gradient matching: recover the victim's tokens from an
+    observed gradient.
+
+    A dummy continuous input is optimized with Adam until the gradient it
+    induces through the model matches the observation (`steps` fixed
+    iterations under one `lax.scan` — the whole attack is a single jitted
+    program, deterministic at fixed `seed`). Two search spaces:
+
+      space="embed" (default)  dummy input embeddings X [b, S, D], cosine
+        gradient matching [Geiping et al. 2020], tokens read back by
+        nearest-embedding-row snap — the stronger variant on LMs;
+      space="token"  dummy soft-token logits D [b, S, V], the soft input is
+        softmax(D) @ W_embed and tokens are the final argmax — the
+        original DLG [Zhu et al. 2019] parameterization.
+
+    Targets and loss mask are assumed known (the iDLG simplification).
+    """
+    steps: int = 600
+    lr: float = 0.02
+    seed: int = 0
+    space: str = "embed"        # embed | token
+    objective: str = "cosine"   # cosine | l2
+
+    def run(self, model_cfg, params: PyTree, g_star: jnp.ndarray,
+            targets: np.ndarray, mask: np.ndarray,
+            true_tokens: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Invert a flat observed gradient for one client's [b, S] batch."""
+        if model_cfg.family != "dense":
+            raise NotImplementedError(
+                "gradient inversion drives the dense-transformer "
+                f"embedding path; got family={model_cfg.family!r}")
+        if self.space not in ("embed", "token"):
+            raise ValueError(f"unknown search space: {self.space!r}")
+        from repro.models import transformer as tf
+        targets = jnp.asarray(targets)
+        lmask = jnp.asarray(mask)
+        b, s = targets.shape
+        v = model_cfg.vocab_size
+        g_star = jnp.asarray(g_star, jnp.float32)
+        w_embed = params["embed"]["w"].astype(jnp.float32)
+
+        def induced_gradient(x):
+            def victim_loss(p):
+                nll = tf.token_nll(p, model_cfg, tokens=None,
+                                   targets=targets, mask=lmask,
+                                   inputs_embeds=x.astype(
+                                       p["embed"]["w"].dtype))
+                return jnp.mean(nll)
+
+            g = jax.grad(victim_loss)(params)
+            return ravel_pytree(jax.tree_util.tree_map(
+                lambda t: t.astype(jnp.float32), g))[0]
+
+        def match_loss(dummy):
+            x = jax.nn.softmax(dummy, axis=-1) @ w_embed \
+                if self.space == "token" else dummy
+            g = induced_gradient(x)
+            if self.objective == "l2":
+                diff = g - g_star
+                return jnp.sum(diff * diff)
+            cos = jnp.sum(g * g_star) / (
+                jnp.linalg.norm(g) * jnp.linalg.norm(g_star) + 1e-12)
+            return 1.0 - cos
+
+        def read_tokens(dummy):
+            if self.space == "token":
+                return jnp.argmax(dummy, axis=-1)
+            # nearest embedding row by cosine similarity
+            xn = dummy / (jnp.linalg.norm(dummy, axis=-1,
+                                          keepdims=True) + 1e-12)
+            wn = w_embed / (jnp.linalg.norm(w_embed, axis=-1,
+                                            keepdims=True) + 1e-12)
+            return jnp.argmax(xn @ wn.T, axis=-1)
+
+        opt = fo_opt.Adam(lr=self.lr)
+        dim = v if self.space == "token" else model_cfg.d_model
+
+        @jax.jit
+        def attack(key):
+            dummy0 = 0.02 * jax.random.normal(key, (b, s, dim), jnp.float32)
+
+            def step(carry, _):
+                dummy, state = carry
+                val, grad = jax.value_and_grad(match_loss)(dummy)
+                dummy, state = opt.update(dummy, grad, state)
+                return (dummy, state), val
+
+            (dummy, _), residuals = jax.lax.scan(
+                step, (dummy0, opt.init(dummy0)), None, length=self.steps)
+            return read_tokens(dummy), residuals
+
+        tokens_hat, residuals = attack(jax.random.key(self.seed))
+        out: Dict[str, Any] = {
+            "tokens": np.asarray(tokens_hat),
+            "residuals": np.asarray(residuals),
+            "final_residual": float(residuals[-1]),
+        }
+        if true_tokens is not None:
+            true_tokens = np.asarray(true_tokens)
+            out["token_accuracy"] = float(
+                np.mean(np.asarray(tokens_hat) == true_tokens))
+            out["chance_accuracy"] = 1.0 / v
+        return out

@@ -1,0 +1,265 @@
+"""Empirical DP audit: a Clopper–Pearson ε̂ lower bound per run.
+
+The analytic accountant (core/dp.py) *prices* each round from Lemma 1 /
+Eq. 16 and promises (ε, δ)-DP; this module *measures* it. The audit plays
+the canonical membership game against the mechanism exactly as executed:
+
+  1. a canary client either transmits the worst-case payload the clip
+     admits (`Transport.canary_payload`: ±γ for analog, a ±1 ballot for
+     sign) — canary IN — or stays silent — canary OUT;
+  2. both arms of each paired trace go through the *actual* observation
+     path (the transport's own `observe()` — the same jit code the
+     engines' capture runs, same key ⇒ coupled noise) under the run's
+     realized power schedule c(t), σ(t), N0 — so channels, power-control
+     schemes, and user-registered mechanisms are audited through what
+     they actually radiate, not through an idealized Gaussian;
+  3. the strongest adversary allowed by the threat model — it knows the
+     schedule — aggregates the per-round log-likelihood ratios over the
+     whole horizon into one test statistic per trial;
+  4. acceptance rates over `trials` paired traces become exact
+     Clopper–Pearson upper confidence bounds on the FPR/FNR, and
+
+        ε̂ = max_τ  max( log((1 − δ − β̄(τ)) / ᾱ(τ)),
+                         log((1 − δ − ᾱ(τ)) / β̄(τ)) )
+
+     (Kairouz et al.'s DP hypothesis-testing region, thresholds
+     Bonferroni-corrected) is a valid ε lower bound at the audit
+     confidence.
+
+The subsystem's contract — asserted per transport × channel × scheme in
+tests/test_privacy.py — is ε̂ ≤ `dp.epsilon_for_budget(spent, δ)`: the
+empirical leak never exceeds what the accountant charged. The audit shifts
+the observation by c·canary while the accountant prices √2·c·γ per round,
+so a healthy mechanism passes with margin; a broken schedule (noise
+under-provisioned, cost mis-priced) fails loudly.
+
+Pure numpy host-side statistics + one jitted mechanism simulation; no
+scipy (Clopper–Pearson via bisection on the exact binomial log-CDF).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp as dp_mod
+
+# ---------------------------------------------------------------------------
+# Exact binomial tails (no scipy)
+# ---------------------------------------------------------------------------
+
+
+def _log_comb(n: int, k: int) -> np.ndarray:
+    """[k+1] log C(n, i) for i = 0..k — one vectorized log-factorial table
+    (scipy is not a declared dependency)."""
+    logfact = np.concatenate(
+        ([0.0], np.cumsum(np.log(np.arange(1, n + 1, dtype=np.float64)))))
+    i = np.arange(k + 1)
+    return logfact[n] - logfact[i] - logfact[n - i]
+
+
+def binom_logcdf(k: int, n: int, p: float) -> float:
+    """log P[Bin(n, p) ≤ k], exact via log-pmf + logsumexp."""
+    if k >= n or p <= 0.0:
+        return 0.0
+    if p >= 1.0:
+        return -math.inf
+    i = np.arange(k + 1, dtype=np.float64)
+    logpmf = _log_comb(n, k) + i * math.log(p) + (n - i) * math.log1p(-p)
+    m = logpmf.max()
+    return float(m + np.log(np.sum(np.exp(logpmf - m))))
+
+
+def clopper_pearson_upper(k: int, n: int, confidence: float = 0.95) -> float:
+    """Exact upper confidence bound on a binomial proportion: the largest p
+    still consistent with observing ≤ k successes in n trials."""
+    if n <= 0:
+        return 1.0
+    if k >= n:
+        return 1.0
+    alpha = 1.0 - confidence
+    log_alpha = math.log(alpha)
+    # only log(p)/log1p(-p) depend on p — hoist everything else out of
+    # the bisection (the audit takes two bounds per threshold per cell)
+    logcomb = _log_comb(n, k)
+    i = np.arange(k + 1, dtype=np.float64)
+
+    def logcdf(p: float) -> float:
+        logpmf = logcomb + i * math.log(p) + (n - i) * math.log1p(-p)
+        m = logpmf.max()
+        return float(m + np.log(np.sum(np.exp(logpmf - m))))
+
+    lo, hi = k / n, 1.0
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if logcdf(mid) > log_alpha:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+# ---------------------------------------------------------------------------
+# The audit
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AuditResult:
+    """One audited run: the empirical bound vs the analytic ceiling."""
+    eps_hat: float              # Clopper–Pearson empirical lower bound
+    eps_analytic: float         # dp.epsilon_for_budget(spent, delta)
+    spent: float                # Σ_t accountant cost over audited rounds
+    delta: float
+    trials: int
+    confidence: float
+    rounds: int                 # audited rounds (c > 0 only carry signal)
+    fpr: float = 0.0            # at the best threshold
+    fnr: float = 0.0
+    threshold: float = 0.0
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def dominated(self) -> bool:
+        """The subsystem's contract: empirical never exceeds analytic."""
+        return self.eps_hat <= self.eps_analytic + 1e-9
+
+    def to_dict(self) -> dict:
+        return {"eps_hat": self.eps_hat, "eps_analytic": self.eps_analytic,
+                "spent": self.spent, "delta": self.delta,
+                "trials": self.trials, "confidence": self.confidence,
+                "rounds": self.rounds, "fpr": self.fpr, "fnr": self.fnr,
+                "dominated": self.dominated, **self.meta}
+
+
+def _eps_from_rates(fp: int, fn: int, n: int, delta: float,
+                    confidence: float) -> tuple:
+    """(ε̂, ᾱ, β̄) at one threshold from raw FP/FN counts."""
+    a_hi = clopper_pearson_upper(fp, n, confidence)
+    b_hi = clopper_pearson_upper(fn, n, confidence)
+    best = 0.0
+    for num, den in ((1.0 - delta - b_hi, a_hi),
+                     (1.0 - delta - a_hi, b_hi)):
+        if num > 0.0 and den > 0.0 and num > den:
+            best = max(best, math.log(num / den))
+    return best, a_hi, b_hi
+
+
+def paired_trace_statistics(transport, schedule, canary: float, *,
+                            rounds: int, n_clients: int, trials: int,
+                            seed: int = 0xA0D17) -> tuple:
+    """(stat_in [trials], stat_out [trials]) — composed LLR statistics from
+    paired canary-in/canary-out traces through the transport's OWN
+    observation model (`Transport.observe` — the same jit code the
+    engines' capture runs, so the audited mechanism is the transmitted
+    one, not an idealized stand-in; a user-registered DP transport is
+    audited through whatever its observe() actually radiates).
+
+    One jitted vmap over (trials × rounds): each (i, t) cell draws the
+    mechanism noise from fold_in(fold_in(key, i), t) and observes both
+    arms with the SAME key (paired traces — coupled noise, exact marginal
+    distributions). Rounds with c = 0 are silent and carry no signal.
+
+    The decision statistic is the schedule-aware Gaussian LLR — optimal
+    for the OTA superposition; for any other observe() it is merely *a*
+    statistic, and the Clopper–Pearson construction keeps ε̂ a valid
+    lower bound regardless (only power, not validity, depends on it).
+    """
+    if "y" not in transport.observation_spec(n_clients):
+        raise ValueError(
+            f"transport {transport.name!r} exposes no scalar 'y' "
+            "observation stream — the paired-trace audit needs one "
+            "(override Transport.observe/observation_spec)")
+    c = jnp.asarray(np.asarray(schedule.c[:rounds]), jnp.float32)
+    sigma = jnp.asarray(np.asarray(schedule.sigma[:rounds]), jnp.float32)
+    n0 = jnp.float32(schedule.n0)
+    k = n_clients
+    p_in = jnp.zeros((k,), jnp.float32).at[0].set(jnp.float32(canary))
+    p_out = jnp.zeros((k,), jnp.float32)
+    ones = jnp.ones((k,), jnp.float32)
+    # known-schedule LLR weights: shift s_t = c_t·canary, noise var m_t²
+    s = c * jnp.float32(canary)
+    m2 = c * c * jnp.sum(sigma * sigma, axis=1) + n0
+    active = (c > 0).astype(jnp.float32)
+
+    @jax.jit
+    def stats(base):
+        def per_round(key_t, c_t, sig_t, s_t, m2_t, act_t):
+            ctl = {"c": c_t, "sigma": sig_t, "n0": n0, "mask": ones}
+            y_in = transport.observe(p_in, ctl, key_t)["y"]
+            y_out = transport.observe(p_out, ctl, key_t)["y"]
+            llr = lambda y: s_t * (y - 0.5 * s_t) / m2_t
+            return act_t * llr(y_in), act_t * llr(y_out)
+
+        def per_trial(i):
+            keys = jax.vmap(
+                lambda t: jax.random.fold_in(jax.random.fold_in(base, i), t)
+            )(jnp.arange(c.shape[0]))
+            li, lo = jax.vmap(per_round)(keys, c, sigma, s, m2, active)
+            return jnp.sum(li), jnp.sum(lo)
+
+        return jax.vmap(per_trial)(jnp.arange(trials))
+
+    stat_in, stat_out = stats(jax.random.key(seed))
+    return np.asarray(stat_in, np.float64), np.asarray(stat_out, np.float64)
+
+
+def audit_transport(transport, schedule, pz, *, rounds: Optional[int] = None,
+                    trials: int = 2000, confidence: float = 0.95,
+                    thresholds: int = 9, seed: int = 0xA0D17
+                    ) -> AuditResult:
+    """Audit one (transport, realized schedule) pair; ε̂ vs the analytic ε.
+
+    `rounds` limits the audit to the horizon actually executed (a privacy
+    stop means later rounds never transmitted — they cost nothing and leak
+    nothing). The threshold grid is Bonferroni-corrected, so ε̂ stays a
+    valid lower bound at `confidence` despite the post-hoc max.
+    """
+    rounds = int(schedule.c.shape[0] if rounds is None else rounds)
+    canary = transport.canary_payload(pz)
+    delta = pz.dp.delta
+    charged = transport.charges_privacy(schedule, pz)
+    spent = float(np.sum(transport.round_dp_costs(schedule, 0, rounds, pz))) \
+        if charged else 0.0
+    if canary is None:
+        # no DP mechanism → nothing to audit; ε̂ = ∞ is the honest verdict
+        # for an uplink that exposes payloads exactly (digital/fo)
+        return AuditResult(eps_hat=math.inf, eps_analytic=math.inf,
+                           spent=spent, delta=delta, trials=0,
+                           confidence=confidence, rounds=rounds,
+                           meta={"transport": transport.name,
+                                 "auditable": False})
+
+    stat_in, stat_out = paired_trace_statistics(
+        transport, schedule, canary, rounds=rounds,
+        n_clients=pz.n_clients, trials=trials, seed=seed)
+
+    # threshold grid: Bayes point 0 plus pooled quantiles, Bonferroni over
+    # the grid so the max stays a valid bound. TWO Clopper–Pearson bounds
+    # (FPR and FNR) are taken jointly per threshold, so the error budget
+    # splits over 2·|grid| events.
+    pooled = np.concatenate([stat_in, stat_out])
+    grid = np.unique(np.concatenate(
+        [[0.0], np.quantile(pooled, np.linspace(0.05, 0.95, thresholds))]))
+    conf_each = 1.0 - (1.0 - confidence) / (2 * len(grid))
+
+    best = (0.0, 0.0, 0.0, 0.0)     # (eps, tau, fpr, fnr)
+    n = trials
+    for tau in grid:
+        fp = int(np.sum(stat_out > tau))     # out, flagged in
+        fn = int(np.sum(stat_in <= tau))     # in, flagged out
+        eps, a_hi, b_hi = _eps_from_rates(fp, fn, n, delta, conf_each)
+        if eps > best[0]:
+            best = (eps, float(tau), a_hi, b_hi)
+
+    return AuditResult(
+        eps_hat=best[0],
+        eps_analytic=dp_mod.epsilon_for_budget(spent, delta),
+        spent=spent, delta=delta, trials=trials, confidence=confidence,
+        rounds=rounds, fpr=best[2], fnr=best[3], threshold=best[1],
+        meta={"transport": transport.name, "auditable": True,
+              "canary": canary})

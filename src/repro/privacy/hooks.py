@@ -1,0 +1,67 @@
+"""AttackHook: collect the adversary's observations from a live run.
+
+Rides the existing `RoundHook` protocol (core/fedsim.py), so capture works
+identically under both engines: the step emits `obs_*` metrics (the
+Adversary's prefixed observation dict), the driver's flush path delivers
+them per round in order, and this hook stacks them host-side alongside the
+attack ground truth (the true per-client payloads `p_clients` and the
+surviving-count `k_eff` the decode divided by). After `Experiment.run()`
+the attacks (repro.privacy.attacks) and the benchmark consume
+`hook.observations()` / `hook.payloads()` directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.fedsim import RoundHook
+from repro.privacy.adversary import OBS_PREFIX
+
+
+class AttackHook(RoundHook):
+    """Per-round observation capture for post-hoc attacks and audits.
+
+    `max_rounds` caps how many rounds are retained host-side — the OTA
+    observations are scalars, but the FO uplink's obs_grad0 is a full [d]
+    gradient per round, so an uncapped long run would hoard rounds × d
+    floats for attacks that (today) only consume the first rounds. None
+    keeps everything.
+    """
+
+    def __init__(self, prefix: str = OBS_PREFIX,
+                 max_rounds: Optional[int] = None):
+        self.prefix = prefix
+        self.max_rounds = max_rounds
+        self.rounds: List[int] = []
+        self._obs: Dict[str, List[np.ndarray]] = {}
+        self._payloads: List[np.ndarray] = []
+        self._k_eff: List[float] = []
+
+    def on_round(self, t: int, metrics: Dict[str, np.ndarray]) -> None:
+        if self.max_rounds is not None and len(self.rounds) >= \
+                self.max_rounds:
+            return
+        got = {k: v for k, v in metrics.items() if k.startswith(self.prefix)}
+        if not got:
+            return
+        self.rounds.append(t)
+        for k, v in got.items():
+            self._obs.setdefault(k, []).append(np.asarray(v))
+        if "p_clients" in metrics:
+            self._payloads.append(np.asarray(metrics["p_clients"]))
+        if "k_eff" in metrics:
+            self._k_eff.append(float(metrics["k_eff"]))
+
+    # -- the attacker's transcript ---------------------------------------
+    def observations(self) -> Dict[str, np.ndarray]:
+        """Stacked [T, ...] observation streams, keyed as captured."""
+        return {k: np.stack(v) for k, v in self._obs.items()}
+
+    def payloads(self) -> Optional[np.ndarray]:
+        """[T, K] true per-client projections (attack ground truth)."""
+        return np.stack(self._payloads) if self._payloads else None
+
+    def k_eff(self) -> Optional[np.ndarray]:
+        """[T] surviving-client counts the decode inverted by."""
+        return np.asarray(self._k_eff) if self._k_eff else None

@@ -361,3 +361,66 @@ def test_hypothesis_outage_rate_tracks_cdf():
         assert (trace.participation.sum(axis=1) >= 1).all()
 
     run()
+
+
+# ---------------------------------------------------------------------------
+# Doppler-parameterized AR(1): physical mobility via Jakes' J0(2π f_D τ)
+# ---------------------------------------------------------------------------
+
+def test_bessel_j0_reference_points():
+    # J0(0) = 1 and the first zero at x ≈ 2.404826 (A&S |err| < 5e-8)
+    assert ch.bessel_j0(0.0) == pytest.approx(1.0, abs=1e-7)
+    assert ch.bessel_j0(2.404826) == pytest.approx(0.0, abs=1e-5)
+    assert ch.bessel_j0(1.0) == pytest.approx(0.7651976866, abs=1e-6)
+    assert ch.bessel_j0(5.0) == pytest.approx(-0.1775967713, abs=1e-6)
+
+
+def test_bessel_j0_against_scipy():
+    sp = pytest.importorskip("scipy.special")
+    for x in np.linspace(0.0, 20.0, 101):
+        assert ch.bessel_j0(x) == pytest.approx(float(sp.j0(x)), abs=2e-6)
+
+
+def test_jakes_rho_physical_regimes():
+    # pedestrian: f_D·τ ≪ 1 → nearly fully correlated fading
+    assert ch.jakes_rho(5.0, 1e-3) > 0.99
+    # vehicular at long rounds: correlation decays
+    assert ch.jakes_rho(100.0, 1e-3) < ch.jakes_rho(10.0, 1e-3)
+    # past the first J0 zero the AR(1) surrogate clamps to i.i.d.
+    assert ch.jakes_rho(500.0, 1e-3) == 0.0
+    # always a valid AR(1) correlation
+    for fd in (0.0, 1.0, 50.0, 1e4):
+        rho = ch.jakes_rho(fd, 1e-3)
+        assert 0.0 <= rho < 1.0
+        ch.AR1Correlated(rho=rho).realize(0, 4, 2)   # accepted by the model
+    with pytest.raises(ValueError):
+        ch.jakes_rho(-1.0, 1e-3)
+    with pytest.raises(ValueError):
+        ch.jakes_rho(10.0, 0.0)
+
+
+def test_doppler_config_maps_to_rho_and_is_bitwise_neutral_unset():
+    # doppler set: from_config derives ρ via Jakes, ignoring ar1_rho
+    cc = _cc(model="ar1", ar1_rho=0.3, doppler_hz=10.0,
+             round_duration_s=1e-3)
+    model = ch.from_config(cc)
+    assert isinstance(model, ch.AR1Correlated)
+    assert model.rho == ch.jakes_rho(10.0, 1e-3)
+    assert model.rho != 0.3
+    # doppler unset: the raw-ρ path is bitwise what it always was
+    cc0 = _cc(model="ar1", ar1_rho=0.3)
+    m0 = ch.from_config(cc0)
+    assert m0 == ch.AR1Correlated(rho=0.3)
+    np.testing.assert_array_equal(
+        m0.realize(7, 16, 3).h, ch.AR1Correlated(rho=0.3).realize(7, 16, 3).h)
+
+
+def test_doppler_rejected_on_non_ar1_models():
+    """doppler_hz on a model that cannot consume it is an error, not a
+    silently-ignored knob (same convention as the wrapper guard)."""
+    for model in (None, "rayleigh", "rician", "static"):
+        with pytest.raises(ValueError, match="doppler_hz"):
+            ch.from_config(_cc(model=model, doppler_hz=50.0))
+    # ar1 consumes it
+    assert ch.from_config(_cc(model="ar1", doppler_hz=50.0)).rho == \
+        ch.jakes_rho(50.0, 1e-3)

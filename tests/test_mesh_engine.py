@@ -210,3 +210,30 @@ def test_mesh_rejects_fo(tiny_model, make_pz, make_pipeline, mesh8):
     with pytest.raises(ValueError, match="FO baseline"):
         fedsim.run(tiny_model, pz, make_pipeline(n_clients=8), rounds=4,
                    engine="scan", mesh=mesh8)
+
+
+# ---------------------------------------------------------------------------
+# Privacy capture on the mesh (repro.privacy)
+# ---------------------------------------------------------------------------
+
+def test_mesh_observation_capture_bitwise(tiny_model, make_pz,
+                                          make_pipeline, mesh8):
+    """Eavesdropper capture under shard_map: the observation is computed
+    from the psum-gathered [K] payload and the replicated control block,
+    so it must be bitwise what the single-device engines record — and
+    capture must stay passive on the mesh too."""
+    from repro import privacy as pv
+    pz = make_pz(scheme="solution", n_perturb=1, rounds=6, n_clients=8)
+    pipe = lambda: make_pipeline(vocab=tiny_model.vocab_size, n_clients=8,
+                                 batch=2, seq=16)
+    h_ref, h_mesh = pv.AttackHook(), pv.AttackHook()
+    ref = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                     chunk_rounds=4, adversary=pv.Adversary(),
+                     hooks=[h_ref])
+    res = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                     chunk_rounds=4, mesh=mesh8, adversary=pv.Adversary(),
+                     hooks=[h_mesh])
+    assert res.losses == ref.losses                  # capture stays passive
+    np.testing.assert_array_equal(h_mesh.observations()["obs_y"],
+                                  h_ref.observations()["obs_y"])
+    np.testing.assert_array_equal(h_mesh.payloads(), h_ref.payloads())

@@ -76,6 +76,14 @@ def main() -> int:
         print(f"NEW failures not in the baseline ({len(new)}):")
         for t in new:
             print(f"  [NEW]   {t}")
+        # per-module roll-up: a whole new failing module (collection error,
+        # missing dep) reads as one line instead of a wall of ids
+        by_module: dict = {}
+        for t in new:
+            by_module[t.split("::", 1)[0]] = \
+                by_module.get(t.split("::", 1)[0], 0) + 1
+        print("by module: " + ", ".join(
+            f"{m} ({n})" for m, n in sorted(by_module.items())))
         print("\ngate: FAIL (regressions above)")
         return 1
     print(f"\ngate: PASS ({len(failing)} failing, all within the "
