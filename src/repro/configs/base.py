@@ -269,6 +269,11 @@ class PairZeroConfig:
     power: PowerControlConfig = field(default_factory=PowerControlConfig)
     transport: Optional[TransportConfig] = None
     seed: int = 0
+    # Pallas-fused dual forward: regenerate z inside the matmul/gather
+    # consumers (kernels/perturbed_matmul.py) instead of materializing
+    # θ±μz. Default off — the unfused trajectory is bitwise unchanged.
+    # Supported for the dense/moe families; see docs/kernels.md.
+    fused_perturbation: bool = False
 
 
 # ---------------------------------------------------------------------------

@@ -123,8 +123,18 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
     lr = pz.zo.lr
     gamma = pz.zo.clip_gamma
     n_perturb = pz.zo.n_perturb
-    mode = "chained" if pz.zo.dual_mode in ("chained", "sequential") \
-        else "fresh"
+    if pz.fused_perturbation:
+        # fused dual forward: z regenerated inside the layer kernels
+        # (zo.tag_perturbed) — wired for the transformer families only
+        if model_cfg.family not in ("dense", "moe"):
+            raise ValueError(
+                f"fused_perturbation supports the dense/moe families; "
+                f"{model_cfg.name!r} is family {model_cfg.family!r} "
+                "(its layer stack has consumers without a fused path)")
+        mode = "fused"
+    else:
+        mode = "chained" if pz.zo.dual_mode in ("chained", "sequential") \
+            else "fresh"
 
     def round_body(params: PyTree, batch: Dict, ctl: Dict,
                    client_ids: Optional[jnp.ndarray] = None,

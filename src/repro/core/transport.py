@@ -250,10 +250,12 @@ def register(name: str):
 
 
 def available() -> tuple:
+    """Sorted names of every registered transport mechanism."""
     return tuple(sorted(_REGISTRY))
 
 
 def get(name: str) -> Type[Transport]:
+    """Look up a registered Transport class by mechanism name."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -291,6 +293,7 @@ def from_strings(variant: str, scheme: str, pz=None) -> Transport:
 
 
 def deprecated_strings(variant: str, scheme: str, where: str) -> None:
+    """Emit the one-release DeprecationWarning for string dispatch."""
     warnings.warn(
         f"{where}: string-dispatched variant={variant!r}/scheme={scheme!r} "
         "is deprecated; pass a TransportConfig (configs.base) or a Transport "
@@ -314,20 +317,22 @@ class AnalogOTA(Transport):
 
     @classmethod
     def from_config(cls, tc, pz) -> "AnalogOTA":
+        """Build from a TransportConfig (only the scheme carries over)."""
         return cls(scheme=tc.scheme)
 
     def aggregate(self, p, ctl, key):
+        """Recover p_hat from the superposed noisy uplink (Eq. 4 decode)."""
         if self.scheme == "perfect":
             return ota.perfect_analog(p, ctl["mask"])
         return ota.analog_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
                               ctl["mask"], ctl.get("g"))[0]
 
     def observe(self, p, ctl, key):
-        # the eavesdropper hears the same electromagnetic superposition the
-        # server front-end receives: one noisy scalar per round (Eq. 4),
-        # bit-identical to the decode path's input (same key, same draws).
-        # Noise-free "perfect" rounds superpose without channel/artificial
-        # noise — the observation is the bare masked sum.
+        """What an eavesdropper hears: the same electromagnetic
+        superposition the server front-end receives — one noisy scalar per
+        round (Eq. 4), bit-identical to the decode path's input (same key,
+        same draws). Noise-free "perfect" rounds superpose without
+        channel/artificial noise — the observation is the bare masked sum."""
         if self.scheme == "perfect":
             w = ctl["mask"].astype(p.dtype)
             return {"y": jnp.sum(w * p)}
@@ -336,9 +341,12 @@ class AnalogOTA(Transport):
         return {"y": y}
 
     def observation_spec(self, n_clients):
+        """Abstract shape of one round's observation: a single scalar."""
         return {"y": jax.ShapeDtypeStruct((), jnp.float32)}
 
     def make_schedule(self, trace, pz):
+        """Solve the horizon's power control (Theorem 3) on the trace
+        magnitudes for this mechanism's scheme."""
         from repro.core import power_control as pc
         h = trace_magnitudes(trace)
         if self.scheme == "perfect":
@@ -358,18 +366,22 @@ class AnalogOTA(Transport):
                          f"(want one of {OTA_SCHEMES})")
 
     def charges_privacy(self, schedule, pz) -> bool:
+        """Noisy OTA rounds spend (eps, delta); "perfect" rounds do not."""
         return bool(pz.dp.enabled and schedule.scheme != "perfect")
 
     def round_dp_costs(self, schedule, t0, t1, pz):
+        """Per-round DP spend over [t0, t1) with sensitivity gamma."""
         return ota_dp_costs(schedule, t0, t1, pz.zo.clip_gamma)
 
     def canary_payload(self, pz):
-        # projections are clipped to ±γ (Assumption 3) — the canary
-        # transmits the clip boundary
+        """Worst-case payload for the empirical audit: projections are
+        clipped to +/-gamma (Assumption 3), so the canary transmits the
+        clip boundary."""
         return None if self.scheme == "perfect" else float(pz.zo.clip_gamma)
 
     def payload_bits(self, pz, d):
-        return 16 * pz.zo.n_perturb          # fp16 scalar per perturbation
+        """Uplink bits/round/client: one fp16 scalar per perturbation."""
+        return 16 * pz.zo.n_perturb
 
 
 @register("sign")
@@ -381,21 +393,26 @@ class SignOTA(AnalogOTA):
     scheme: str = "solution"
 
     def aggregate(self, p, ctl, key):
+        """Recover the majority vote from the superposed sign ballots."""
         if self.scheme == "perfect":
             return ota.perfect_sign(p, ctl["mask"])
         return ota.sign_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
                             ctl["mask"], ctl.get("g"))[0]
 
     def observe(self, p, ctl, key):
-        # the radiated payload is the ±1 ballot, so the listener hears the
-        # superposed noisy vote count — individual sign bits only superpose,
-        # they are never separable over the air (unlike digital slots).
+        """The radiated payload is the +/-1 ballot, so the listener hears
+        the superposed noisy vote count — individual sign bits only
+        superpose, they are never separable over the air (unlike digital
+        slots)."""
         return super().observe(jnp.sign(p), ctl, key)
 
     def transmitted(self, p):
+        """The on-air payload: the sign of the clipped projection."""
         return jnp.sign(p)
 
     def make_schedule(self, trace, pz):
+        """Solve the sign-variant power control (Theorem 4) on the trace
+        magnitudes for this mechanism's scheme."""
         from repro.core import power_control as pc
         h = trace_magnitudes(trace)
         if self.scheme == "perfect":
@@ -416,13 +433,16 @@ class SignOTA(AnalogOTA):
                          f"(want one of {OTA_SCHEMES})")
 
     def round_dp_costs(self, schedule, t0, t1, pz):
+        """Per-round DP spend over [t0, t1); sign sensitivity is 1."""
         return ota_dp_costs(schedule, t0, t1, 1.0)
 
     def canary_payload(self, pz):
-        return None if self.scheme == "perfect" else 1.0   # a ±1 ballot
+        """Worst-case payload for the empirical audit: a +/-1 ballot."""
+        return None if self.scheme == "perfect" else 1.0
 
     def payload_bits(self, pz, d):
-        return 1 * pz.zo.n_perturb           # one sign per perturbation
+        """Uplink bits/round/client: one sign bit per perturbation."""
+        return 1 * pz.zo.n_perturb
 
 
 @register("perfect")
@@ -434,6 +454,7 @@ class PerfectUplink(AnalogOTA):
 
     @classmethod
     def from_config(cls, tc, pz) -> "PerfectUplink":
+        """Build from a TransportConfig (no tunables; scheme is fixed)."""
         return cls()
 
 
@@ -484,36 +505,41 @@ class DigitalTDMA(Transport):
 
     @classmethod
     def from_config(cls, tc, pz) -> "DigitalTDMA":
+        """Build from a TransportConfig; the quantizer clips at gamma."""
         return cls(quant_bits=tc.quant_bits, clip=float(pz.zo.clip_gamma))
 
     def aggregate(self, p, ctl, key):
-        # straggler-aware TDMA: clients masked out (faults OR deep-fade
-        # outage from the channel trace) yield their slots — the decode
-        # averages only scheduled slots, and the mask-aware bit accounting
-        # never bills an unscheduled payload. Per-slot decode is coherent,
-        # so the OTA CSI phase factor `g` does not distort the scalar.
+        """Straggler-aware TDMA decode: clients masked out (faults OR
+        deep-fade outage from the channel trace) yield their slots — the
+        decode averages only scheduled slots, and the mask-aware bit
+        accounting never bills an unscheduled payload. Per-slot decode is
+        coherent, so the OTA CSI phase factor `g` does not distort the
+        scalar."""
         mask = ctl["mask"].astype(p.dtype)
         q = stochastic_quantize(p, key, bits=self.quant_bits, clip=self.clip)
         return jnp.sum(mask * q) / jnp.maximum(jnp.sum(mask), 1.0)
 
     def observe(self, p, ctl, key):
-        # orthogonal slots are the privacy failure mode: an eavesdropper
-        # decodes every scheduled client's payload INDIVIDUALLY, exactly as
-        # the base station does (same key ⇒ same dither draw). Unscheduled
-        # slots radiate nothing (masked to 0 in the observation).
+        """Orthogonal slots are the privacy failure mode: an eavesdropper
+        decodes every scheduled client's payload INDIVIDUALLY, exactly as
+        the base station does (same key => same dither draw). Unscheduled
+        slots radiate nothing (masked to 0 in the observation)."""
         mask = ctl["mask"].astype(p.dtype)
         q = stochastic_quantize(p, key, bits=self.quant_bits, clip=self.clip)
         return {"q": mask * q}
 
     def observation_spec(self, n_clients):
+        """Abstract observation shape: one decoded scalar per client."""
         return {"q": jax.ShapeDtypeStruct((n_clients,), jnp.float32)}
 
     def make_schedule(self, trace, pz):
+        """No power control to solve — TDMA slots run at scheduled SNR."""
         return _trivial_schedule(trace_magnitudes(trace), scheme="digital")
 
     def payload_bits(self, pz, d):
-        # one combined d-dimensional update per round, b bits per coordinate
-        # (perturbation directions sum into a single uploaded vector)
+        """Uplink bits/round/client: one combined d-dimensional update,
+        b bits per coordinate (perturbation directions sum into a single
+        uploaded vector)."""
         return self.quant_bits * d
 
 
@@ -540,7 +566,8 @@ class SmartDigital(DigitalTDMA):
     """
 
     def payload_bits(self, pz, d):
-        # one quantized scalar per perturbation direction — d drops out
+        """Uplink bits/round/client: one quantized scalar per perturbation
+        direction — d drops out (the shared-seed trick)."""
         return self.quant_bits * pz.zo.n_perturb
 
 
@@ -557,11 +584,14 @@ class FirstOrder(Transport):
 
     @classmethod
     def from_config(cls, tc, pz) -> "FirstOrder":
+        """Build from a TransportConfig (no tunables)."""
         return cls()
 
     def aggregate(self, p, ctl, key):  # pragma: no cover - fo has no p_k
+        """FO has no scalar uplink — gradients average inside the step."""
         raise NotImplementedError("the FO baseline averages gradients in the "
                                   "step itself; it has no scalar uplink")
 
     def payload_bits(self, pz, d):
-        return 16 * d                        # fp16 gradient per round
+        """Uplink bits/round/client: the full fp16 gradient."""
+        return 16 * d

@@ -74,6 +74,44 @@ def perturb(params: PyTree, seed, scale, impl=None) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def tag_perturbed(params: PyTree, seed, scale) -> PyTree:
+    """Tag every leaf as lazily perturbed: leaf → PerturbedParam(leaf, …).
+
+    The fused counterpart of `perturb`: instead of materializing
+    params + scale · z, each leaf carries (seed, offset, scale) metadata and
+    the consumers in models/layers.py regenerate z inside their own
+    matmul/gather (kernels.ops.perturbed_matmul / perturbed_gather) or
+    resolve a layer-sized transient. Leaf enumeration and per-leaf streams
+    are identical to `perturb`, so the loss seen through a tagged tree
+    equals the loss at `perturb(params, seed, scale)` up to matmul
+    reassociation (bitwise for the z values themselves).
+
+    Children are broadcast to each leaf's leading dim so scan-stacked
+    leaves slice into valid per-layer tags under `lax.scan` (the slice's
+    `off` continues the whole-leaf counter stream).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for i, leaf in enumerate(leaves):
+        ls = leaf_seed(seed, i)
+        if leaf.ndim == 0:
+            # 0-d leaf: nothing to fuse into — materialize directly
+            out.append(kops.seeded_axpy(leaf.reshape(1), ls, scale,
+                                        impl="xla").reshape(()))
+            continue
+        lead = leaf.shape[0]
+        stride = 1
+        for d in leaf.shape[1:]:
+            stride *= d
+        out.append(kops.PerturbedParam(
+            leaf,
+            jnp.broadcast_to(ls, (lead,)),
+            jnp.arange(lead, dtype=jnp.uint32)
+            * jnp.uint32(stride & 0xFFFFFFFF),
+            jnp.broadcast_to(jnp.asarray(scale, jnp.float32), (lead,))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def draw_z(params: PyTree, seed) -> PyTree:
     """Materialize z(seed) with the same per-leaf streams as `perturb`.
 
@@ -113,6 +151,18 @@ def dual_forward(loss_fn: Callable[[PyTree], jnp.ndarray], params: PyTree,
         loss_plus = loss_fn(perturb(params, seed, mu))
         loss_minus = loss_fn(perturb(params, seed, -mu))
         return loss_plus, loss_minus, params
+    if mode == "fused":
+        # Perturbed weights never materialize tree-wide: consumers
+        # regenerate z from the tags (see tag_perturbed) inside their own
+        # matmul/gather, resolving at most one layer-sized transient.
+        # Both rollouts run under ONE vmap over eps = (+μ, −μ): z depends
+        # only on (seed, off) — never eps — so each leaf's z is generated
+        # once per round and shared by the two rollouts.
+        def one_rollout(eps):
+            return loss_fn(tag_perturbed(params, seed, eps))
+
+        lpm = jax.vmap(one_rollout)(jnp.asarray([mu, -mu], jnp.float32))
+        return lpm[0], lpm[1], params
     raise ValueError(f"unknown dual mode: {mode}")
 
 
@@ -132,7 +182,7 @@ def apply_update(params_at: PyTree, seed, p_hat: jnp.ndarray,
     """
     if mode == "chained":
         return perturb(params_at, seed, mu - lr * p_hat)
-    if mode == "fresh":
+    if mode in ("fresh", "fused"):
         return perturb(params_at, seed, -lr * p_hat)
     raise ValueError(f"unknown dual mode: {mode}")
 

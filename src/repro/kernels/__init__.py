@@ -1,10 +1,29 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
 Kernels (each with a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py):
-  * seeded_axpy     — fused ZO perturb/update with in-VMEM PRNG (the paper's
-                      memory trick made TPU-native)
-  * flash_attention — fused online-softmax attention (causal / window / GQA)
-  * rglru_scan      — RG-LRU first-order linear recurrence
-  * ssd_scan        — Mamba-2 chunked state-space duality
+  * seeded_axpy      — fused ZO perturb/update with in-VMEM PRNG (the paper's
+                       memory trick made TPU-native)
+  * perturbed_matmul — x @ (w + εz(seed)): the fused ZO dual forward; z is
+                       regenerated per weight tile in VMEM, so perturbed
+                       weights never exist in HBM (PairZeroConfig.
+                       fused_perturbation)
+  * flash_attention  — fused online-softmax attention (causal / window / GQA)
+  * rglru_scan       — RG-LRU first-order linear recurrence
+  * ssd_scan         — Mamba-2 chunked state-space duality
+
+Bit-identity contract: the seeded z-stream is a pure function of
+(leaf seed, flat element index). Every implementation — the Pallas Mosaic
+kernel, its CPU interpret mode, the XLA fallback in ref.py, and the fused
+per-tile generation in perturbed_matmul — produces the SAME uint32-counter →
+Box–Muller draws for the same leaf, independent of tiling, sharding, or scan
+slicing. Training trajectories are therefore bitwise portable across
+backends, and a base station broadcasting the round seed fully determines
+every client's perturbation (the premise of the paper's O(1) uplink and of
+the seed-replay attack in repro.privacy).
+
+Adding a kernel: write the Mosaic kernel next to an equal-semantics jnp
+oracle in ref.py, dispatch it from ops.py behind `impl=
+pallas|pallas_interpret|xla`, and test interpret-vs-ref bitwise (see
+docs/kernels.md for the checklist).
 """
 from repro.kernels import ops, ref  # noqa: F401

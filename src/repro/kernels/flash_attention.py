@@ -12,6 +12,12 @@ MXU work (the dominant saving for long-sequence causal training).
 
 Block shapes are multiples of (8, 128) so the MXU sees aligned tiles; head_dim
 is padded by the wrapper in ops.py if needed.
+
+ZO perturbation fusion: attention itself has no weights, so the fused dual
+forward (PairZeroConfig.fused_perturbation) perturbs the QKV/O *projections*
+feeding this kernel via kernels/perturbed_matmul.py — the scores/output math
+here runs unchanged on already-perturbed activations, and no perturbed weight
+tensor is ever materialized for the attention block either.
 """
 from __future__ import annotations
 

@@ -21,8 +21,9 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.perturbed_matmul import perturbed_matmul_pallas
 from repro.kernels.rglru_scan import rglru_scan_pallas
-from repro.kernels.seeded_axpy import seeded_axpy_pallas
+from repro.kernels.seeded_axpy import gaussian_from_counter, seeded_axpy_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 NEG_INF = -1e30
@@ -30,6 +31,180 @@ NEG_INF = -1e30
 
 def _default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# PerturbedParam — lazy w + eps · z(seed)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class PerturbedParam:
+    """A parameter leaf tagged as "perturbed by eps · z(seed) at offset off".
+
+    The fused dual forward (`zo.tag_perturbed`) replaces every leaf of the
+    parameter tree with one of these; consumers in `models/layers.py` then
+    either fuse the perturbation into their matmul/gather (z generated
+    in-kernel, never stored) or `resolve()` a layer-sized transient. Either
+    way no θ-sized perturbed tree ever exists.
+
+    Children (all jax arrays, so the tag survives jit/scan/shard_map):
+      w    — the unperturbed leaf, [lead, ...rest];
+      seed — per-leaf stream seed (`zo.leaf_seed`), broadcast to [lead];
+      off  — base flat offset of each leading-dim slice into the leaf's
+             counter stream: off[l] = l · prod(rest), [lead];
+      eps  — perturbation scale (±μ), broadcast to [lead].
+
+    Every child carries the leaf's leading dim, so `lax.scan` over a
+    scan-stacked tree ([L, ...] leaves) slices a PerturbedParam into valid
+    per-layer PerturbedParams (w [...rest], scalar seed/off/eps) whose
+    counters continue the whole-leaf stream: z values are bitwise identical
+    to perturbing the full leaf with `kernels.seeded_axpy`.
+    """
+
+    def __init__(self, w, seed, off, eps):
+        self.w = w
+        self.seed = seed
+        self.off = off
+        self.eps = eps
+
+    @property
+    def shape(self):
+        """Shape of the underlying (unperturbed) leaf."""
+        return self.w.shape
+
+    @property
+    def dtype(self):
+        """Dtype of the underlying (unperturbed) leaf."""
+        return self.w.dtype
+
+    @property
+    def ndim(self):
+        """Rank of the underlying (unperturbed) leaf."""
+        return self.w.ndim
+
+    def tree_flatten(self):
+        return (self.w, self.seed, self.off, self.eps), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    def __repr__(self):
+        return (f"PerturbedParam(w={self.w.shape}/{self.w.dtype}, "
+                f"seed={self.seed.shape}, off={self.off.shape})")
+
+
+def _scalar(v):
+    """First element of a possibly-broadcast child (post-scan they are 0-d)."""
+    v = jnp.asarray(v)
+    return v.reshape(-1)[0] if v.ndim else v
+
+
+def _flat_iota(shape) -> jnp.ndarray:
+    """uint32 row-major flat index of every element of `shape` (mod 2³²)."""
+    if not shape:
+        return jnp.uint32(0)
+    idx = jnp.zeros(shape, jnp.uint32)
+    stride = 1
+    for k in range(len(shape) - 1, -1, -1):
+        idx = idx + jax.lax.broadcasted_iota(jnp.uint32, shape, k) \
+            * jnp.uint32(stride & 0xFFFFFFFF)
+        stride *= shape[k]
+    return idx
+
+
+def perturbed_z(pp: "PerturbedParam") -> jnp.ndarray:
+    """Materialize z for a tagged leaf (f32) — same bits as the unfused
+    stream `kernels.ref.draw_z_ref(leaf.shape, leaf_seed)` restricted to
+    this slice. Used by the XLA fallback and `resolve`; the Pallas path
+    generates the same values tile-by-tile in VMEM instead."""
+    seed = _scalar(pp.seed)
+    off = jnp.asarray(pp.off)
+    w = pp.w
+    if off.ndim == 0:
+        idx = off + _flat_iota(w.shape)
+    else:
+        lead = off.shape[0]
+        rest = w.shape[1:]
+        idx = off.reshape((lead,) + (1,) * len(rest)) + _flat_iota(rest)[None]
+    return gaussian_from_counter(idx, seed)
+
+
+def resolve(pp) -> jnp.ndarray:
+    """Materialize w + eps · z for one tagged leaf (a layer-sized transient,
+    NOT a θ-sized one). Identity on plain arrays, so consumers can call it
+    unconditionally on params that may or may not be tagged."""
+    if not isinstance(pp, PerturbedParam):
+        return pp
+    wf = pp.w.astype(jnp.float32)
+    return (wf + _scalar(pp.eps) * perturbed_z(pp)).astype(pp.w.dtype)
+
+
+def perturbed_matmul(x: jnp.ndarray, pp: "PerturbedParam",
+                     impl: Optional[str] = None) -> jnp.ndarray:
+    """out = x @ (w + eps · z(seed)) for a 2-D tagged leaf; x: [..., K].
+
+    The shared fused entry point of the ZO dual forward: both rollouts
+    (eps = +μ and −μ) route every projection through here. Pallas impls
+    generate z per weight tile in VMEM (kernels/perturbed_matmul.py); the
+    XLA fallback materializes one layer-sized z transient and lets XLA fuse
+    generation into the matmul's operand — in neither case does a perturbed
+    copy of the full parameter tree exist.
+    """
+    impl = impl or _default_impl()
+    w = pp.w
+    assert w.ndim == 2, f"perturbed_matmul wants a 2-D leaf, got {w.shape}"
+    if impl == "xla":
+        # resolve a layer-sized w+εz transient and run ONE matmul. Under the
+        # dual forward's vmap over eps = ±μ (zo.dual_forward mode="fused")
+        # only eps is batched — z depends on (seed, off) alone, so XLA
+        # materializes each layer's z once and shares it across the two
+        # rollouts instead of drawing it per rollout.
+        return jnp.einsum("...d,df->...f", x, resolve(pp),
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    if impl in ("pallas", "pallas_interpret"):
+        batch = x.shape[:-1]
+        m = 1
+        for b in batch:
+            m *= b
+        out = perturbed_matmul_pallas(
+            x.reshape(m, x.shape[-1]), w, _scalar(pp.seed), _scalar(pp.off),
+            _scalar(pp.eps), interpret=(impl == "pallas_interpret"))
+        return out.reshape(batch + (w.shape[1],))
+    raise ValueError(f"unknown impl: {impl}")
+
+
+def perturbed_unembed(x: jnp.ndarray, pp: "PerturbedParam") -> jnp.ndarray:
+    """Fused lm-head contraction: [.., D] @ (w + εz)[V, D]ᵀ → f32 logits.
+
+    Resolves a table-sized w+εz transient for the contraction; like
+    `perturbed_matmul`, z depends only on (seed, off), so the dual
+    forward's eps-vmap draws the [V, D] z once for both rollouts. The
+    transient is freed after this op — no perturbed copy of the tree
+    persists."""
+    return jnp.einsum("...d,vd->...v", x, resolve(pp),
+                      preferred_element_type=jnp.float32)
+
+
+def perturbed_gather(pp: "PerturbedParam", tokens: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Embedding-table gather of (w + eps · z) rows: z is drawn ONLY for the
+    gathered rows (row v, column j uses counter off[v] + j — the same bits
+    the row has in the full-table stream), so the fused path never touches
+    the [V, D] table beyond the rows the batch actually reads."""
+    w, off = pp.w, jnp.asarray(pp.off)
+    seed, eps = _scalar(pp.seed), _scalar(pp.eps)
+    rows = jnp.take(w, tokens, axis=0).astype(jnp.float32)
+    if off.ndim == 0:   # tagged leaf was already sliced — single-row table
+        off_t = jnp.broadcast_to(off, tokens.shape)
+    else:
+        off_t = jnp.take(off, tokens, axis=0)
+    d = w.shape[-1]
+    idx = off_t[..., None] + jax.lax.broadcasted_iota(
+        jnp.uint32, off_t.shape + (d,), off_t.ndim)
+    z = gaussian_from_counter(idx, seed)
+    return (rows + eps * z).astype(w.dtype)
 
 
 # ---------------------------------------------------------------------------

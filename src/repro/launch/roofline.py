@@ -181,17 +181,29 @@ def _layer_cache_abstract(mesh, cache_like):
 # -------------------------- family probe builders --------------------------
 
 def build_probes(cfg: ModelConfig, shape: ShapeConfig, mesh,
-                 dtype=jnp.bfloat16, n_perturb: int = 1) -> List[Probe]:
+                 dtype=jnp.bfloat16, n_perturb: int = 1,
+                 fused_perturbation: bool = False) -> List[Probe]:
+    """Per-block probe programs for one (arch, shape) cell.
+
+    `fused_perturbation` mirrors PairZeroConfig.fused_perturbation: the
+    fused dual forward regenerates z inside the layer kernels, so the
+    per-round θ-sized axpy count drops from 3 (MeZO chain: +μz, −2μz,
+    restore+update) to 1 (the update) — see `_axpy_probe`."""
     kind = shape.kind
+    del kind
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
-        return _transformer_probes(cfg, shape, mesh, dtype, n_perturb)
+        return _transformer_probes(cfg, shape, mesh, dtype, n_perturb,
+                                   fused_perturbation)
     if fam == "ssm":
-        return _ssm_probes(cfg, shape, mesh, dtype, n_perturb)
+        return _ssm_probes(cfg, shape, mesh, dtype, n_perturb,
+                           fused_perturbation)
     if fam == "hybrid":
-        return _hybrid_probes(cfg, shape, mesh, dtype, n_perturb)
+        return _hybrid_probes(cfg, shape, mesh, dtype, n_perturb,
+                              fused_perturbation)
     if fam == "audio":
-        return _encdec_probes(cfg, shape, mesh, dtype, n_perturb)
+        return _encdec_probes(cfg, shape, mesh, dtype, n_perturb,
+                              fused_perturbation)
     raise ValueError(fam)
 
 
@@ -200,7 +212,7 @@ def _fwd_mult(kind: str, n_perturb: int) -> float:
     return 2.0 * n_perturb if kind == "train" else 1.0
 
 
-def _transformer_probes(cfg, shape, mesh, dtype, n_perturb):
+def _transformer_probes(cfg, shape, mesh, dtype, n_perturb, fused=False):
     from repro.models import transformer as T
     from repro.models import layers as L
 
@@ -283,12 +295,14 @@ def _transformer_probes(cfg, shape, mesh, dtype, n_perturb):
         probes.append(Probe("embed_head", 1.0, head_fn,
                             (head_sds, tok_sds)))
     if shape.kind == "train":
-        probes.append(_axpy_probe(cfg, mesh, dtype, n_perturb))
+        probes.append(_axpy_probe(cfg, mesh, dtype, n_perturb, fused))
     return probes
 
 
-def _axpy_probe(cfg, mesh, dtype, n_perturb):
-    """ZO perturb/update axpys: 3 per perturbation (MeZO chain).
+def _axpy_probe(cfg, mesh, dtype, n_perturb, fused=False):
+    """ZO perturb/update axpys: 3 per perturbation (MeZO chain), or 1 when
+    the fused dual forward is on (z regenerated inside the layer kernels;
+    only the model update touches θ).
 
     Probed on a representative stacked weight (bytes dominate; flops are
     the Box–Muller transcendentals)."""
@@ -307,12 +321,13 @@ def _axpy_probe(cfg, mesh, dtype, n_perturb):
     def fn(w, seed):
         return kops.seeded_axpy(w, seed, 1e-3, impl="xla")
 
-    # one probe covers ~all params; 3 axpys per perturbation round
-    return Probe("zo_axpy", 3.0 * n_perturb, fn, (rep, seed_sds),
-                 donate=(0,))
+    # one probe covers ~all params; 3 axpys per perturbation round in the
+    # chained walk, 1 (the update) when perturbation is fused into kernels
+    return Probe("zo_axpy", (1.0 if fused else 3.0) * n_perturb, fn,
+                 (rep, seed_sds), donate=(0,))
 
 
-def _ssm_probes(cfg, shape, mesh, dtype, n_perturb):
+def _ssm_probes(cfg, shape, mesh, dtype, n_perturb, fused=False):
     from repro.models import ssm as S
     from repro.models import layers as L
 
@@ -355,7 +370,7 @@ def _ssm_probes(cfg, shape, mesh, dtype, n_perturb):
         probes.append(_lm_head_probe(cfg, shape, mesh, dtype, 1.0,
                                      abs_params, decode=True))
     if shape.kind == "train":
-        probes.append(_axpy_probe(cfg, mesh, dtype, n_perturb))
+        probes.append(_axpy_probe(cfg, mesh, dtype, n_perturb, fused))
     return probes
 
 
@@ -382,7 +397,7 @@ def _lm_head_probe(cfg, shape, mesh, dtype, mult, abs_params, decode=False,
     return Probe("embed_head", mult, head_fn, (head_sds, tok_sds, tok_sds))
 
 
-def _hybrid_probes(cfg, shape, mesh, dtype, n_perturb):
+def _hybrid_probes(cfg, shape, mesh, dtype, n_perturb, fused=False):
     from repro.models import hybrid as H
 
     b_tot = shape.global_batch
@@ -441,11 +456,11 @@ def _hybrid_probes(cfg, shape, mesh, dtype, n_perturb):
         probes.append(_lm_head_probe(cfg, shape, mesh, dtype, 1.0,
                                      abs_params, decode=True))
     if shape.kind == "train":
-        probes.append(_axpy_probe(cfg, mesh, dtype, n_perturb))
+        probes.append(_axpy_probe(cfg, mesh, dtype, n_perturb, fused))
     return probes
 
 
-def _encdec_probes(cfg, shape, mesh, dtype, n_perturb):
+def _encdec_probes(cfg, shape, mesh, dtype, n_perturb, fused=False):
     from repro.models import encdec as E
     from repro.models import layers as L
 
@@ -536,7 +551,7 @@ def _encdec_probes(cfg, shape, mesh, dtype, n_perturb):
                                      embed_key="dec_embed",
                                      norm_key="dec_norm"))
     if shape.kind == "train":
-        probes.append(_axpy_probe(cfg, mesh, dtype, n_perturb))
+        probes.append(_axpy_probe(cfg, mesh, dtype, n_perturb, fused))
     return probes
 
 

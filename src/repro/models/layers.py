@@ -31,6 +31,9 @@ def dense_init(key, d_in: int, d_out: int, dtype) -> dict:
 
 
 def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if isinstance(p["w"], kops.PerturbedParam):
+        # fused ZO dual forward: x @ (w + εz), z regenerated in-kernel
+        return kops.perturbed_matmul(x, p["w"])
     return jnp.einsum("...d,df->...f", x, p["w"],
                       preferred_element_type=jnp.float32).astype(x.dtype)
 
@@ -41,7 +44,8 @@ def dense_rp(p: dict, x: jnp.ndarray) -> jnp.ndarray:
     the all-reduce moves half the bytes (local MXU accumulation is f32
     internally regardless)."""
     from repro.runtime.sharding import bf16_reduce_active
-    if bf16_reduce_active() and x.dtype == jnp.bfloat16:
+    if not isinstance(p["w"], kops.PerturbedParam) \
+            and bf16_reduce_active() and x.dtype == jnp.bfloat16:
         return jnp.einsum("...d,df->...f", x, p["w"],
                           preferred_element_type=jnp.bfloat16)
     return dense(p, x)
@@ -52,9 +56,10 @@ def rmsnorm_init(d: int, dtype) -> dict:
 
 
 def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    g = kops.resolve(p["g"])   # [D]-sized transient when tagged (fused ZO)
     xf = x.astype(jnp.float32)
     scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
-    return (xf * scale * p["g"].astype(jnp.float32)).astype(x.dtype)
+    return (xf * scale * g.astype(jnp.float32)).astype(x.dtype)
 
 
 def embed_init(key, vocab: int, d: int, dtype) -> dict:
@@ -63,7 +68,11 @@ def embed_init(key, vocab: int, d: int, dtype) -> dict:
 
 def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
     from repro.runtime.sharding import hint
-    x = jnp.take(p["w"], tokens, axis=0)
+    if isinstance(p["w"], kops.PerturbedParam):
+        # fused ZO: z drawn only for the gathered rows, never for the table
+        x = kops.perturbed_gather(p["w"], tokens)
+    else:
+        x = jnp.take(p["w"], tokens, axis=0)
     # batch over clients; keeps the gather output from replicating when the
     # table is vocab-sharded over `model`
     return hint(x, "client", *([None] * (x.ndim - 1)))
@@ -76,8 +85,11 @@ def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
     materializes a replicated [B, S, V] logits tensor.
     """
     from repro.runtime.sharding import hint
-    logits = jnp.einsum("...d,vd->...v", x, p["w"],
-                        preferred_element_type=jnp.float32)
+    if isinstance(p["w"], kops.PerturbedParam):
+        logits = kops.perturbed_unembed(x, p["w"])
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, p["w"],
+                            preferred_element_type=jnp.float32)
     roles = [None] * logits.ndim
     roles[0] = "client"
     roles[-1] = "model"
@@ -278,8 +290,8 @@ def mla_attend(p: dict, x: jnp.ndarray, positions: jnp.ndarray,
                  cfg.rope_theta)[:, 0]                       # [B, S, rd]
     q_nope, q_rope = _mla_q(p, x, cfg, positions)
 
-    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h,
-                               m.qk_nope_head_dim + m.v_head_dim)
+    wkv_b = kops.resolve(p["wkv_b"]).reshape(
+        m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
     wk = wkv_b[..., :m.qk_nope_head_dim]                     # [R, H, dn]
     wv = wkv_b[..., m.qk_nope_head_dim:]                     # [R, H, dv]
 
@@ -435,15 +447,16 @@ def _moe_row(p: dict, xr: jnp.ndarray, e: int, k: int, cap: int,
 
     xe = pin(jnp.take(xr, dispatch_tok.reshape(-1), axis=0
                       ).reshape(e, cap, d))                      # gather
-    hi = jnp.einsum("ecd,edf->ecf", xe, p["we_i"],
+    # expert banks resolve to per-layer transients when ZO-fusion-tagged
+    hi = jnp.einsum("ecd,edf->ecf", xe, kops.resolve(p["we_i"]),
                     preferred_element_type=jnp.float32)
-    hg = jnp.einsum("ecd,edf->ecf", xe, p["we_g"],
+    hg = jnp.einsum("ecd,edf->ecf", xe, kops.resolve(p["we_g"]),
                     preferred_element_type=jnp.float32)
     h = (jax.nn.silu(hg) * hi).astype(xr.dtype)
     from repro.runtime.sharding import bf16_reduce_active
     down_dt = (jnp.bfloat16 if bf16_reduce_active()
                and xr.dtype == jnp.bfloat16 else jnp.float32)
-    ye = jnp.einsum("ecf,efd->ecd", h, p["we_d"],
+    ye = jnp.einsum("ecf,efd->ecd", h, kops.resolve(p["we_d"]),
                     preferred_element_type=down_dt)              # [E, C, D]
     ye = ye * dispatch_w[..., None]
     out = jnp.zeros((t, d), dtype=jnp.float32).at[

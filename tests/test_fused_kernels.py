@@ -1,0 +1,257 @@
+"""Fused ZO dual forward: seeded-draw identity, trajectory equivalence, memory.
+
+The contract under test (docs/kernels.md "perturbed_matmul"):
+
+  * the z-stream a tagged leaf regenerates (ops.perturbed_z / the in-kernel
+    Pallas draw) is BITWISE the unfused stream kernels/ref.py draws for the
+    whole leaf — including slices taken by `lax.scan` over stacked layers;
+  * the fused dual forward (PairZeroConfig.fused_perturbation) follows the
+    same trajectory as the unfused `fresh` mode (its bitwise oracle: both
+    perturb directly from w) across transports and engines;
+  * with the flag off, nothing fused is ever on the trace — the default
+    path is the pre-flag program, bit for bit;
+  * the fused dual forward's XLA temp overhead over a plain forward is
+    under half the chained walk's (the BENCH_kernels gate, pinned here at
+    the benchmark's gate size).
+
+Bitwise matmul comparisons use the zero-weight identity probe (w = 0,
+eps = 1, x = I): every output element is one z value passed through the
+contraction untouched, so accumulation-order/FMA differences between matmul
+impls cannot blur the z-stream comparison.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedsim, pairzero, zo
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def tag_leaf(w, seed=7, eps=1.0, leaf_idx=0):
+    """Tag one leaf exactly as zo.tag_perturbed tags it inside a tree."""
+    tree = zo.tag_perturbed({"w": w}, seed, eps)
+    del leaf_idx
+    return tree["w"]
+
+
+# ---------------------------------------------------------------------------
+# seeded draw: bitwise vs the unfused stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64, 64), (128, 48), (16, 256), (48, 80)])
+def test_perturbed_z_matches_ref_stream(shape):
+    pp = tag_leaf(jnp.zeros(shape, jnp.float32))
+    z_ref = ref.draw_z_ref(shape, zo.leaf_seed(7, 0))
+    assert np.array_equal(np.asarray(ops.perturbed_z(pp)),
+                          np.asarray(z_ref))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+@pytest.mark.parametrize("shape", [(64, 64), (128, 48), (16, 256)])
+def test_perturbed_matmul_identity_probe_bitwise(impl, shape):
+    """w = 0, eps = 1, x = I ⇒ out rows are raw z values: the in-kernel
+    tile generation must reproduce the whole-leaf stream bit for bit."""
+    pp = tag_leaf(jnp.zeros(shape, jnp.float32))
+    eye = jnp.eye(shape[0], dtype=jnp.float32)
+    out = ops.perturbed_matmul(eye, pp, impl=impl)
+    z_ref = ref.draw_z_ref(shape, zo.leaf_seed(7, 0))
+    assert np.array_equal(np.asarray(out), np.asarray(z_ref)), impl
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_perturbed_matmul_random_w_close(impl):
+    """With real weights the contraction must match the resolve-then-matmul
+    oracle to fp tolerance (accumulation order may differ)."""
+    k1, k2 = jax.random.split(jax.random.key(3))
+    w = jax.random.normal(k1, (96, 64), jnp.float32)
+    x = jax.random.normal(k2, (5, 96), jnp.float32)
+    pp = tag_leaf(w, seed=11, eps=1e-3)
+    out = ops.perturbed_matmul(x, pp, impl=impl)
+    z = ref.draw_z_ref(w.shape, zo.leaf_seed(11, 0))
+    oracle = x @ (w + 1e-3 * z)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               atol=1e-5, rtol=1e-6)
+
+
+def test_scan_slice_continues_the_stream():
+    """Slicing a stacked [L, d, f] tag layer-by-layer (what lax.scan does)
+    must continue the whole-leaf counter stream bitwise."""
+    L, d, f = 3, 8, 32
+    w = jnp.zeros((L, d, f), jnp.float32)
+    pp = tag_leaf(w, seed=5)
+    z_full = ref.draw_z_ref((L, d, f), zo.leaf_seed(5, 0))
+    for layer in range(L):
+        sl = jax.tree_util.tree_map(lambda c: c[layer], pp)
+        assert isinstance(sl, ops.PerturbedParam)
+        assert np.array_equal(np.asarray(ops.perturbed_z(sl)),
+                              np.asarray(z_full[layer])), layer
+
+
+def test_perturbed_gather_bitwise_rows():
+    """Gathered rows carry the same bits the rows have in the full-table
+    stream — drawing z only for the touched rows must not change them."""
+    V, D = 40, 32
+    w = jax.random.normal(jax.random.key(0), (V, D), jnp.float32)
+    pp = tag_leaf(w, seed=9, eps=1e-3)
+    tokens = jnp.array([[0, 3, 39, 3], [7, 0, 1, 2]])
+    out = ops.perturbed_gather(pp, tokens)
+    full = ref.seeded_axpy_ref(w, zo.leaf_seed(9, 0), 1e-3)
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(jnp.take(full, tokens, axis=0)))
+
+
+def test_resolve_tagged_tree_equals_perturb(tiny_model):
+    """resolve() over a tagged real parameter tree == the unfused axpy
+    perturbation, leaf for leaf, bitwise."""
+    from repro.models import registry
+    params = registry.init_params(jax.random.key(0), tiny_model)
+    seed = jnp.uint32(21)
+    tagged = zo.tag_perturbed(params, seed, 1e-3)
+    resolved = jax.tree_util.tree_map(
+        ops.resolve, tagged,
+        is_leaf=lambda x: isinstance(x, ops.PerturbedParam))
+    oracle = zo.perturb(params, seed, 1e-3, impl="xla")
+    for a, b in zip(jax.tree_util.tree_leaves(resolved),
+                    jax.tree_util.tree_leaves(oracle)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# dual forward + trajectories
+# ---------------------------------------------------------------------------
+
+def _loss_and_batch(cfg, n_clients=3, batch=2, seq=12):
+    loss_fn = pairzero.make_loss_fn(cfg)
+    tok = jax.random.randint(jax.random.key(1), (n_clients, batch, seq),
+                             0, cfg.vocab_size)
+    b = {"tokens": tok, "targets": jnp.roll(tok, -1, -1),
+         "mask": jnp.ones(tok.shape, jnp.float32)}
+    return lambda p: loss_fn(p, b)
+
+
+def test_fused_dual_forward_bitwise_fresh(tiny_model):
+    """The headline contract: fused losses == fresh losses, bit for bit."""
+    from repro.models import registry
+    params = registry.init_params(jax.random.key(0), tiny_model)
+    f = _loss_and_batch(tiny_model)
+    seed = jnp.uint32(13)
+    lp_fr, lm_fr, _ = jax.jit(
+        lambda p: zo.dual_forward(f, p, seed, 1e-3, mode="fresh"))(params)
+    lp_fu, lm_fu, _ = jax.jit(
+        lambda p: zo.dual_forward(f, p, seed, 1e-3, mode="fused"))(params)
+    assert np.array_equal(np.asarray(lp_fr), np.asarray(lp_fu))
+    assert np.array_equal(np.asarray(lm_fr), np.asarray(lm_fu))
+
+
+@pytest.mark.parametrize("variant", ["analog", "sign", "digital"])
+@pytest.mark.parametrize("engine", ["loop", "scan"])
+def test_fused_trajectory_equals_fresh(tiny_model, make_pz, make_pipeline,
+                                       variant, engine):
+    """End-to-end: the fused flag follows the fresh trajectory exactly,
+    across transports and both executors."""
+    pz = make_pz(variant=variant, rounds=6, n_clients=3)
+    fresh = dataclasses.replace(
+        pz, zo=dataclasses.replace(pz.zo, dual_mode="fresh"))
+    fused = dataclasses.replace(pz, fused_perturbation=True)
+    kw = dict(rounds=6, engine=engine, chunk_rounds=3)
+    r_fresh = fedsim.run(tiny_model, fresh,
+                         make_pipeline(n_clients=3, batch=2), **kw)
+    r_fused = fedsim.run(tiny_model, fused,
+                         make_pipeline(n_clients=3, batch=2), **kw)
+    assert r_fused.losses == r_fresh.losses
+
+
+def test_flag_off_never_traces_fused_path(tiny_model, make_pz,
+                                          make_pipeline, monkeypatch):
+    """fused_perturbation=False must trace the pre-flag program: the fused
+    machinery is never entered, so the default trajectory is untouched."""
+    assert make_pz().fused_perturbation is False
+
+    def boom(*a, **k):
+        raise AssertionError("fused path entered with the flag off")
+    monkeypatch.setattr(zo, "tag_perturbed", boom)
+    monkeypatch.setattr(ops, "perturbed_matmul", boom)
+    pairzero.make_zo_step.cache_clear()
+    try:
+        res = fedsim.run(tiny_model, make_pz(rounds=2, n_clients=3),
+                         make_pipeline(n_clients=3, batch=2), rounds=2)
+    finally:
+        pairzero.make_zo_step.cache_clear()
+    assert len(res.losses) == 2
+
+
+def test_fused_rejects_unwired_families(make_pz):
+    """Families whose layer stacks have no fused consumers must fail loudly
+    at step-build time, not silently fall back."""
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="ssm-t", family="ssm", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=64,
+                      head_dim=8)
+    pz = dataclasses.replace(make_pz(), fused_perturbation=True)
+    with pytest.raises(ValueError, match="fused_perturbation"):
+        pairzero.make_zo_step(cfg, pz)
+
+
+# ---------------------------------------------------------------------------
+# memory: the BENCH_kernels gate, pinned
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fused_halves_zo_memory_overhead(opt125m_reduced):
+    """XLA temp of the fused dual forward minus a plain forward must be
+    under half the chained walk's overhead at the benchmark's gate size
+    (the committed BENCH_kernels.json memory gate, asserted from source)."""
+    from repro.models import registry
+    cfg = opt125m_reduced
+    params = registry.init_params(jax.random.key(0), cfg)
+    f = _loss_and_batch(cfg, n_clients=2, batch=1, seq=16)
+    seed = jnp.uint32(3)
+
+    def temp(fn, *a):
+        return jax.jit(fn).lower(*a).compile().memory_analysis() \
+            .temp_size_in_bytes
+
+    fwd = temp(lambda p: f(p), params)
+    over = {m: temp(lambda p, m=m: zo.dual_forward(f, p, seed, 1e-3,
+                                                   mode=m)[:2],
+                    params) - fwd
+            for m in ("chained", "fused")}
+    theta = sum(x.size * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(params))
+    # the fused dual never materializes a theta-sized perturbed tree: its
+    # whole ZO overhead stays under one parameter copy
+    assert over["fused"] < theta
+    assert over["fused"] < 0.5 * over["chained"], over
+
+
+# ---------------------------------------------------------------------------
+# property lane: stream determinism across arbitrary shapes (slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_perturbed_z_stream_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    del hypothesis
+
+    @settings(max_examples=25, deadline=None)
+    @given(lead=st.integers(1, 8), rest=st.integers(1, 96),
+           seed=st.integers(0, 2**32 - 1))
+    def prop(lead, rest, seed):
+        pp = tag_leaf(jnp.zeros((lead, rest), jnp.float32), seed=seed)
+        z_ref = ref.draw_z_ref((lead, rest), zo.leaf_seed(seed, 0))
+        z = ops.perturbed_z(pp)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(z_ref),
+                                   rtol=0, atol=3e-7)
+        # slices continue the stream
+        sl = jax.tree_util.tree_map(lambda c: c[lead - 1], pp)
+        np.testing.assert_allclose(np.asarray(ops.perturbed_z(sl)),
+                                   np.asarray(z_ref[lead - 1]),
+                                   rtol=0, atol=3e-7)
+
+    prop()

@@ -1,8 +1,9 @@
-"""Validate BENCH_engine.json (schema "bench_engine/v1") and gate CI on it.
+"""Validate committed benchmark artifacts and gate CI on them.
 
     python tools/check_bench.py BENCH_engine.json --min-speedup 1.3
+    python tools/check_bench.py BENCH_kernels.json --kernels
 
-Checks, in order:
+Default mode (BENCH_engine.json, schema "bench_engine/v1") checks, in order:
   1. schema shape: required top-level keys, grid rows, overlap breakdown —
      a benchmark refactor that silently changes the artifact fails here;
   2. correctness: every engine row is bit-identical to the loop engine;
@@ -13,6 +14,19 @@ Checks, in order:
          no-overlap control,
        - the double-buffered checkpoint snapshot stalls the driver less
          than the synchronous device_get baseline.
+
+`--kernels` mode (BENCH_kernels.json, schema "bench_kernels/v1",
+produced by benchmarks/kernel_memory.py) checks:
+  1. schema shape: chained/fresh/fused rows at every size, per-size
+     theta/forward-temp metadata, the gate block;
+  2. correctness: fused dual losses bitwise-equal to the fresh (unfused)
+     oracle at every size;
+  3. performance gates at gate.size:
+       - memory_overhead_fused_vs_chained <= --max-mem-ratio (default 0.5):
+         the fused path must at least halve what the default unfused mode
+         adds over plain inference,
+       - dual_speed_fused_vs_fresh >= --min-dual-speed (default 1.0): no
+         slowdown vs the mode-matched unfused baseline.
 Exit code 0 on pass; 1 with a reason on any failure.
 """
 from __future__ import annotations
@@ -27,22 +41,98 @@ REQUIRED_ROW = ("size", "engine", "rounds_per_s", "speedup_vs_loop",
                 "bit_identical_to_loop", "mesh")
 ENGINES = ("loop", "scan", "scan_mesh")
 
+KERNEL_TOP = ("schema", "created_unix", "host", "config", "sizes",
+              "grid", "gate", "notes")
+KERNEL_ROW = ("size", "mode", "dual_ms", "duals_per_s", "dual_temp_bytes",
+              "zo_overhead_bytes", "rounds_per_s", "fused_bitwise_eq_fresh")
+KERNEL_MODES = ("chained", "fresh", "fused")
+KERNEL_GATE = ("size", "memory_overhead_fused_vs_chained",
+               "dual_speed_fused_vs_fresh", "rounds_fused_vs_chained",
+               "rounds_fused_vs_fresh")
+
 
 def fail(msg: str) -> None:
     print(f"check_bench: FAIL: {msg}")
     sys.exit(1)
 
 
+def check_kernels(rep: dict, args) -> None:
+    """Validate + gate BENCH_kernels.json (see module docstring)."""
+    # 1. schema ----------------------------------------------------------
+    for key in KERNEL_TOP:
+        if key not in rep:
+            fail(f"missing top-level key {key!r}")
+    if rep["schema"] != "bench_kernels/v1":
+        fail(f"unknown kernels schema {rep['schema']!r}")
+    if not isinstance(rep["grid"], list) or not rep["grid"]:
+        fail("empty grid")
+    by_size: dict = {}
+    for row in rep["grid"]:
+        for key in KERNEL_ROW:
+            if key not in row:
+                fail(f"grid row {row.get('size')}/{row.get('mode')} "
+                     f"missing {key!r}")
+        if row["mode"] not in KERNEL_MODES:
+            fail(f"unknown mode {row['mode']!r}")
+        for key in ("dual_ms", "duals_per_s", "rounds_per_s"):
+            if not (isinstance(row[key], (int, float)) and row[key] > 0):
+                fail(f"non-positive {key} in {row['size']}/{row['mode']}")
+        by_size.setdefault(row["size"], {})[row["mode"]] = row
+    for name, modes in by_size.items():
+        missing = set(KERNEL_MODES) - set(modes)
+        if missing:
+            fail(f"size {name!r} missing modes {sorted(missing)}")
+        for key in ("param_count", "theta_bytes", "forward_temp_bytes"):
+            if key not in rep["sizes"].get(name, {}):
+                fail(f"sizes[{name!r}] missing {key!r}")
+    for key in KERNEL_GATE:
+        if key not in rep["gate"]:
+            fail(f"gate block missing {key!r}")
+
+    # 2. correctness: fused is bitwise the fresh oracle everywhere -------
+    for name, modes in by_size.items():
+        if modes["fused"]["fused_bitwise_eq_fresh"] is not True:
+            fail(f"{name}: fused dual losses not bitwise-equal to fresh")
+
+    # 3. performance gates at gate.size ----------------------------------
+    gate = rep["gate"]
+    mem = gate["memory_overhead_fused_vs_chained"]
+    if mem > args.max_mem_ratio:
+        fail(f"fused ZO memory overhead {mem:.3f}x chained > allowed "
+             f"{args.max_mem_ratio:.2f}x at {gate['size']}")
+    spd = gate["dual_speed_fused_vs_fresh"]
+    if spd < args.min_dual_speed:
+        fail(f"fused dual-forward speed {spd:.3f}x fresh < required "
+             f"{args.min_dual_speed:.2f}x at {gate['size']}")
+
+    print(f"check_bench: OK ({args.path}: fused ZO overhead {mem:.2f}x "
+          f"chained (<= {args.max_mem_ratio:.2f}), dual speed {spd:.2f}x "
+          f"fresh (>= {args.min_dual_speed:.2f}) at {gate['size']}; "
+          f"fused bitwise-equal to fresh at "
+          f"{len(by_size)} size(s))")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("path")
+    ap.add_argument("--kernels", action="store_true",
+                    help="validate BENCH_kernels.json instead of "
+                         "BENCH_engine.json")
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="required scan speedup over loop at --gate-size")
     ap.add_argument("--gate-size", default="opt-125m-reduced")
+    ap.add_argument("--max-mem-ratio", type=float, default=0.5,
+                    help="[--kernels] max fused/chained ZO memory overhead")
+    ap.add_argument("--min-dual-speed", type=float, default=1.0,
+                    help="[--kernels] min fused/fresh dual-forward speed")
     args = ap.parse_args()
 
     with open(args.path) as f:
         rep = json.load(f)
+
+    if args.kernels:
+        check_kernels(rep, args)
+        return
 
     # 1. schema ----------------------------------------------------------
     for key in REQUIRED_TOP:
