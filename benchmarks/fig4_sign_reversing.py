@@ -5,6 +5,15 @@ the paper's empirical justification for e₀ = 0.4960 < 1/2 (Lemma 2 needs
 e₀ ≤ 1/2) — plus the near-symmetric distribution of batch projections
 around the full-data projection (Fig. 6).
 
+`--byzantine-frac > 0` adds the ACTIVE companion study: the training arm
+runs with that fraction of clients executing the registered `sign_flip`
+behavior (repro.byzantine) — a worst-case, adversarial version of the
+statistical sign reversals this figure quantifies — and the e_k
+measurement is repeated on the attacked trajectory's checkpoints. The
+attack rides the registry (no inline adversary here): the bitwise pin of
+registered `sign_flip` against a hand-written negation lives in
+tests/test_byzantine.py.
+
     PYTHONPATH=src python -m benchmarks.fig4_sign_reversing
 """
 from __future__ import annotations
@@ -16,8 +25,8 @@ import os
 import jax
 import numpy as np
 
-from repro.configs.base import (ModelConfig, PairZeroConfig,
-                                PowerControlConfig, ZOConfig)
+from repro.configs.base import (ByzantineConfig, ModelConfig,
+                                PairZeroConfig, TransportConfig, ZOConfig)
 from repro.core import fedsim, zo
 from repro.core.pairzero import make_loss_fn
 from repro.data.pipeline import FederatedPipeline
@@ -64,14 +73,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--checkpoints", type=int, default=3)
+    ap.add_argument("--byzantine-frac", type=float, default=0.0,
+                    help="fraction of clients running the registered "
+                         "sign_flip behavior during training (active "
+                         "sign-reversing arm); 0 reproduces the passive "
+                         "figure bitwise")
     args = ap.parse_args()
 
     pipe = FederatedPipeline(task="sst2", spec=TaskSpec("sst2", 64, 24),
                              n_clients=5, per_client_batch=8, seed=0)
-    pz = PairZeroConfig(variant="analog", n_clients=5,
+    byz = (ByzantineConfig(behavior="sign_flip",
+                           fraction=args.byzantine_frac)
+           if args.byzantine_frac > 0.0 else None)
+    pz = PairZeroConfig(n_clients=5,
                         zo=ZOConfig(mu=1e-3, lr=5e-3, clip_gamma=5.0,
                                     n_perturb=4),
-                        power=PowerControlConfig(scheme="perfect"))
+                        transport=TransportConfig("analog", "perfect"),
+                        byzantine=byz)
 
     all_rows = []
     params = None
@@ -89,6 +107,7 @@ def main() -> None:
     os.makedirs("results", exist_ok=True)
     with open("results/fig4_sign_reversing.json", "w") as f:
         json.dump({"e0_measured": e0, "paper_e0": 0.4960,
+                   "byzantine_frac": args.byzantine_frac,
                    "blocks": all_rows}, f, indent=1)
     print(f"\nmeasured e0 = {e0:.4f} (< 0.5 ⇒ Lemma 2 applies)")
 

@@ -1,0 +1,244 @@
+"""Byzantine robustness sweep: active adversaries vs OTA-compatible defenses.
+
+For each (transport, behavior, fraction, defense) cell this runs a short
+federated fine-tune with the behavior injected through the registered
+repro.byzantine path (the malicious payload rides the real ControlTrace →
+ota.superpose pipeline, bit-identical across engines) and reports the
+three axes the robustness story turns on:
+
+  utility       final training loss + held-out accuracy at matched rounds,
+                against a clean (no attack, no defense) reference run and
+                an undefended-under-attack run of the same transport;
+  gap_recovery  how much of the clean-vs-undefended utility gap the
+                defense wins back: (m_und - m_def) / (m_und - m_clean)
+                on the final training loss (mean of the last 10 rounds) —
+                the quantity the attack directly steers. Held-out accuracy
+                is reported per row but NOT gated: at this CI scale
+                (2-layer d=64 model, 256-example eval) accuracy is not
+                monotone with utility — a diverged run can post the
+                highest accuracy by chance — so the gate would be noise;
+  eps_hat       the PR-5 empirical Clopper-Pearson audit re-run on the
+                DEFENDED configuration (clip audits against the tightened
+                gamma_d schedule via Defense.audited_pz), checked against
+                the analytic accountant's eps;
+  comm          uplink bits vs the clean run (robust group decodes price
+                their re-transmissions through Transport accounting).
+
+The gated claim (also enforced by tools/check_bench.py --robustness and
+pinned in CI): at 25% sign-flip clients on the analog OTA transport, the
+best registered defense recovers >= 80% of the clean-vs-undefended
+final-loss gap, while eps_hat stays <= the analytic eps on every audited
+cell.
+The script exits non-zero if the claim fails, so it doubles as a gate.
+
+    PYTHONPATH=src python -m benchmarks.fig_robustness \
+        [--rounds 60] [--behaviors sign_flip,scaled_poison] \
+        [--defenses none,clip,robust_decode,reweight] \
+        [--transports analog] [--fractions 0.25] [--trials 400]
+
+Writes results/fig_robustness.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro import byzantine as byz
+from repro import privacy as pv
+from repro.configs.base import (ByzantineConfig, ChannelConfig, DPConfig,
+                                ModelConfig, PairZeroConfig,
+                                PowerControlConfig, TransportConfig,
+                                ZOConfig)
+from repro.core import fedsim
+from repro.data.pipeline import FederatedPipeline
+from repro.data.tasks import TaskSpec
+
+TINY = ModelConfig(name="tiny-opt", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=64,
+                   head_dim=16)
+
+TRANSPORTS = {
+    "analog": TransportConfig("analog", "solution"),
+    "sign": TransportConfig("sign", "solution"),
+    "digital": TransportConfig("digital", quant_bits=8),
+    "smart_digital": TransportConfig("smart_digital", quant_bits=8),
+}
+
+N_CLIENTS = 8
+
+# the claim cell (see module docstring); groups = n_clients gives the
+# robust decode singleton sub-slots — a coordinate median across clients,
+# which tolerates floor((K-1)/2) = 3 attackers at K = 8
+CLAIM = {"transport": "analog", "behavior": "sign_flip", "fraction": 0.25}
+
+
+def build_pz(tc: TransportConfig, rounds: int, seed: int,
+             byzcfg: ByzantineConfig | None) -> PairZeroConfig:
+    return PairZeroConfig(
+        n_clients=N_CLIENTS, rounds=rounds,
+        zo=ZOConfig(mu=1e-3, lr=5e-3, clip_gamma=5.0, n_perturb=1),
+        channel=ChannelConfig(n0=1.0, power=100.0),
+        dp=DPConfig(epsilon=5.0, delta=0.01),
+        power=PowerControlConfig(scheme=tc.scheme),
+        transport=tc, byzantine=byzcfg, seed=seed)
+
+
+def run_cell(tname: str, rounds: int, trials: int, seed: int,
+             byzcfg: ByzantineConfig | None) -> dict:
+    pz = build_pz(TRANSPORTS[tname], rounds, seed, byzcfg)
+    pipe = FederatedPipeline(task="sst2", spec=TaskSpec("sst2", 64, 24),
+                             n_clients=N_CLIENTS, per_client_batch=4,
+                             seed=seed)
+    exp = fedsim.Experiment(TINY, pz, pipe, rounds=rounds, engine="scan",
+                            chunk_rounds=max(rounds // 4, 1),
+                            hooks=[fedsim.EvalHook(rounds, 256)])
+    res = exp.run()
+    row = {
+        "transport": tname,
+        "behavior": byzcfg.behavior if byzcfg else "none",
+        "fraction": byzcfg.fraction if byzcfg else 0.0,
+        "defense": byzcfg.defense if byzcfg else "none",
+        "rounds": res.steps,
+        "final_loss": float(np.mean(res.losses[-10:])),
+        "accuracy": res.accuracies[-1] if res.accuracies else None,
+        "uplink_bits": res.uplink_bits,
+        "privacy_spent": res.privacy_spent,
+    }
+    if exp.transport.canary_payload(pz) is not None:
+        audit_pz = pz
+        defense = byz.resolve_defense(pz)
+        if defense is not None:
+            audit_pz = defense.audited_pz(pz)
+        audit = pv.audit_transport(exp.transport, exp.schedule, audit_pz,
+                                   rounds=max(res.steps, 1), trials=trials)
+        row.update({"eps_hat": audit.eps_hat,
+                    "eps_analytic": audit.eps_analytic,
+                    "dominated": audit.dominated})
+    else:
+        row.update({"eps_hat": None, "eps_analytic": None,
+                    "dominated": None})
+    return row
+
+
+def utility_gap_recovery(clean: dict, und: dict, dfd: dict) -> tuple:
+    """(recovery, metric): fraction of the clean-vs-undefended final-loss
+    gap the defense wins back (see module docstring for why held-out
+    accuracy is reported but not gated at this scale)."""
+    gap = und["final_loss"] - clean["final_loss"]
+    if gap <= 1e-9:                     # attack did not hurt: fully "recovered"
+        return 1.0, "loss"
+    return (und["final_loss"] - dfd["final_loss"]) / gap, "loss"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--behaviors", default="sign_flip,scaled_poison",
+                    help=f"comma-separated from {byz.available_behaviors()}")
+    ap.add_argument("--defenses", default="none,clip,robust_decode,reweight",
+                    help=f"'none' plus {byz.available_defenses()}")
+    ap.add_argument("--transports", default="analog",
+                    help=f"comma-separated labels from {list(TRANSPORTS)}")
+    ap.add_argument("--fractions", default="0.25",
+                    help="comma-separated Byzantine client fractions")
+    ap.add_argument("--trials", type=int, default=400,
+                    help="paired canary traces per eps_hat audit")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    transports = args.transports.split(",")
+    behaviors = args.behaviors.split(",")
+    defenses = args.defenses.split(",")
+    fractions = [float(x) for x in args.fractions.split(",")]
+
+    rows, clean = [], {}
+    for tname in transports:
+        clean[tname] = run_cell(tname, args.rounds, args.trials, args.seed,
+                                None)
+        c = clean[tname]
+        print(f"{tname:9s} clean           loss={c['final_loss']:.4f} "
+              f"acc={c['accuracy']}", flush=True)
+        for behavior in behaviors:
+            for frac in fractions:
+                for defense in defenses:
+                    bz = ByzantineConfig(
+                        behavior=behavior, fraction=frac, defense=defense,
+                        groups=N_CLIENTS, seed=args.seed)
+                    row = run_cell(tname, args.rounds, args.trials,
+                                   args.seed, bz)
+                    rows.append(row)
+                    eps = "-" if row["eps_hat"] is None else \
+                        f"{row['eps_hat']:.2f}<={row['eps_analytic']:.2f}"
+                    print(f"{tname:9s} {behavior:15s} f={frac:.2f} "
+                          f"{defense:13s} loss={row['final_loss']:.4f} "
+                          f"acc={row['accuracy']} eps={eps}", flush=True)
+
+    # gated claim: best defense at the claim cell recovers >= 80% of the
+    # utility gap; eps_hat dominated on every audited cell
+    def cell(defense):
+        for r in rows:
+            if (r["transport"] == CLAIM["transport"]
+                    and r["behavior"] == CLAIM["behavior"]
+                    and r["fraction"] == CLAIM["fraction"]
+                    and r["defense"] == defense):
+                return r
+        return None
+
+    failures = []
+    claim: dict = dict(CLAIM)
+    und = cell("none")
+    defended = [(d, cell(d)) for d in defenses if d != "none"]
+    defended = [(d, r) for d, r in defended if r is not None]
+    if und is None or not defended:
+        claim.update({"holds": None, "note": "claim cell not in grid"})
+    else:
+        scored = []
+        for d, r in defended:
+            rec, metric = utility_gap_recovery(
+                clean[CLAIM["transport"]], und, r)
+            r["gap_recovery"] = rec
+            scored.append((rec, d, metric))
+        best_rec, best_d, metric = max(scored)
+        claim.update({"best_defense": best_d, "gap_recovery": best_rec,
+                      "metric": metric, "threshold": 0.8,
+                      "holds": bool(best_rec >= 0.8)})
+        if not claim["holds"]:
+            failures.append(
+                f"best defense {best_d} recovers only {best_rec:.2f} "
+                f"of the {metric} gap (< 0.80)")
+    for r in rows:
+        if r["dominated"] is False:
+            failures.append(f"{r['transport']}/{r['behavior']}/"
+                            f"{r['defense']}: eps_hat exceeds analytic eps")
+
+    os.makedirs("results", exist_ok=True)
+    out = "results/fig_robustness.json"
+    with open(out, "w") as f:
+        json.dump({"schema": "fig_robustness/v1",
+                   "created_unix": int(time.time()),
+                   "config": {"rounds": args.rounds,
+                              "n_clients": N_CLIENTS,
+                              "transports": transports,
+                              "behaviors": behaviors,
+                              "defenses": defenses,
+                              "fractions": fractions,
+                              "trials": args.trials,
+                              "seed": args.seed},
+                   "clean": clean, "rows": rows, "claim": claim},
+                  f, indent=1)
+    print(f"\nwrote {out}")
+    if failures:
+        raise SystemExit("ROBUSTNESS CLAIMS VIOLATED: "
+                         + "; ".join(failures))
+    print(f"claim holds: {claim.get('best_defense')} recovers "
+          f"{claim.get('gap_recovery', 0):.2f} of the "
+          f"{claim.get('metric')} gap at 25% sign-flip on analog; "
+          "eps_hat <= analytic eps on every audited cell")
+
+
+if __name__ == "__main__":
+    main()

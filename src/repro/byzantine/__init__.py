@@ -1,0 +1,79 @@
+"""Byzantine robustness: active-adversary behaviors + OTA-compatible
+defenses — the fourth first-class registry axis.
+
+PR 5 (repro.privacy) measures whether a passive adversary can READ the
+uplink; this subsystem measures whether an active one can STEER it. It
+mirrors the Transport / ChannelModel / Adversary design exactly: frozen
+dataclasses registered by name, host-side scenario state riding the
+device-resident ControlTrace, jit-side math traced into the same round
+body all three engines (loop / scan / scan_mesh) share bit-identically.
+
+Two registries:
+
+  behaviors (`repro.byzantine.behaviors`) — `ClientBehavior` rewrites the
+    [K] payload vector BEFORE the Transport aggregate, so malicious
+    payloads flow through the real `ota.superpose`: sign_flip (the paper's
+    Fig. 4 adversary), scaled_poison(λ), gaussian_noise, colluding_cohort
+    (shared-seed coordinated flip). WHICH clients attack is a seeded
+    host-side cohort mask (ctl["byz"]); HOW they attack is traced jit-side
+    with per-round keys derived from the shared noise key.
+
+  defenses (`repro.byzantine.defenses`) — `Defense` countermeasures the
+    OTA constraint permits: transmit clipping folded into the Theorem-3/4
+    power-control solve (`clip`), median over chunked re-transmission
+    sub-slots (`robust_decode`), residual-triggered sub-slot re-weighting
+    (`reweight`). Each prices its DP and communication deltas through the
+    run's Transport — defenses must not silently break the privacy story
+    (benchmarks/fig_robustness.py re-runs the PR 5 ε̂ audit under attack).
+
+Config surface: `configs.base.ByzantineConfig` on `PairZeroConfig`
+(CLI: `train.py --byzantine/--byzantine-frac/--defense`). `resolve_*`
+return None for absent/"none"/zero-fraction scenarios — the step factory
+then traces the exact historical program (structural neutrality, pinned
+bitwise in tests/test_byzantine.py on all three engines).
+"""
+from repro.byzantine.behaviors import (
+    BYZ_KEY_TAG,
+    ClientBehavior,
+    ColludingCohort,
+    GaussianNoise,
+    ScaledPoison,
+    SignFlip,
+    apply_behavior,
+)
+from repro.byzantine.behaviors import available as available_behaviors
+from repro.byzantine.behaviors import get as get_behavior
+from repro.byzantine.behaviors import register as register_behavior
+from repro.byzantine.behaviors import resolve as resolve_behavior
+from repro.byzantine.defenses import (
+    Defense,
+    ResidualReweight,
+    RobustDecode,
+    TransmitClip,
+)
+from repro.byzantine.defenses import available as available_defenses
+from repro.byzantine.defenses import get as get_defense
+from repro.byzantine.defenses import register as register_defense
+from repro.byzantine.defenses import resolve as resolve_defense
+
+__all__ = [
+    "BYZ_KEY_TAG",
+    "ClientBehavior",
+    "SignFlip",
+    "ScaledPoison",
+    "GaussianNoise",
+    "ColludingCohort",
+    "apply_behavior",
+    "available_behaviors",
+    "get_behavior",
+    "register_behavior",
+    "resolve_behavior",
+    "Defense",
+    "TransmitClip",
+    "RobustDecode",
+    "ResidualReweight",
+    "available_defenses",
+    "get_defense",
+    "register_defense",
+    "resolve_defense",
+]

@@ -1,0 +1,241 @@
+"""Byzantine client behaviors: what an ACTIVE adversarial client radiates.
+
+A `ClientBehavior` rewrites the [K] per-client payload vector p_k *before*
+the Transport's aggregate — the malicious payload then flows through the
+real `ota.superpose` exactly like honest traffic (attacks and honest
+signals are physically superposed on the air; the server never sees
+per-client payloads on the OTA mechanisms, which is precisely why steering
+is the right threat model there).
+
+Mechanics mirror the Transport/ChannelModel/Adversary registries: frozen
+dataclasses (hashable — the memoized step factory keys on them) registered
+by name. WHICH clients misbehave is decided host-side, once per run, by
+`client_mask` (a seeded cohort draw) and rides the device-resident
+ControlTrace as a [R, K] mask (`ctl["byz"]`) next to the survival mask —
+so the same traced program serves loop, scan and the shard_map'd mesh
+engine bit-identically (the mask is data, not structure). HOW they
+misbehave is jit-side: `apply` is traced into the round body, keyed by a
+per-round fold of the shared noise key so every engine (and every mesh
+shard) derives identical attack randomness.
+
+Built-ins:
+
+  sign_flip        — the paper's Fig. 4 adversary: transmit -p_k.
+  scaled_poison    — amplified flip: transmit -λ·p_k (λ > 1 exceeds the
+                     honest clip range — what transmit-clipping catches).
+  gaussian_noise   — jam with N(0, std²) instead of a gradient payload.
+  colluding_cohort — shared-seed coordinated flip: all colluders transmit
+                     the SAME clip-boundary payload with a common random
+                     sign each round (maximum coherent steering power).
+
+Zero-config neutrality is structural: `resolve(pz)` returns None when no
+ByzantineConfig is set, the behavior is "none", or the fraction is 0 — the
+step factory then traces the exact historical program (pinned in
+tests/test_byzantine.py the same way PR 6 pins the fused flag off).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: fold_in tag deriving the per-round attack key from the round noise key
+#: (shared across engines and mesh shards — it comes from the control block)
+BYZ_KEY_TAG = 0xB52
+#: host-side RNG tag for the cohort draw (which clients are malicious)
+_COHORT_TAG = 0xB52C0
+
+
+@dataclass(frozen=True)
+class ClientBehavior:
+    """One active-adversary payload rewrite. Subclass + `@register(name)`.
+
+    `fraction` of the K clients run the behavior; the cohort is drawn once
+    per run from `seed` (host-side, `client_mask`) and shipped to the
+    device as the ctl["byz"] indicator row. Frozen/hashable so the
+    lru-cached step factories retrace exactly when the scenario changes.
+    """
+
+    #: registry name (set by @register)
+    name = "?"
+    #: share of clients running this behavior (cohort size = round(f·K))
+    fraction: float = 0.25
+    #: salts the cohort draw + any shared attack randomness
+    seed: int = 0
+
+    @classmethod
+    def from_config(cls, bz, pz) -> "ClientBehavior":
+        """Build an instance from a ByzantineConfig + run config. Override
+        to consume extra fields (scale, payload magnitude, ...)."""
+        return cls(fraction=float(bz.fraction), seed=int(bz.seed))
+
+    # -- host side --------------------------------------------------------
+    def client_mask(self, n_clients: int) -> np.ndarray:
+        """[K] float32 indicator of the malicious cohort (1 = attacker).
+
+        A seeded permutation draw — deterministic per (seed, K), identical
+        across engines, chunks and resumed runs; broadcast over rounds by
+        `engine.build_trace` into ctl["byz"]."""
+        m = min(max(int(round(self.fraction * n_clients)), 0), n_clients)
+        mask = np.zeros((n_clients,), dtype=np.float32)
+        if m:
+            rng = np.random.default_rng(
+                (int(self.seed) & 0xFFFFFFFF) ^ _COHORT_TAG)
+            mask[rng.permutation(n_clients)[:m]] = 1.0
+        return mask
+
+    # -- jit side ---------------------------------------------------------
+    def apply(self, p: jnp.ndarray, byz: jnp.ndarray, ctl: Dict,
+              key: jax.Array, offset, k_total: int) -> jnp.ndarray:
+        """Rewrite the (possibly shard-local) payload slice `p` given its
+        aligned cohort indicator `byz` ∈ {0,1}. `key` is the shared
+        per-round attack key; `offset`/`k_total` locate the slice in the
+        global client axis (offset is None on the single-device path).
+        Honest entries (byz == 0) MUST pass through bitwise unchanged."""
+        raise NotImplementedError
+
+
+def apply_behavior(behavior: ClientBehavior, p: jnp.ndarray, ctl: Dict,
+                   round_key: jax.Array, offset=None) -> jnp.ndarray:
+    """Apply `behavior` to the payload vector inside the round body.
+
+    Slices the device-resident cohort row ctl["byz"] to this shard's
+    clients (when `offset` is given — the mesh path) and derives the
+    per-round attack key from the shared noise key, so every engine and
+    every mesh shard computes bit-identical malicious payloads.
+    """
+    byz = ctl["byz"].astype(p.dtype)
+    k_total = byz.shape[-1]
+    if offset is not None:
+        byz = jax.lax.dynamic_slice_in_dim(byz, offset, p.shape[-1], axis=-1)
+    key = jax.random.fold_in(round_key, BYZ_KEY_TAG)
+    return behavior.apply(p, byz, ctl, key, offset, k_total)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[ClientBehavior]] = {}
+
+
+def register(name: str):
+    """Class decorator: `@register("sign_flip")` adds a ClientBehavior to
+    the registry under `name` (and sets `cls.name`)."""
+    def deco(cls: Type[ClientBehavior]) -> Type[ClientBehavior]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available() -> tuple:
+    """Sorted names of every registered client behavior."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Type[ClientBehavior]:
+    """Look up a registered ClientBehavior class by name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown behavior {name!r} "
+                         f"(registered: {available()})") from None
+
+
+def resolve(pz) -> Optional[ClientBehavior]:
+    """Build the behavior a PairZeroConfig asks for — or None.
+
+    None (no ByzantineConfig, behavior "none", or fraction 0) means the
+    step factory traces the historical honest-cohort program unchanged:
+    neutrality is structural, not an all-zeros multiply."""
+    bz = getattr(pz, "byzantine", None)
+    if bz is None or bz.behavior == "none" or bz.fraction <= 0.0:
+        return None
+    return get(bz.behavior).from_config(bz, pz)
+
+
+# ---------------------------------------------------------------------------
+# Built-in behaviors
+# ---------------------------------------------------------------------------
+
+@register("sign_flip")
+@dataclass(frozen=True)
+class SignFlip(ClientBehavior):
+    """The paper's Fig. 4 adversary: malicious clients transmit -p_k,
+    steering the aggregate against the descent direction while staying
+    inside the honest clip range (undetectable by magnitude)."""
+
+    def apply(self, p, byz, ctl, key, offset, k_total):
+        """Flip the cohort's payload sign; honest entries untouched."""
+        return jnp.where(byz > 0, -p, p)
+
+
+@register("scaled_poison")
+@dataclass(frozen=True)
+class ScaledPoison(ClientBehavior):
+    """Amplified flip: transmit -λ·p_k. With λ > 1 the malicious payload
+    exceeds the honest ±γ clip range — more steering power per attacker,
+    but exactly what the transmit-clip defense saturates away."""
+    scale: float = 3.0
+
+    @classmethod
+    def from_config(cls, bz, pz) -> "ScaledPoison":
+        """λ comes from ByzantineConfig.scale."""
+        return cls(fraction=float(bz.fraction), seed=int(bz.seed),
+                   scale=float(bz.scale))
+
+    def apply(self, p, byz, ctl, key, offset, k_total):
+        """Amplify-and-flip the cohort's payload."""
+        return jnp.where(byz > 0, -jnp.asarray(self.scale, p.dtype) * p, p)
+
+
+@register("gaussian_noise")
+@dataclass(frozen=True)
+class GaussianNoise(ClientBehavior):
+    """Jamming: malicious clients add N(0, std²) garbage to their payload
+    instead of steering — degrades SNR without a preferred direction."""
+    std: float = 3.0
+
+    @classmethod
+    def from_config(cls, bz, pz) -> "GaussianNoise":
+        """The noise std comes from ByzantineConfig.scale."""
+        return cls(fraction=float(bz.fraction), seed=int(bz.seed),
+                   std=float(bz.scale))
+
+    def apply(self, p, byz, ctl, key, offset, k_total):
+        """Add seeded noise on the cohort's entries. The draw is always the
+        full [K] vector, sliced to the shard — so mesh and single-device
+        paths consume bit-identical per-client noise."""
+        noise = jnp.asarray(self.std, p.dtype) * jax.random.normal(
+            jax.random.fold_in(key, 1), (k_total,), p.dtype)
+        if offset is not None:
+            noise = jax.lax.dynamic_slice_in_dim(
+                noise, offset, p.shape[-1], axis=-1)
+        return p + byz * noise
+
+
+@register("colluding_cohort")
+@dataclass(frozen=True)
+class ColludingCohort(ClientBehavior):
+    """Shared-seed coordinated attack: every colluder transmits the SAME
+    clip-boundary payload with a common per-round random sign — the
+    cohort's transmissions add coherently in the superposition (K_bad·γ of
+    steering per round, the OTA worst case). Needs no cross-shard
+    collective: the shared sign derives from the broadcast round key."""
+    payload: float = 5.0
+
+    @classmethod
+    def from_config(cls, bz, pz) -> "ColludingCohort":
+        """Colluders transmit at the honest clip boundary γ."""
+        return cls(fraction=float(bz.fraction), seed=int(bz.seed),
+                   payload=float(pz.zo.clip_gamma))
+
+    def apply(self, p, byz, ctl, key, offset, k_total):
+        """Replace the cohort's payload with the shared signed boundary."""
+        flip = jax.random.bernoulli(jax.random.fold_in(key, 2))
+        s = jnp.where(flip, -1.0, 1.0).astype(p.dtype)
+        return jnp.where(byz > 0, s * jnp.asarray(self.payload, p.dtype), p)

@@ -1,0 +1,333 @@
+"""OTA-compatible Byzantine defenses: what the server/base station can do.
+
+The OTA superposition hands the server ONE noisy scalar per resource block
+— it cannot inspect per-client payloads, so classical Byzantine filters
+(Krum, per-client trimmed means over full gradients) are physically
+unavailable. A `Defense` is a server/PHY-side countermeasure the air
+interface actually permits, registered like Transports and priced through
+the same accounting:
+
+  clip          — transmit-side norm clipping folded into the Theorem-3/4
+                  power-control solve: the PA saturates every payload at
+                  γ_d = clip_factor·γ (host-side, the attacker can't see
+                  the solve), bounding per-attacker steering AND shrinking
+                  the DP sensitivity, so the re-solved schedule affords a
+                  higher channel-inversion gain at the same (ε, δ).
+  robust_decode — chunked re-transmissions: clients are randomly assigned
+                  to `groups` orthogonal sub-slots each round (digital:
+                  TDMA sub-frames; analog: repeated OTA blocks), the server
+                  decodes each sub-slot with the mechanism's own decode and
+                  takes the masked MEDIAN of the group estimates —
+                  median-of-means across the cohort, breakdown point
+                  ⌊(m-1)/2⌋ corrupted groups.
+  reweight      — anomaly-triggered re-weighting fed by the round-level
+                  decode residual: sub-slot estimates whose residual vs the
+                  robust center exceeds `thresh`·MAD are dropped, the rest
+                  are averaged (recovers the mean's variance when the round
+                  is clean, the median's robustness when it is not).
+
+Every hook that prices privacy or communication delegates to the run's
+Transport with a (possibly defense-adjusted) config, so Table II's
+accounting stays computed, never hard-coded: clipping tightens the DP
+sensitivity (γ → γ_d) through `power_control.defended_config`; the group
+decodes keep one transmission per client per round (payload bits ×1) at
+the cost of `groups` orthogonal resource blocks, and each client still
+appears in exactly ONE observation per round with the same inversion gain
+and receiver noise floor — per-round DP cost is unchanged under the
+σ*=0 schedules the Theorem-3/4 solvers emit.
+
+`resolve(pz)` returns None for a missing/"none" defense — the step factory
+then traces the historical aggregate call unchanged (structural
+neutrality, pinned in tests/test_byzantine.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ota
+from repro.core import power_control as pc
+from repro.core import transport as tp
+
+#: fold_in tag for the per-round sub-slot group assignment draw
+_GROUP_TAG = 0xD3F0
+
+
+@dataclass(frozen=True)
+class Defense:
+    """One server/PHY-side countermeasure. Subclass + `@register(name)`.
+
+    Frozen/hashable — part of the memoized step-factory key, so a defended
+    run retraces exactly when the defense changes. The base class is the
+    identity defense: every hook delegates to the Transport untouched;
+    subclasses override only the surfaces they actually change.
+    """
+
+    #: registry name (set by @register)
+    name = "?"
+
+    @classmethod
+    def from_config(cls, bz, pz) -> "Defense":
+        """Build an instance from a ByzantineConfig + run config."""
+        return cls()
+
+    # -- jit side ---------------------------------------------------------
+    def transmit(self, p: jnp.ndarray, ctl: Dict) -> jnp.ndarray:
+        """Client-side PHY constraint applied to EVERY payload (honest and
+        malicious alike — the defense cannot tell them apart). Identity by
+        default."""
+        return p
+
+    def aggregate(self, transport: tp.Transport, p: jnp.ndarray, ctl: Dict,
+                  key: jax.Array) -> jnp.ndarray:
+        """Server-side decode. Default: the mechanism's own aggregate."""
+        return transport.aggregate(p, ctl, key)
+
+    def aggregate_mesh(self, transport: tp.Transport, p_local: jnp.ndarray,
+                       ctl: Dict, key: jax.Array, axis_names: tuple,
+                       offset) -> jnp.ndarray:
+        """Mesh-path decode: reassemble the full payload with the same ONE
+        client-axis psum the default Transport path uses, then run this
+        defense's single-device decode — bit-identical to the
+        single-device engines by construction."""
+        k_total = ctl["mask"].shape[-1]
+        p = tp.client_all_gather(p_local, axis_names, offset, k_total)
+        return self.aggregate(transport, p, ctl, key)
+
+    # -- host side (schedule + DP accounting) -----------------------------
+    def make_schedule(self, transport: tp.Transport, trace, pz):
+        """Solve the transmit plan, with any defense-induced change to the
+        power-control inputs folded in. Default: delegate."""
+        return transport.make_schedule(trace, pz)
+
+    def charges_privacy(self, transport: tp.Transport, schedule, pz) -> bool:
+        """Whether defended rounds spend (ε, δ). Default: delegate."""
+        return transport.charges_privacy(schedule, pz)
+
+    def round_dp_costs(self, transport: tp.Transport, schedule,
+                       t0: int, t1: int, pz):
+        """Per-round DP cost under this defense. Default: delegate."""
+        return transport.round_dp_costs(schedule, t0, t1, pz)
+
+    def audited_pz(self, pz):
+        """The config the empirical DP audit should run against — e.g. the
+        canary's worst-case payload shrinks when transmissions are clipped.
+        Default: unchanged."""
+        return pz
+
+    # -- communication accounting -----------------------------------------
+    def payload_bits_factor(self, pz) -> float:
+        """Multiplier on per-client uplink payload bits (re-transmission
+        defenses that repeat payloads would exceed 1). Default 1.0."""
+        return 1.0
+
+    def extra_bits_per_round(self, pz, d: int) -> int:
+        """Defense side-channel bits per round (e.g. anomaly feedback),
+        billed on top of the Transport's payload accounting. Default 0."""
+        return 0
+
+    def resource_blocks(self) -> int:
+        """Orthogonal PHY resource blocks consumed per round (the OTA
+        mechanisms use 1; group decodes use `groups`)."""
+        return 1
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Defense]] = {}
+
+
+def register(name: str):
+    """Class decorator: `@register("clip")` adds a Defense to the registry
+    under `name` (and sets `cls.name`)."""
+    def deco(cls: Type[Defense]) -> Type[Defense]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available() -> tuple:
+    """Sorted names of every registered defense."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Type[Defense]:
+    """Look up a registered Defense class by name."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown defense {name!r} "
+                         f"(registered: {available()})") from None
+
+
+def resolve(pz) -> Optional[Defense]:
+    """Build the defense a PairZeroConfig asks for — or None ("none" /
+    no ByzantineConfig), which traces the historical program unchanged."""
+    bz = getattr(pz, "byzantine", None)
+    if bz is None or bz.defense == "none":
+        return None
+    return get(bz.defense).from_config(bz, pz)
+
+
+# ---------------------------------------------------------------------------
+# Built-in defenses
+# ---------------------------------------------------------------------------
+
+@register("clip")
+@dataclass(frozen=True)
+class TransmitClip(Defense):
+    """Per-client norm clipping folded into the power-control solve.
+
+    The PA saturates every transmitted scalar at ±γ_d (γ_d =
+    clip_factor·γ): amplified poisons collapse to the boundary, and the
+    Theorem-3/4 solve re-runs with the tightened sensitivity
+    (`power_control.defended_config`), so the same (ε, δ) budget affords a
+    HIGHER channel-inversion gain c — the defended run decodes at a better
+    SNR than the undefended one. Host-side: the attacker observes only the
+    broadcast schedule, never the solve."""
+    clip: float = 1.0
+
+    @classmethod
+    def from_config(cls, bz, pz) -> "TransmitClip":
+        """γ_d = clip_factor · γ from the run's clip range."""
+        return cls(clip=float(bz.clip_factor) * float(pz.zo.clip_gamma))
+
+    def transmit(self, p, ctl):
+        """Saturate every payload at the defended boundary."""
+        half = jnp.asarray(self.clip, p.dtype)
+        return jnp.clip(p, -half, half)
+
+    def make_schedule(self, transport, trace, pz):
+        """Re-solve Theorem 3/4 with the tightened clip range γ_d."""
+        return transport.make_schedule(trace, pc.defended_config(pz,
+                                                                 self.clip))
+
+    def charges_privacy(self, transport, schedule, pz):
+        """Delegate under the tightened sensitivity."""
+        return transport.charges_privacy(schedule,
+                                         pc.defended_config(pz, self.clip))
+
+    def round_dp_costs(self, transport, schedule, t0, t1, pz):
+        """DP spend with sensitivity γ_d — clipping never costs extra
+        privacy; it tightens the Lemma-1 sensitivity."""
+        return transport.round_dp_costs(schedule, t0, t1,
+                                        pc.defended_config(pz, self.clip))
+
+    def audited_pz(self, pz):
+        """Audit (and canary) against the clipped worst case γ_d."""
+        return pc.defended_config(pz, self.clip)
+
+
+def _group_assignment(key: jax.Array, k_total: int, groups: int
+                      ) -> jnp.ndarray:
+    """[K] int32 sub-slot index per client — a fresh seeded permutation
+    each round (attackers cannot position themselves in a known slot)."""
+    perm = jax.random.permutation(jax.random.fold_in(key, _GROUP_TAG),
+                                  k_total)
+    slots = jnp.arange(k_total, dtype=jnp.int32) % groups
+    return jnp.zeros((k_total,), jnp.int32).at[perm].set(slots)
+
+
+def _group_estimates(transport: tp.Transport, p: jnp.ndarray, ctl: Dict,
+                     key: jax.Array, groups: int):
+    """Decode each sub-slot with the mechanism's own aggregate.
+
+    Returns ([m] estimates, [m] validity): a sub-slot is valid when at
+    least one scheduled (mask-surviving) client landed in it. Each sub-slot
+    consumes its own noise key (`ota.subslot_keys`) — independent channel
+    uses, exactly as chunked re-transmission behaves on the air."""
+    group_of = _group_assignment(key, ctl["mask"].shape[-1], groups)
+    ests, valid = [], []
+    for g, gkey in enumerate(ota.subslot_keys(key, groups)):
+        gmask = ctl["mask"] * (group_of == g).astype(ctl["mask"].dtype)
+        ests.append(transport.aggregate(p, tp.masked_ctl(ctl, gmask), gkey))
+        valid.append(jnp.sum(gmask) > 0)
+    return jnp.stack(ests), jnp.stack(valid)
+
+
+def _masked_median(values: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Median over the valid entries (sort-with-sentinel; the full survival
+    mask is never empty, so at least one sub-slot is always valid)."""
+    srt = jnp.sort(jnp.where(valid, values, jnp.inf))
+    n = jnp.maximum(jnp.sum(valid.astype(jnp.int32)), 1)
+    return 0.5 * (srt[(n - 1) // 2] + srt[n // 2])
+
+
+@register("robust_decode")
+@dataclass(frozen=True)
+class RobustDecode(Defense):
+    """Median over `groups` chunked re-transmission sub-slots.
+
+    Clients are permuted into orthogonal sub-slots each round; the server
+    decodes every sub-slot with the mechanism's own decode (digital: TDMA
+    sub-frame average; analog/sign: a separate OTA superposition block) and
+    takes the masked median of the estimates — median-of-means over the
+    cohort. Tolerates up to ⌊(m-1)/2⌋ corrupted sub-slots, so robustness
+    grows with `groups` at a linear resource-block cost (`groups` blocks
+    per round; per-client payload bits unchanged). DP is unchanged under
+    the σ*=0 solved schedules: every client still appears in exactly one
+    observation per round at the same c and N0."""
+    groups: int = 4
+
+    @classmethod
+    def from_config(cls, bz, pz) -> "RobustDecode":
+        """Sub-slot count from ByzantineConfig.groups (≤ K is sensible)."""
+        return cls(groups=int(bz.groups))
+
+    def aggregate(self, transport, p, ctl, key):
+        """Masked median over the sub-slot decodes."""
+        est, valid = _group_estimates(transport, p, ctl, key, self.groups)
+        return _masked_median(est, valid)
+
+    def resource_blocks(self):
+        """One orthogonal block per sub-slot."""
+        return self.groups
+
+
+@register("reweight")
+@dataclass(frozen=True)
+class ResidualReweight(Defense):
+    """Anomaly-triggered re-weighting fed by the decode residual.
+
+    Two-pass sub-slot decode: the robust center is the masked median of
+    the `groups` estimates; sub-slots whose residual exceeds
+    `thresh` · MAD are flagged anomalous and dropped; the survivors are
+    AVERAGED. Clean rounds keep (nearly) the plain mean's variance;
+    attacked rounds degrade gracefully to the median. The per-round
+    accept/reject bitmap is fed back downlink — `groups` bits per round,
+    billed through `extra_bits_per_round`."""
+    groups: int = 4
+    thresh: float = 3.0
+
+    @classmethod
+    def from_config(cls, bz, pz) -> "ResidualReweight":
+        """Sub-slot count from ByzantineConfig.groups."""
+        return cls(groups=int(bz.groups))
+
+    def aggregate(self, transport, p, ctl, key):
+        """Drop sub-slots with residual > thresh·MAD, average the rest."""
+        est, valid = _group_estimates(transport, p, ctl, key, self.groups)
+        center = _masked_median(est, valid)
+        resid = jnp.abs(est - center)
+        mad = _masked_median(resid, valid)
+        keep = valid & (resid <= jnp.asarray(self.thresh, resid.dtype) * mad
+                        + jnp.asarray(1e-12, resid.dtype))
+        w = keep.astype(est.dtype)
+        nk = jnp.sum(w)
+        return jnp.where(nk > 0,
+                         jnp.sum(w * est) / jnp.maximum(nk, 1.0), center)
+
+    def resource_blocks(self):
+        """One orthogonal block per sub-slot."""
+        return self.groups
+
+    def extra_bits_per_round(self, pz, d):
+        """The anomaly accept/reject bitmap: one downlink bit per
+        sub-slot per round."""
+        return self.groups

@@ -94,8 +94,19 @@ def from_config(cc) -> ChannelModel:
             "model='ar1' (or unset doppler_hz)")
     model = get(base_name).from_config(cc)
     if cc.cell_radius > 0.0:
-        model = wr.PathLossGeometry(base=model, cell_radius=cc.cell_radius,
-                                    pathloss_exp=cc.pathloss_exp)
+        model = wr.PathLossGeometry(
+            base=model, cell_radius=cc.cell_radius,
+            pathloss_exp=cc.pathloss_exp,
+            shadow_std_db=getattr(cc, "shadow_std_db", 0.0),
+            shadow_corr=getattr(cc, "shadow_corr", 0.5))
+    elif getattr(cc, "shadow_std_db", 0.0) > 0.0:
+        # shadowing rides the geometry wrapper's large-scale gains: without
+        # a cell layout there is no path loss to shadow — reject rather
+        # than silently drop the field (same guard style as doppler_hz)
+        raise ValueError(
+            "shadow_std_db is set but cell_radius == 0: log-normal "
+            "shadowing perturbs the PathLossGeometry gains — set "
+            "cell_radius > 0 to enable the geometry wrapper")
     if cc.phase_err_std > 0.0:
         model = wr.ImperfectCSI(base=model, phase_err_std=cc.phase_err_std)
     if cc.outage_db is not None:

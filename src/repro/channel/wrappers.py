@@ -30,6 +30,7 @@ from repro.channel.trace import ChannelTrace
 # (which consumes the raw seed) and from each other
 _GEOMETRY_TAG = 0x6E0
 _CSI_TAG = 0xC51
+_SHADOW_TAG = 0x5AD0
 
 
 class _WrapperFromConfig:
@@ -66,11 +67,24 @@ class PathLossGeometry(_WrapperFromConfig, ChannelModel):
     clients weak) is what matters to the power-cap min over k in the
     Theorem-3/4 solves, while the absolute link budget stays comparable to
     the unit-power configs every baseline was tuned against.
+
+    `shadow_std_db` > 0 adds correlated log-normal shadowing on top of the
+    deterministic path loss: each client's dB loss gains
+
+        X_k = σ_sh (√ρ · X₀ + √(1-ρ) · ξ_k),   X₀, ξ_k ~ N(0, 1)
+
+    where ρ = `shadow_corr` is the inter-client correlation — clients in
+    one cell share obstructions (the common component X₀), but each link
+    also has its own clutter (ξ_k). σ_sh = 0 skips the draw entirely (a
+    SEPARATE tagged RNG stream that is then never consumed), keeping the
+    no-shadowing gains bitwise identical to the historical wrapper.
     """
     _select_via = "cell_radius > 0"
     base: ChannelModel = field(default_factory=RayleighFading)
     cell_radius: float = 100.0      # meters
     pathloss_exp: float = 3.76      # 3GPP UMa-style NLOS exponent
+    shadow_std_db: float = 0.0      # log-normal shadowing std (dB)
+    shadow_corr: float = 0.5        # inter-client shadowing correlation
 
     def client_gains(self, seed: int, n_clients: int) -> np.ndarray:
         """[K] linear per-client power gains (mean 1 across the cell)."""
@@ -83,6 +97,16 @@ class PathLossGeometry(_WrapperFromConfig, ChannelModel):
         u = rng.random(n_clients)
         d = np.sqrt(u * (self.cell_radius ** 2 - r_min ** 2) + r_min ** 2)
         pl_db = 10.0 * self.pathloss_exp * np.log10(d / r_min)
+        if self.shadow_std_db > 0.0:
+            if not 0.0 <= self.shadow_corr <= 1.0:
+                raise ValueError(f"shadow_corr must be in [0, 1], "
+                                 f"got {self.shadow_corr}")
+            srng = np.random.default_rng(seed ^ _SHADOW_TAG)
+            common = srng.normal()
+            own = srng.normal(size=n_clients)
+            pl_db = pl_db + self.shadow_std_db * (
+                np.sqrt(self.shadow_corr) * common
+                + np.sqrt(1.0 - self.shadow_corr) * own)
         g = 10.0 ** (-pl_db / 10.0)
         return g / np.mean(g)
 
@@ -96,6 +120,8 @@ class PathLossGeometry(_WrapperFromConfig, ChannelModel):
                             meta={**base.meta, "geometry": "pathloss",
                                   "cell_radius": self.cell_radius,
                                   "pathloss_exp": self.pathloss_exp,
+                                  "shadow_std_db": self.shadow_std_db,
+                                  "shadow_corr": self.shadow_corr,
                                   "client_gains": g})
 
 

@@ -217,6 +217,8 @@ class ChannelConfig:
     outage_db: Optional[float] = None   # set → OutageModel threshold (dB)
     cell_radius: float = 0.0        # >0 → PathLossGeometry wrapper (meters)
     pathloss_exp: float = 3.76      # log-distance path-loss exponent
+    shadow_std_db: float = 0.0      # >0 → correlated log-normal shadowing
+    shadow_corr: float = 0.5        # inter-client shadowing correlation ρ
 
     @property
     def snr_max(self) -> float:     # Eq. (37)
@@ -255,6 +257,32 @@ class TransportConfig:
 
 
 @dataclass(frozen=True)
+class ByzantineConfig:
+    """Active-adversary scenario (repro.byzantine): who attacks, how many,
+    and what the server defends with.
+
+    `behavior` names a registered ClientBehavior (sign_flip | scaled_poison
+    | gaussian_noise | colluding_cohort | "none"); `fraction` is the share
+    of clients running it (0.0 disables the attack entirely — the traced
+    program is bit-identical to a config without a ByzantineConfig).
+    `defense` names a registered Defense (clip | robust_decode | reweight |
+    "none"). `scale` parameterizes the behavior (λ for scaled_poison, the
+    noise std for gaussian_noise); `groups` is the number of orthogonal
+    decode sub-slots for the robust defenses; `clip_factor` sets the
+    transmit-clip defense bound γ_d = clip_factor·γ. `seed` salts the
+    cohort selection (which clients are malicious) and the colluders'
+    shared randomness.
+    """
+    behavior: str = "none"
+    fraction: float = 0.0
+    scale: float = 3.0
+    defense: str = "none"
+    groups: int = 4
+    clip_factor: float = 0.5
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class PairZeroConfig:
     """Run config. New code selects the uplink via `transport`; the legacy
     `variant` + `power.scheme` strings remain as a one-release deprecation
@@ -268,6 +296,9 @@ class PairZeroConfig:
     dp: DPConfig = field(default_factory=DPConfig)
     power: PowerControlConfig = field(default_factory=PowerControlConfig)
     transport: Optional[TransportConfig] = None
+    # active-adversary scenario (repro.byzantine); None (or fraction 0 with
+    # defense "none") reproduces the honest-cohort program bit for bit
+    byzantine: Optional[ByzantineConfig] = None
     seed: int = 0
     # Pallas-fused dual forward: regenerate z inside the matmul/gather
     # consumers (kernels/perturbed_matmul.py) instead of materializing

@@ -88,7 +88,8 @@ def _noise_bits_trace(key_base: jax.Array, ts: jnp.ndarray) -> jnp.ndarray:
 
 def build_trace(schedule, pz, t0: int, t1: int, *,
                 transport=None, fault=None, elastic=None,
-                channel=None, ctl_sharding=None) -> ControlTrace:
+                channel=None, ctl_sharding=None,
+                behavior=None, defense=None) -> ControlTrace:
     """Precompute the control trace for rounds [t0, t1).
 
     Mask generation consumes the (stateful) FaultModel RNG in round order, so
@@ -107,6 +108,14 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
     `jax.device_put` of the dict — with `ctl_sharding` (a pytree of
     NamedShardings from `runtime.sharding.control_sharding`) the block
     lands replicated across the client mesh at transfer time.
+
+    `behavior` (repro.byzantine.ClientBehavior) adds its [K] malicious-
+    cohort indicator as a per-round ctl["byz"] row — the mask rides the
+    same device-resident path as survival/outage, so the attacked step is
+    one traced program across engines. `defense` (repro.byzantine.Defense)
+    takes over the DP pricing (a transmit clip tightens the Lemma-1
+    sensitivity; delegation keeps the accounting Transport-owned). None
+    for either reproduces the historical trace bit for bit.
     """
     if transport is None:
         transport = tp.resolve(pz)
@@ -154,13 +163,21 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
         "g": np.asarray(g, dtype=np.float32),
         "noise_bits": np.asarray(noise_bits, dtype=np.uint32),
     }
+    if behavior is not None:
+        host_ctl["byz"] = np.broadcast_to(
+            behavior.client_mask(k)[None, :], (rounds, k)).copy()
     # one transfer for the whole block (sharded placement, when requested,
     # happens here rather than as a post-hoc reshard)
     ctl = jax.device_put(host_ctl, ctl_sharding)
 
-    charged = bool(transport.charges_privacy(schedule, pz))
-    acct_cost = transport.round_dp_costs(schedule, t0, t1, pz) if charged \
-        else np.zeros(rounds)
+    if defense is not None:
+        charged = bool(defense.charges_privacy(transport, schedule, pz))
+        acct_cost = defense.round_dp_costs(transport, schedule, t0, t1, pz) \
+            if charged else np.zeros(rounds)
+    else:
+        charged = bool(transport.charges_privacy(schedule, pz))
+        acct_cost = transport.round_dp_costs(schedule, t0, t1, pz) \
+            if charged else np.zeros(rounds)
     return ControlTrace(t0=t0, ctl=ctl, acct_cost=acct_cost, charged=charged,
                         host_masks=masks)
 

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro import byzantine as byz
 from repro import channel
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ModelConfig, PairZeroConfig
@@ -224,7 +225,9 @@ class Experiment:
                  impl: Optional[str] = None, dtype=jnp.float32,
                  params: Optional[Any] = None,
                  mesh: Optional[Mesh] = None, overlap: bool = True,
-                 adversary: Optional[Any] = None):
+                 adversary: Optional[Any] = None,
+                 behavior: Optional[Any] = None,
+                 defense: Optional[Any] = None):
         if engine not in ("scan", "loop"):
             raise ValueError(
                 f"unknown engine: {engine!r} (want 'scan'|'loop')")
@@ -251,6 +254,18 @@ class Experiment:
         # eavesdropper observation capture (repro.privacy.Adversary): the
         # step emits obs_* metrics; pair with an AttackHook to collect them
         self.adversary = adversary
+        # active-adversary scenario (repro.byzantine): explicit instances
+        # override the pz.byzantine config resolution (mirrors transport=)
+        self.behavior = behavior if behavior is not None \
+            else byz.resolve_behavior(pz)
+        self.defense = defense if defense is not None \
+            else byz.resolve_defense(pz)
+        if self.transport.kind == "fo" and (self.behavior is not None
+                                            or self.defense is not None):
+            raise ValueError(
+                "Byzantine behaviors/defenses act on the scalar ZO payload "
+                "vector; the FO baseline has no scalar uplink to attack or "
+                "defend — run it without a ByzantineConfig")
         # realized channel + schedule, exposed after run() for post-hoc
         # attacks/audits (the adversary knows both — they are broadcast)
         self.channel_trace = None
@@ -288,7 +303,9 @@ class Experiment:
                                         optimizer.init(self.params))
         raw = pairzero.make_zo_step(self.model_cfg, self.pz, impl=self.impl,
                                     transport=self.transport, mesh=self.mesh,
-                                    adversary=self.adversary)
+                                    adversary=self.adversary,
+                                    behavior=self.behavior,
+                                    defense=self.defense)
         return raw, self.params
 
     def _executor(self, step_fn):
@@ -309,7 +326,11 @@ class Experiment:
         horizon = max(pz.rounds, self.rounds)
         ctrace = self.channel_model.realize(pz.seed ^ 0xC4A7, horizon,
                                             pz.n_clients)
-        schedule = self.transport.make_schedule(ctrace, pz)
+        # an active defense may fold its PHY constraint into the solve
+        # (transmit clip => tightened Theorem-3/4 sensitivity)
+        schedule = self.transport.make_schedule(ctrace, pz) \
+            if self.defense is None \
+            else self.defense.make_schedule(self.transport, ctrace, pz)
         self.channel_trace, self.schedule = ctrace, schedule
         result.schedule, result.transport = schedule, self.transport
 
@@ -354,7 +375,9 @@ class Experiment:
             trace = eng.build_trace(schedule, pz, a, b,
                                     transport=self.transport,
                                     fault=self.fault, elastic=self.elastic,
-                                    channel=ctrace, ctl_sharding=ctl_shard)
+                                    channel=ctrace, ctl_sharding=ctl_shard,
+                                    behavior=self.behavior,
+                                    defense=self.defense)
             return trace, stager.stage(a, b)
 
         prefetch = eng.ChunkPrefetcher(prepare, bounds, overlap=self.overlap)
@@ -425,10 +448,16 @@ class Experiment:
                            else self.rounds - self.start_round)
         result.privacy_spent = self.accountant.spent
         # payload per transmitting client x Σ_t K_eff(t): dropped/silenced
-        # clients send nothing, so they cost nothing
-        result.uplink_bits = int(round(
-            self.transport.payload_bits(pz, self.model_cfg.param_count())
-            * client_rounds))
+        # clients send nothing, so they cost nothing; an active defense
+        # scales the payload (re-transmission factors) and bills its own
+        # side-channel bits per executed round
+        bits = self.transport.payload_bits(pz, self.model_cfg.param_count()) \
+            * client_rounds
+        if self.defense is not None:
+            bits = bits * self.defense.payload_bits_factor(pz) \
+                + self.defense.extra_bits_per_round(
+                    pz, self.model_cfg.param_count()) * result.steps
+        result.uplink_bits = int(round(bits))
         result.prep_stall_s = prefetch.stall_s
         result.ckpt_stall_s = sum(
             hk._saver.stall_s for hk in self.hooks
@@ -456,6 +485,8 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         channel_model: Optional[channel.ChannelModel] = None,
         mesh: Optional[Mesh] = None, overlap: bool = True,
         adversary: Optional[Any] = None,
+        behavior: Optional[Any] = None,
+        defense: Optional[Any] = None,
         hooks: Sequence[RoundHook] = (),
         variant: Optional[str] = None,
         scheme: Optional[str] = None) -> RunResult:
@@ -468,7 +499,9 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
     thread (the no-overlap stall control). `adversary=` (a
     `repro.privacy.Adversary`) switches on eavesdropper observation
     capture — pair it with a `repro.privacy.AttackHook` in `hooks=` to
-    collect the observations. `variant=`/`scheme=` are the
+    collect the observations. `behavior=`/`defense=` (repro.byzantine)
+    override the pz.byzantine config resolution with explicit instances —
+    the active-adversary scenario axis. `variant=`/`scheme=` are the
     DEPRECATED string spellings, routed through the transport registry for
     one more release — pass `transport=` or put a TransportConfig in
     `pz.transport` instead.
@@ -493,4 +526,5 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
                       channel_model=channel_model, hooks=all_hooks,
                       fault=fault, elastic=elastic, impl=impl, dtype=dtype,
                       params=params, mesh=mesh, overlap=overlap,
-                      adversary=adversary).run()
+                      adversary=adversary, behavior=behavior,
+                      defense=defense).run()

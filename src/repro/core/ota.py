@@ -167,6 +167,21 @@ def effective_noise_std(c: jnp.ndarray, sigma: jnp.ndarray,
     return jnp.sqrt(c * c * jnp.sum(sigma * sigma) + n0)
 
 
+#: fold_in tag deriving per-sub-slot noise keys from the round key
+_SUBSLOT_TAG = 0x51B5
+
+
+def subslot_keys(key: jax.Array, slots: int) -> list:
+    """Per-sub-slot noise keys for chunked re-transmission decodes.
+
+    A robust decode (repro.byzantine.defenses) splits one logical round
+    into `slots` orthogonal resource blocks — each block is an independent
+    channel use, so each gets its own receiver-noise key derived from the
+    shared round key (identical across engines and mesh shards, like every
+    other draw in the step)."""
+    return [jax.random.fold_in(key, _SUBSLOT_TAG + s) for s in range(slots)]
+
+
 def aggregate(variant: str, scheme: str, p: jnp.ndarray, c: jnp.ndarray,
               sigma: jnp.ndarray, n0: jnp.ndarray, key: jax.Array,
               mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.byzantine import behaviors as byz_behaviors
 from repro.configs.base import ModelConfig, PairZeroConfig
 from repro.core import transport as tp
 from repro.core import zo
@@ -47,25 +48,33 @@ def make_loss_fn(model_cfg: ModelConfig, impl: Optional[str] = None
 
 
 def control_spec(n_clients: int,
-                 transport: Optional[tp.Transport] = None
+                 transport: Optional[tp.Transport] = None,
+                 behavior: Optional[Any] = None
                  ) -> Dict[str, jax.ShapeDtypeStruct]:
     """Abstract shapes of the per-round control block (dry-run input spec).
 
     The spec is owned by the Transport; the default is the standard block
-    shared by every built-in mechanism."""
+    shared by every built-in mechanism. An active `behavior`
+    (repro.byzantine) extends it with the [K] cohort indicator row."""
     t = transport if transport is not None else tp.Transport()
-    return t.control_spec(n_clients)
+    spec = t.control_spec(n_clients)
+    if behavior is not None:
+        spec = dict(spec)
+        spec["byz"] = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+    return spec
 
 
 def make_control(t: int, schedule, base_seed: int, n_clients: int,
-                 mask=None, g=None) -> Dict:
+                 mask=None, g=None, byz=None) -> Dict:
     """Host-side: build round-t control block from a PowerSchedule.
 
     `g` is the round's [K] per-client effective-gain (cos θ) vector from
     the channel trace; None means perfect CSI (all ones — bitwise neutral
-    in the step)."""
+    in the step). `byz` is the [K] malicious-cohort indicator
+    (repro.byzantine); None keeps the historical block — the key is only
+    present when a behavior is active, mirroring `engine.build_trace`."""
     key = jax.random.fold_in(jax.random.key(base_seed ^ 0x5EED), t)
-    return {
+    ctl = {
         "seed": zo.round_seed(base_seed, t),
         "c": jnp.float32(schedule.c[t]),
         "sigma": jnp.asarray(schedule.sigma[t], jnp.float32),
@@ -76,6 +85,9 @@ def make_control(t: int, schedule, base_seed: int, n_clients: int,
         else jnp.asarray(g, jnp.float32),
         "noise_bits": jax.random.key_data(key),
     }
+    if byz is not None:
+        ctl["byz"] = jnp.asarray(byz, jnp.float32)
+    return ctl
 
 
 @functools.lru_cache(maxsize=128)
@@ -84,7 +96,9 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                  scheme: Optional[str] = None,
                  transport: Optional[tp.Transport] = None,
                  mesh: Optional[Mesh] = None,
-                 adversary: Optional[Any] = None) -> Callable:
+                 adversary: Optional[Any] = None,
+                 behavior: Optional[Any] = None,
+                 defense: Optional[Any] = None) -> Callable:
     """Build the jitted ZO train step for any scalar-payload Transport
     (analog / sign / perfect / digital / user-registered).
 
@@ -115,6 +129,16 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
     scanned chunk, stacked identically by both executors. Capture is
     passive: the training trajectory is bitwise unchanged, and
     `adversary=None` traces the exact historical program.
+
+    `behavior` (a frozen `repro.byzantine.ClientBehavior`) rewrites the
+    [K] payload vector AFTER projection and BEFORE the Transport aggregate
+    — the malicious payload superposes through the real decode path on
+    every engine, gated per client by the device-resident ctl["byz"]
+    cohort row. `defense` (a frozen `repro.byzantine.Defense`) applies the
+    PHY transmit constraint to every client and, when it overrides the
+    decode, replaces the aggregate call (sub-slot group decodes). Both are
+    part of the memo key; None traces the historical program unchanged —
+    Byzantine neutrality is structural, like the adversary's.
     """
     loss_fn = make_loss_fn(model_cfg, impl=impl)
     transport = transport if transport is not None \
@@ -159,14 +183,40 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
             if client_axes:
                 offset = client_ids[0]        # shard's first global client
                 p_local = zo.projection(lp, lm, mu, gamma)    # [K/n]
-                p_hat = transport.aggregate_mesh(p_local, ctl, round_key,
-                                                 client_axes, offset)
+                if behavior is not None:
+                    p_local = byz_behaviors.apply_behavior(
+                        behavior, p_local, ctl, round_key, offset)
+                if defense is not None:
+                    p_local = defense.transmit(p_local, ctl)
+                    p_hat = defense.aggregate_mesh(
+                        transport, p_local, ctl, round_key, client_axes,
+                        offset)
+                else:
+                    p_hat = transport.aggregate_mesh(
+                        p_local, ctl, round_key, client_axes, offset)
                 lp, lm = tp.client_all_gather(
                     jnp.stack([lp, lm]), client_axes, offset, k_total)
                 p_k = zo.projection(lp, lm, mu, gamma)        # [K], full
+                # the full radiated payload for metrics/observations:
+                # re-applying attack + PHY clip on the gathered vector is
+                # bit-identical to the concatenation of the shard-local
+                # payloads (elementwise ops; shared draws sliced per shard)
+                if behavior is not None:
+                    p_k = byz_behaviors.apply_behavior(
+                        behavior, p_k, ctl, round_key)
+                if defense is not None:
+                    p_k = defense.transmit(p_k, ctl)
             else:
                 p_k = zo.projection(lp, lm, mu, gamma)        # [K]
-                p_hat = transport.aggregate(p_k, ctl, round_key)
+                if behavior is not None:
+                    p_k = byz_behaviors.apply_behavior(
+                        behavior, p_k, ctl, round_key)
+                if defense is not None:
+                    p_k = defense.transmit(p_k, ctl)
+                    p_hat = defense.aggregate(transport, p_k, ctl,
+                                              round_key)
+                else:
+                    p_hat = transport.aggregate(p_k, ctl, round_key)
             # restore + update fused into one axpy (chained mode)
             params = zo.apply_update(params_at, seed, p_hat,
                                      lr / n_perturb, mu, mode=mode)

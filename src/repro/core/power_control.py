@@ -20,12 +20,32 @@ made between rounds, not a jitted device computation.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.dp import r_dp
+
+
+def defended_config(pz, clip: float):
+    """Fold a transmit-clip defense into the Theorem-3/4 inputs.
+
+    A PHY clip at ±γ_d tightens Assumption 3's payload bound, which enters
+    the solve in two places at once: the power-cap min over clients
+    (`_analog_full_power_c` scales with 1/γ) and the Lemma-1 DP sensitivity
+    (Eq. 16 cost ∝ (c γ)²) — so the same (ε, δ) budget affords a HIGHER
+    channel-inversion gain c. Returns the run config with
+    `zo.clip_gamma = min(γ, γ_d)`; schedules, DP costs, and the audit
+    canary solved from it are then consistent with what clients actually
+    radiate. Host-side, like the rest of this module: the re-solve is
+    invisible to the attacker."""
+    g = min(float(pz.zo.clip_gamma), float(clip))
+    if g == float(pz.zo.clip_gamma):
+        return pz
+    return dataclasses.replace(
+        pz, zo=dataclasses.replace(pz.zo, clip_gamma=g))
 
 
 @dataclass

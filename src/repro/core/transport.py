@@ -77,6 +77,19 @@ def client_all_gather(x: jnp.ndarray, axis_names: tuple, offset: jnp.ndarray,
     return jax.lax.psum(full, axis_names)
 
 
+def masked_ctl(ctl: Dict[str, jnp.ndarray], mask: jnp.ndarray
+               ) -> Dict[str, jnp.ndarray]:
+    """Control block with a substituted survival mask — the sub-slot decode
+    convention: a robust defense (repro.byzantine.defenses) decodes each
+    chunked re-transmission group by re-running the mechanism's own
+    `aggregate` with the mask restricted to that group's clients; every
+    other control field (inversion gain, noise floor, CSI factors) is the
+    round's broadcast values, shared across sub-slots."""
+    out = dict(ctl)
+    out["mask"] = mask
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Protocol
 # ---------------------------------------------------------------------------

@@ -38,8 +38,10 @@ import json
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import (ChannelConfig, DPConfig, PairZeroConfig,
-                                PowerControlConfig, TransportConfig, ZOConfig)
+from repro import byzantine as byz
+from repro.configs.base import (ByzantineConfig, ChannelConfig, DPConfig,
+                                PairZeroConfig, PowerControlConfig,
+                                TransportConfig, ZOConfig)
 from repro.core import fedsim, transport
 from repro.data.pipeline import FederatedPipeline
 from repro.data.tasks import TaskSpec
@@ -92,6 +94,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--cell-radius", type=float, default=0.0,
                     help="cell radius (m); >0 wraps the channel in "
                          "PathLossGeometry (per-client mean powers)")
+    ap.add_argument("--shadow-std-db", type=float, default=0.0,
+                    help="correlated log-normal shadowing std (dB) on the "
+                         "PathLossGeometry gains; requires --cell-radius")
+    ap.add_argument("--shadow-corr", type=float, default=0.5,
+                    help="inter-client shadowing correlation rho in [0,1] "
+                         "for --shadow-std-db")
     ap.add_argument("--rounds", type=int, default=800)
     ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
                     help="round executor: per-round dispatch (loop) or the "
@@ -130,6 +138,30 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--elastic", default=None,
                     help="membership events: 'round:K,round:K' e.g. "
                          "'200:3,400:5'")
+    ap.add_argument("--byzantine", default="none",
+                    help="active-adversary client behavior from the "
+                         f"byzantine registry {byz.available_behaviors()}; "
+                         "'none' (default) runs the honest cohort — "
+                         "bit-identical to a build without the subsystem")
+    ap.add_argument("--byzantine-frac", type=float, default=0.25,
+                    help="fraction of clients running --byzantine "
+                         "(cohort size = round(frac * clients); 0 disables "
+                         "the attack)")
+    ap.add_argument("--byzantine-scale", type=float, default=3.0,
+                    help="behavior parameter: lambda for scaled_poison, "
+                         "the noise std for gaussian_noise")
+    ap.add_argument("--defense", default="none",
+                    help="server/PHY-side countermeasure from the byzantine "
+                         f"registry {byz.available_defenses()}; 'none' "
+                         "(default) keeps the mechanism's plain decode")
+    ap.add_argument("--defense-groups", type=int, default=4,
+                    help="orthogonal decode sub-slots for --defense "
+                         "robust_decode/reweight (robustness grows with "
+                         "groups at a linear resource-block cost)")
+    ap.add_argument("--defense-clip-factor", type=float, default=0.5,
+                    help="transmit-clip bound for --defense clip: "
+                         "gamma_d = factor * gamma, folded into the "
+                         "power-control solve")
     ap.add_argument("--audit", action="store_true",
                     help="eavesdropper capture + empirical privacy audit "
                          "(repro.privacy): records what an over-the-air "
@@ -151,6 +183,13 @@ def main() -> None:
         cfg = cfg.reduced()
 
     mechanism = args.transport or args.variant
+    byzcfg = None
+    if args.byzantine != "none" or args.defense != "none":
+        byzcfg = ByzantineConfig(
+            behavior=args.byzantine, fraction=args.byzantine_frac,
+            scale=args.byzantine_scale, defense=args.defense,
+            groups=args.defense_groups,
+            clip_factor=args.defense_clip_factor, seed=args.seed)
     pz = PairZeroConfig(
         variant=args.variant, n_clients=args.clients, rounds=args.rounds,
         zo=ZOConfig(mu=args.mu, lr=args.lr, clip_gamma=args.gamma,
@@ -163,11 +202,14 @@ def main() -> None:
                               round_duration_s=args.round_s,
                               phase_err_std=args.csi_phase_err,
                               outage_db=args.outage_db,
-                              cell_radius=args.cell_radius),
+                              cell_radius=args.cell_radius,
+                              shadow_std_db=args.shadow_std_db,
+                              shadow_corr=args.shadow_corr),
         dp=DPConfig(epsilon=args.epsilon, delta=args.delta),
         power=PowerControlConfig(scheme=args.scheme),
         transport=TransportConfig(mechanism=mechanism, scheme=args.scheme,
                                   quant_bits=args.quant_bits),
+        byzantine=byzcfg,
         seed=args.seed)
 
     pipe = FederatedPipeline(
@@ -227,6 +269,10 @@ def main() -> None:
         "arch": cfg.name, "transport": mechanism, "scheme": args.scheme,
         "channel": args.channel or "rayleigh",
         "engine": args.engine,
+        "byzantine": ({"behavior": args.byzantine,
+                       "fraction": args.byzantine_frac,
+                       "defense": args.defense}
+                      if byzcfg is not None else None),
         "mesh": dict(mesh.shape) if mesh is not None else None,
         "rounds": res.steps,
         "uplink_bits": res.uplink_bits,
@@ -256,8 +302,14 @@ def run_audit(pz, res, attack_hook, args) -> dict:
     """Post-run privacy audit: seed-replay reconstruction on the captured
     observations + the paired-trace eps_hat bound vs the analytic ledger.
     Consumes the realized schedule/transport the run exposes on its
-    RunResult — the adversary knows both (they are broadcast)."""
+    RunResult — the adversary knows both (they are broadcast). An active
+    defense adjusts the audited config (a transmit clip shrinks the
+    canary's worst-case payload to gamma_d) so the audit measures the
+    mechanism actually on the air."""
     from repro import privacy as pv
+    defense = byz.resolve_defense(pz)
+    if defense is not None:
+        pz = defense.audited_pz(pz)
     out: dict = {}
     obs = attack_hook.observations()
     payloads = attack_hook.payloads()

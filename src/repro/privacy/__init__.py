@@ -13,10 +13,14 @@ ChannelModels (repro.channel):
               listener sees: the superposed noisy scalar (analog/sign),
               per-slot quantized payloads (digital/smart_digital), raw
               gradients (fo).
-  attacks     registry of reconstruction attacks: `dlg` (jit-compiled
-              DLG-style gradient inversion against raw-gradient uplinks)
-              and `seed_replay` (the ZO threat: replay the public round
-              seed, estimate the projection through the Eq.-16 noise).
+  attacks     registry of attacks. Passive reconstruction: `dlg`
+              (jit-compiled DLG-style gradient inversion against
+              raw-gradient uplinks) and `seed_replay` (the ZO threat:
+              replay the public round seed, estimate the projection
+              through the Eq.-16 noise). Active: `steering` scores what a
+              Byzantine cohort (repro.byzantine) CHANGES — trajectory
+              displacement and defense gap recovery, the quantity the
+              fig_robustness gate thresholds.
   audit       paired-trace canary hypothesis testing → a Clopper–Pearson
               ε̂ lower bound per run, checked against the analytic
               accountant (`dp.epsilon_for_budget`): ε̂ ≤ ε, always, on
@@ -29,8 +33,8 @@ privacy-vs-utility sweep across the transport × channel grid.
 """
 from repro.privacy.adversary import OBS_PREFIX, Adversary
 from repro.privacy.attacks import (Attack, GradientInversion,
-                                   SeedReplayAttack, available,
-                                   client_gradient, get,
+                                   SeedReplayAttack, TrajectorySteering,
+                                   available, client_gradient, get,
                                    reconstruction_error, register,
                                    zo_gradient_estimate)
 from repro.privacy.audit import (AuditResult, audit_transport,
@@ -40,7 +44,8 @@ from repro.privacy.hooks import AttackHook
 
 __all__ = [
     "OBS_PREFIX", "Adversary", "Attack", "AttackHook", "AuditResult",
-    "GradientInversion", "SeedReplayAttack", "audit_transport",
+    "GradientInversion", "SeedReplayAttack", "TrajectorySteering",
+    "audit_transport",
     "available", "client_gradient", "clopper_pearson_upper", "get",
     "paired_trace_statistics", "reconstruction_error", "register",
     "zo_gradient_estimate",

@@ -209,6 +209,59 @@ class SeedReplayAttack(Attack):
 
 
 # ---------------------------------------------------------------------------
+# Trajectory steering (the ACTIVE threat model, repro.byzantine)
+# ---------------------------------------------------------------------------
+
+@register("steering")
+@dataclass(frozen=True)
+class TrajectorySteering(Attack):
+    """Score an ACTIVE adversary by what it does to the training
+    trajectory — the Byzantine counterpart of the passive reconstruction
+    attacks above.
+
+    Eavesdroppers are scored by what they LEARN; Byzantine cohorts
+    (repro.byzantine behaviors) by what they CHANGE. Given matched-round
+    loss series this computes the displacement the attack achieved and —
+    when a defended series is supplied — the fraction of the utility gap
+    the defense recovered, the exact quantity the robustness gate in
+    benchmarks/fig_robustness.py thresholds:
+
+      steering_rmse   per-round RMS displacement of the attacked
+                      trajectory from the clean one;
+      final_gap       mean clean-vs-attacked loss gap over the last
+                      `tail` rounds (> 0 means the attack hurt);
+      gap_recovery    (und − def) / (und − clean) on the tail means —
+                      1 is a full repair, 0 no effect, < 0 worse than
+                      undefended. None without a defended series or when
+                      the attack did not move the tail.
+    """
+    tail: int = 10      # rounds averaged for final-gap statistics
+
+    def run(self, clean, attacked, defended=None) -> Dict[str, Any]:
+        """Score steering over matched-round loss series (lower=better)."""
+        clean = np.asarray(clean, dtype=np.float64)
+        attacked = np.asarray(attacked, dtype=np.float64)
+        rounds = min(len(clean), len(attacked))
+        if rounds == 0:
+            raise ValueError("steering needs non-empty loss series")
+        t = min(self.tail, rounds)
+        clean, attacked = clean[:rounds], attacked[:rounds]
+        gap = float(attacked[-t:].mean() - clean[-t:].mean())
+        out: Dict[str, Any] = {
+            "rounds": rounds,
+            "steering_rmse": float(np.sqrt(np.mean(
+                (attacked - clean) ** 2))),
+            "final_gap": gap,
+            "gap_recovery": None,
+        }
+        if defended is not None and abs(gap) > 1e-12:
+            defended = np.asarray(defended, dtype=np.float64)[:rounds]
+            out["gap_recovery"] = float(
+                (attacked[-t:].mean() - defended[-t:].mean()) / gap)
+        return out
+
+
+# ---------------------------------------------------------------------------
 # DLG-style gradient inversion (the FO / digital threat model)
 # ---------------------------------------------------------------------------
 

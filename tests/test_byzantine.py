@@ -1,0 +1,327 @@
+"""Byzantine subsystem: behavior/defense registries, neutrality, defenses.
+
+The contracts under test:
+
+  * registries — the four behaviors and three defenses resolve by name,
+    unknown names raise, instances are frozen/hashable (they join the
+    make_zo_step memo key);
+  * neutrality — a zero-fraction behavior config and defense="none"
+    reproduce the pre-subsystem trajectory BITWISE on loop and scan, and
+    structurally (the historical program never calls into repro.byzantine
+    at all: no "byz" control row, no behavior hook in the traced step);
+  * the sign_flip pin — the registered behavior's trajectory is bitwise
+    what an independently-written inline negation produces (the legacy
+    fig4 inline-adversary contract);
+  * defenses — clip bounds the radiated payload and prices its DP against
+    the tightened gamma_d schedule; the grouped robust decode tolerates a
+    sign-flipping minority in its masked median; reweight bills its
+    residual feedback through Transport accounting.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import byzantine as byz
+from repro.byzantine import behaviors as bz_behaviors
+from repro.byzantine import defenses as bz_defenses
+from repro.configs.base import (ByzantineConfig, ChannelConfig, DPConfig,
+                                PairZeroConfig, PowerControlConfig,
+                                TransportConfig, ZOConfig)
+from repro.core import fedsim, pairzero
+from repro.core import power_control as pc
+from repro.core import transport as tp
+
+
+def make_bpz(mechanism="analog", scheme="solution", rounds=8, seed=0,
+             n_clients=8, byzantine=None, gamma=5.0):
+    """PairZeroConfig speaking TransportConfig, with an optional attack."""
+    return PairZeroConfig(
+        n_clients=n_clients, rounds=rounds,
+        zo=ZOConfig(mu=1e-3, lr=5e-3, clip_gamma=gamma, n_perturb=1),
+        channel=ChannelConfig(n0=1.0, power=100.0),
+        dp=DPConfig(epsilon=5.0, delta=0.01),
+        power=PowerControlConfig(scheme=scheme),
+        transport=TransportConfig(mechanism, scheme),
+        byzantine=byzantine, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Registries & protocol
+# ---------------------------------------------------------------------------
+
+def test_behavior_registry():
+    assert set(byz.available_behaviors()) >= {
+        "sign_flip", "scaled_poison", "gaussian_noise", "colluding_cohort"}
+    assert byz.get_behavior("sign_flip") is byz.SignFlip
+    with pytest.raises(ValueError, match="unknown behavior"):
+        byz.get_behavior("rubber_hose")
+
+
+def test_defense_registry():
+    assert set(byz.available_defenses()) >= {
+        "clip", "robust_decode", "reweight"}
+    assert byz.get_defense("clip") is byz.TransmitClip
+    with pytest.raises(ValueError, match="unknown defense"):
+        byz.get_defense("hope")
+
+
+def test_resolution_from_config():
+    pz = make_bpz()
+    assert byz.resolve_behavior(pz) is None
+    assert byz.resolve_defense(pz) is None
+    pz0 = make_bpz(byzantine=ByzantineConfig(behavior="sign_flip",
+                                             fraction=0.0))
+    assert byz.resolve_behavior(pz0) is None      # zero fraction: no attack
+    pza = make_bpz(byzantine=ByzantineConfig(behavior="sign_flip",
+                                             fraction=0.25, defense="clip"))
+    assert isinstance(byz.resolve_behavior(pza), byz.SignFlip)
+    assert isinstance(byz.resolve_defense(pza), byz.TransmitClip)
+
+
+def test_instances_are_hashable_memo_keys(tiny_model):
+    b = byz.SignFlip(fraction=0.25, seed=0)
+    assert hash(b) == hash(byz.SignFlip(fraction=0.25, seed=0))
+    d = byz.TransmitClip(clip=2.5)
+    assert hash(d) == hash(byz.TransmitClip(clip=2.5))
+    pz = make_bpz()
+    s1 = pairzero.make_zo_step(tiny_model, pz, behavior=b, defense=d)
+    s2 = pairzero.make_zo_step(tiny_model, pz,
+                               behavior=byz.SignFlip(fraction=0.25, seed=0),
+                               defense=byz.TransmitClip(clip=2.5))
+    assert s1 is s2                       # lru_cache hit on equal instances
+    s3 = pairzero.make_zo_step(tiny_model, pz)
+    assert s3 is not s1                   # attack-off is a distinct program
+
+
+def test_client_mask_counts_and_determinism():
+    b = byz.SignFlip(fraction=0.25, seed=3)
+    m = b.client_mask(8)
+    assert m.shape == (8,) and m.dtype == np.float32
+    assert m.sum() == 2                   # round(0.25 * 8)
+    np.testing.assert_array_equal(m, byz.SignFlip(fraction=0.25,
+                                                  seed=3).client_mask(8))
+    assert not np.array_equal(m, byz.SignFlip(fraction=0.25,
+                                              seed=4).client_mask(8))
+    assert byz.SignFlip(fraction=1.0, seed=0).client_mask(8).sum() == 8
+
+
+def test_fo_transport_rejects_byzantine():
+    pz = make_bpz("fo", scheme="perfect",
+                  byzantine=ByzantineConfig(behavior="sign_flip",
+                                            fraction=0.25))
+    with pytest.raises(ValueError, match="FO baseline"):
+        fedsim.Experiment(None, pz, None, rounds=4)
+
+
+# ---------------------------------------------------------------------------
+# Neutrality: zero fraction / no defense is the historical program
+# ---------------------------------------------------------------------------
+
+def test_zero_fraction_bitwise_neutral(tiny_model, make_pipeline):
+    """ByzantineConfig with fraction=0 (and defense='none') reproduces the
+    no-config trajectory bitwise on both single-device engines."""
+    pz = make_bpz(rounds=7)
+    pz0 = dataclasses.replace(pz, byzantine=ByzantineConfig(
+        behavior="sign_flip", fraction=0.0, defense="none"))
+    pipe = lambda: make_pipeline(n_clients=8, batch=2)
+    ref = fedsim.run(tiny_model, pz, pipe(), rounds=7, engine="scan",
+                     chunk_rounds=3)
+    for engine, kw in (("loop", {}), ("scan", {"chunk_rounds": 3})):
+        res = fedsim.run(tiny_model, pz0, pipe(), rounds=7, engine=engine,
+                         **kw)
+        assert res.losses == ref.losses, engine
+        assert res.p_hats == ref.p_hats, engine
+        assert res.privacy_spent == ref.privacy_spent, engine
+
+
+def test_neutrality_is_structural(tiny_model, make_pipeline, monkeypatch):
+    """The clean program never calls into repro.byzantine: poison the
+    behavior hook and the control row — an inactive config must not even
+    reach them (same pattern as the fused-flag-off structural pin)."""
+    def boom(*a, **kw):
+        raise AssertionError("byzantine path entered on a clean run")
+    monkeypatch.setattr(bz_behaviors, "apply_behavior", boom)
+    pairzero.make_zo_step.cache_clear()
+    try:
+        pz = make_bpz(rounds=4, byzantine=ByzantineConfig(
+            behavior="sign_flip", fraction=0.0))
+        res = fedsim.run(tiny_model, pz, make_pipeline(n_clients=8, batch=2),
+                         rounds=4, engine="scan", chunk_rounds=2)
+        assert len(res.losses) == 4
+    finally:
+        pairzero.make_zo_step.cache_clear()
+
+
+def test_control_row_only_when_active():
+    pz = make_bpz()
+    spec = pairzero.control_spec(pz.n_clients)
+    assert "byz" not in spec
+    b = byz.SignFlip(fraction=0.25)
+    spec_a = pairzero.control_spec(pz.n_clients, behavior=b)
+    assert spec_a["byz"].shape == (pz.n_clients,)
+
+
+# ---------------------------------------------------------------------------
+# The sign_flip pin: registered behavior == independent inline negation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _InlineNegation(bz_behaviors.ClientBehavior):
+    """The legacy fig4-style inline adversary, written independently:
+    multiply by (1 - 2 * mask) instead of jnp.where-selecting -p."""
+
+    def apply(self, p, mask, ctl, key, offset, k_total):
+        return p * (1.0 - 2.0 * mask)
+
+
+def test_sign_flip_pins_inline_negation(tiny_model, make_pipeline):
+    """Trajectory under the registered sign_flip is bitwise the inline
+    negation's (multiplying by -1.0 is exact in IEEE-754), so retiring an
+    inline adversary for the registry entry is observationally free."""
+    pz = make_bpz(rounds=6, byzantine=ByzantineConfig(behavior="sign_flip",
+                                                      fraction=0.25))
+    pipe = lambda: make_pipeline(n_clients=8, batch=2)
+    reg = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                     chunk_rounds=3)
+    inline = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                        chunk_rounds=3,
+                        behavior=_InlineNegation(fraction=0.25, seed=0))
+    clean = fedsim.run(tiny_model, make_bpz(rounds=6), pipe(), rounds=6,
+                       engine="scan", chunk_rounds=3)
+    assert reg.losses == inline.losses
+    assert reg.p_hats == inline.p_hats
+    assert reg.losses != clean.losses     # and the attack actually bites
+
+
+def test_attack_moves_trajectory_loop_eq_scan(tiny_model, make_pipeline):
+    for behavior in ("scaled_poison", "colluding_cohort"):
+        pz = make_bpz(rounds=6, byzantine=ByzantineConfig(
+            behavior=behavior, fraction=0.25))
+        pipe = lambda: make_pipeline(n_clients=8, batch=2)
+        r_scan = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                            chunk_rounds=3)
+        r_loop = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="loop")
+        assert r_scan.losses == r_loop.losses, behavior
+
+
+# ---------------------------------------------------------------------------
+# Defenses
+# ---------------------------------------------------------------------------
+
+def test_clip_bounds_radiated_payload():
+    d = byz.TransmitClip(clip=1.5)
+    p = jnp.asarray([-20.0, -1.0, 0.0, 3.0, 40.0])
+    out = np.asarray(d.transmit(p, {}))
+    assert np.all(np.abs(out) <= 1.5)
+    np.testing.assert_array_equal(out, [-1.5, -1.0, 0.0, 1.5, 1.5])
+
+
+def test_clip_from_config_scales_gamma():
+    pz = make_bpz(byzantine=ByzantineConfig(behavior="sign_flip",
+                                            fraction=0.25, defense="clip",
+                                            clip_factor=0.5))
+    d = byz.resolve_defense(pz)
+    assert d.clip == pytest.approx(0.5 * pz.zo.clip_gamma)
+
+
+def test_defended_config_tightens_gamma():
+    pz = make_bpz(gamma=5.0)
+    dz = pc.defended_config(pz, 2.5)
+    assert dz.zo.clip_gamma == 2.5
+    assert pc.defended_config(pz, 5.0) is pz      # no-op stays identical
+    assert pc.defended_config(pz, 9.0) is pz      # looser clip never binds
+
+
+def test_clip_dp_pricing_matches_defended_schedule():
+    """The clip defense's accounting IS the transport's, evaluated on the
+    gamma_d-tightened config: sensitivity 2*gamma_d, re-solved schedule."""
+    pz = make_bpz(gamma=5.0)
+    transport = tp.resolve(pz)
+    d = byz.TransmitClip(clip=2.5)
+    h = np.abs(np.random.default_rng(0).normal(size=(6, pz.n_clients)))
+    dz = pc.defended_config(pz, 2.5)
+    sched = d.make_schedule(transport, h, pz)
+    sched_ref = transport.make_schedule(h, dz)
+    np.testing.assert_array_equal(sched.c, sched_ref.c)
+    assert d.charges_privacy(transport, sched, pz) \
+        == transport.charges_privacy(sched_ref, dz)
+    np.testing.assert_allclose(
+        np.asarray(d.round_dp_costs(transport, sched, 0, 6, pz)),
+        np.asarray(transport.round_dp_costs(sched_ref, 0, 6, dz)))
+    assert d.audited_pz(pz).zo.clip_gamma == 2.5
+
+
+def test_masked_median_ignores_invalid_slots():
+    vals = jnp.asarray([5.0, -3.0, 100.0, 2.0])
+    valid = jnp.asarray([True, True, False, True])
+    med = float(bz_defenses._masked_median(vals, valid))
+    assert med == pytest.approx(2.0)      # median of {5, -3, 2}
+    med_all = float(bz_defenses._masked_median(
+        vals, jnp.ones(4, dtype=bool)))
+    assert med_all == pytest.approx(3.5)  # even count: mean of middle two
+
+
+def test_group_assignment_partitions_clients():
+    key = jax.random.key(0)
+    groups = 4
+    g_of = np.asarray(bz_defenses._group_assignment(key, 8, groups))
+    assert g_of.shape == (8,)
+    counts = np.bincount(g_of, minlength=groups)
+    np.testing.assert_array_equal(counts, [2, 2, 2, 2])
+
+
+def test_robust_decode_recovers_under_scaled_poison(tiny_model,
+                                                    make_pipeline):
+    """Singleton sub-slots (groups = K) make the decode a coordinate
+    median across clients: with 2/8 poisoning at λ = 20 the median
+    discards the out-of-range payloads the mean cannot, so the defended
+    run must land closer to the clean trajectory than the undefended one.
+    (The attack has to hurt MORE than the sub-slot decode noise — a
+    singleton decode is ~K× noisier than the full superposition — which
+    is why this pin uses a heavy λ at a short horizon; the 60-round
+    defended-vs-undefended sweep lives in benchmarks/fig_robustness.py.)"""
+    pipe = lambda: make_pipeline(n_clients=8, batch=2)
+    clean = fedsim.run(tiny_model, make_bpz(rounds=8), pipe(), rounds=8,
+                       engine="scan", chunk_rounds=4)
+    atk = ByzantineConfig(behavior="scaled_poison", fraction=0.25,
+                          scale=20.0)
+    und = fedsim.run(tiny_model, make_bpz(rounds=8, byzantine=atk), pipe(),
+                     rounds=8, engine="scan", chunk_rounds=4)
+    dfd = fedsim.run(
+        tiny_model,
+        make_bpz(rounds=8, byzantine=dataclasses.replace(
+            atk, defense="robust_decode", groups=8)),
+        pipe(), rounds=8, engine="scan", chunk_rounds=4)
+    gap_und = abs(np.mean(und.losses[-3:]) - np.mean(clean.losses[-3:]))
+    gap_dfd = abs(np.mean(dfd.losses[-3:]) - np.mean(clean.losses[-3:]))
+    assert gap_und > 0.5          # the attack really hurts undefended
+    assert gap_dfd < gap_und      # ... and the median decode recovers
+
+
+def test_reweight_bills_feedback_bits(tiny_model, make_pipeline):
+    """The residual-reweight defense feeds back one residual per group and
+    round — priced through Transport accounting as extra downlink bits."""
+    atk = ByzantineConfig(behavior="sign_flip", fraction=0.25,
+                          defense="reweight", groups=4)
+    pipe = lambda: make_pipeline(n_clients=8, batch=2)
+    und = fedsim.run(tiny_model, make_bpz(rounds=6), pipe(), rounds=6,
+                     engine="scan", chunk_rounds=3)
+    dfd = fedsim.run(tiny_model, make_bpz(rounds=6, byzantine=atk), pipe(),
+                     rounds=6, engine="scan", chunk_rounds=3)
+    assert dfd.uplink_bits == und.uplink_bits + 4 * 6
+
+
+def test_defense_without_attack_is_allowed(tiny_model, make_pipeline):
+    """Defense-only configs run (paranoid server, no actual adversary) —
+    and clip changes the schedule, so the trajectory legitimately moves."""
+    bz = ByzantineConfig(behavior="none", fraction=0.0, defense="clip")
+    pz = make_bpz(rounds=5, byzantine=bz)
+    assert byz.resolve_behavior(pz) is None
+    assert isinstance(byz.resolve_defense(pz), byz.TransmitClip)
+    res = fedsim.run(tiny_model, pz, make_pipeline(n_clients=8, batch=2),
+                     rounds=5, engine="scan", chunk_rounds=3)
+    assert len(res.losses) == 5

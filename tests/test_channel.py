@@ -153,6 +153,61 @@ def test_outage_rate_matches_rayleigh_cdf():
         assert (trace.participation.sum(axis=1) >= 1).all()
 
 
+def test_shadowing_sigma_zero_is_bitwise_neutral():
+    """shadow_std_db=0 must not even consume the shadowing RNG stream —
+    gains (and the full realized trace) stay bitwise the historical
+    wrapper's."""
+    plain = ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0)
+    shadow0 = ch.PathLossGeometry(base=ch.RayleighFading(),
+                                  cell_radius=150.0, shadow_std_db=0.0,
+                                  shadow_corr=0.9)
+    np.testing.assert_array_equal(plain.client_gains(4, 6),
+                                  shadow0.client_gains(4, 6))
+    np.testing.assert_array_equal(plain.realize(4, 50, 6).h,
+                                  shadow0.realize(4, 50, 6).h)
+
+
+def test_shadowing_changes_gains_and_is_seeded():
+    base = ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0)
+    sh = ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0,
+                             shadow_std_db=8.0, shadow_corr=0.5)
+    g0, gs = base.client_gains(4, 6), sh.client_gains(4, 6)
+    assert not np.array_equal(g0, gs)
+    assert abs(gs.mean() - 1.0) < 1e-12             # still normalized
+    np.testing.assert_array_equal(gs, sh.client_gains(4, 6))  # seeded
+    assert not np.array_equal(gs, sh.client_gains(5, 6))
+
+
+def test_shadowing_correlation_shrinks_spread():
+    """rho=1 is a common dB offset to every client — the mean-1
+    normalization removes it entirely, so fully-correlated shadowing
+    reproduces the unshadowed gains; rho=0 adds genuine per-client
+    spread."""
+    plain = ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0)
+    full = ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0,
+                               shadow_std_db=8.0, shadow_corr=1.0)
+    indep = ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0,
+                                shadow_std_db=8.0, shadow_corr=0.0)
+    g_plain, g_full = plain.client_gains(4, 64), full.client_gains(4, 64)
+    np.testing.assert_allclose(g_full, g_plain, rtol=1e-12)
+    g_indep = indep.client_gains(4, 64)
+    spread = lambda g: np.std(10.0 * np.log10(g))
+    assert spread(g_indep) > spread(g_plain)
+
+
+def test_shadowing_config_plumbing():
+    model = ch.from_config(_cc(cell_radius=150.0, shadow_std_db=6.0,
+                               shadow_corr=0.3))
+    assert isinstance(model, ch.PathLossGeometry)
+    assert model.shadow_std_db == 6.0 and model.shadow_corr == 0.3
+    with pytest.raises(ValueError, match="cell_radius == 0"):
+        ch.from_config(_cc(shadow_std_db=6.0))
+    with pytest.raises(ValueError, match="shadow_corr"):
+        ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0,
+                            shadow_std_db=6.0,
+                            shadow_corr=1.5).client_gains(0, 4)
+
+
 def test_geometry_breaks_unit_power_symmetry():
     model = ch.PathLossGeometry(base=ch.RayleighFading(), cell_radius=150.0)
     trace = model.realize(4, 4000, 6)

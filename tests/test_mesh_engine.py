@@ -135,6 +135,54 @@ def test_mesh_with_model_axis_runs(tiny_model, make_pz, make_pipeline):
 
 
 # ---------------------------------------------------------------------------
+# Byzantine lane: the behavior mask survives shard_map
+# ---------------------------------------------------------------------------
+
+def test_mesh_byzantine_attack_bitwise(tiny_model, make_pz, make_pipeline,
+                                       mesh8):
+    """An attacked+defended run on the mesh is bitwise the single-device
+    run: the ctl['byz'] cohort row shards with the control block, each
+    shard rewrites only its own client slice, and the grouped robust
+    decode consumes the psum-gathered full payload."""
+    import dataclasses
+
+    from repro.configs.base import ByzantineConfig
+    bz = ByzantineConfig(behavior="sign_flip", fraction=0.25,
+                         defense="robust_decode", groups=4)
+    pz = dataclasses.replace(
+        make_pz(scheme="solution", rounds=6, n_clients=8), byzantine=bz)
+    ref, res = _runs(tiny_model, pz, make_pipeline, mesh8)
+    assert res.losses == ref.losses
+    assert res.p_hats == ref.p_hats
+    # and the attack is genuinely on in both runs
+    clean = fedsim.run(tiny_model,
+                       make_pz(scheme="solution", rounds=6, n_clients=8),
+                       make_pipeline(vocab=tiny_model.vocab_size,
+                                     n_clients=8, batch=2, seq=16),
+                       rounds=6, engine="scan", chunk_rounds=4)
+    assert res.losses != clean.losses
+
+
+def test_mesh_byzantine_noise_behavior_bitwise(tiny_model, make_pz,
+                                               make_pipeline, mesh8):
+    """gaussian_noise draws the full [K] noise vector then slices at the
+    shard offset — the draw-then-slice contract that keeps per-client
+    randomness identical however clients are sharded."""
+    import dataclasses
+
+    from repro.configs.base import ByzantineConfig
+    bz = ByzantineConfig(behavior="gaussian_noise", fraction=0.5, scale=2.0)
+    pz = dataclasses.replace(
+        make_pz(scheme="solution", rounds=5, n_clients=8), byzantine=bz)
+    ref, res = _runs(tiny_model, pz, make_pipeline, mesh8, rounds=5)
+    assert res.losses == ref.losses
+    # multi-client shards slice interior offsets of the same noise vector
+    mesh4 = make_client_mesh("4")
+    ref4, res4 = _runs(tiny_model, pz, make_pipeline, mesh4, rounds=5)
+    assert res4.losses == ref4.losses == res.losses
+
+
+# ---------------------------------------------------------------------------
 # The collective is real: all-reduce in the compiled HLO
 # ---------------------------------------------------------------------------
 

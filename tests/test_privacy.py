@@ -59,9 +59,31 @@ def run_with_capture(model, pz, pipeline, rounds, engine="scan", chunk=5,
 def test_attack_registry():
     assert "dlg" in pv.available()
     assert "seed_replay" in pv.available()
+    assert "steering" in pv.available()
     assert pv.get("dlg") is pv.GradientInversion
+    assert pv.get("steering") is pv.TrajectorySteering
     with pytest.raises(ValueError, match="unknown attack"):
         pv.get("rubber_hose")
+
+
+def test_steering_attack_scores_gap_recovery():
+    """The active-adversary scorer: displacement, final gap, and the
+    defended fraction the fig_robustness gate thresholds."""
+    clean = np.linspace(5.0, 1.0, 20)
+    attacked = clean + 2.0                    # uniform steering
+    defended = clean + 0.2                    # 90% repaired
+    out = pv.get("steering")(tail=5).run(clean, attacked, defended)
+    assert out["rounds"] == 20
+    assert out["steering_rmse"] == pytest.approx(2.0)
+    assert out["final_gap"] == pytest.approx(2.0)
+    assert out["gap_recovery"] == pytest.approx(0.9)
+    # no defended series -> no recovery score
+    assert pv.get("steering")().run(clean, attacked)["gap_recovery"] is None
+    # a harmless "attack" leaves recovery undefined rather than divergent
+    assert pv.get("steering")().run(clean, clean,
+                                    defended)["gap_recovery"] is None
+    with pytest.raises(ValueError, match="non-empty"):
+        pv.get("steering")().run([], [])
 
 
 def test_adversary_is_hashable_memo_key(tiny_model):

@@ -15,6 +15,16 @@ Default mode (BENCH_engine.json, schema "bench_engine/v1") checks, in order:
        - the double-buffered checkpoint snapshot stalls the driver less
          than the synchronous device_get baseline.
 
+`--robustness` mode (results/fig_robustness.json, schema
+"fig_robustness/v1", produced by benchmarks/fig_robustness.py) checks:
+  1. schema shape: config block, per-transport clean rows, grid rows with
+     utility + privacy + comm fields;
+  2. the gated claim: at the claim cell (25% sign-flip on analog) the best
+     registered defense recovered >= the recorded threshold (0.8) of the
+     clean-vs-undefended utility gap, and `claim.holds` is true;
+  3. privacy under attack: eps_hat <= analytic eps on every audited row
+     (`dominated` is never false).
+
 `--kernels` mode (BENCH_kernels.json, schema "bench_kernels/v1",
 produced by benchmarks/kernel_memory.py) checks:
   1. schema shape: chained/fresh/fused rows at every size, per-size
@@ -51,9 +61,69 @@ KERNEL_GATE = ("size", "memory_overhead_fused_vs_chained",
                "rounds_fused_vs_fresh")
 
 
+ROBUST_TOP = ("schema", "created_unix", "config", "clean", "rows", "claim")
+ROBUST_ROW = ("transport", "behavior", "fraction", "defense", "rounds",
+              "final_loss", "accuracy", "uplink_bits", "privacy_spent",
+              "eps_hat", "eps_analytic", "dominated")
+ROBUST_CLAIM = ("transport", "behavior", "fraction", "best_defense",
+                "gap_recovery", "metric", "threshold", "holds")
+
+
 def fail(msg: str) -> None:
     print(f"check_bench: FAIL: {msg}")
     sys.exit(1)
+
+
+def check_robustness(rep: dict, args) -> None:
+    """Validate + gate results/fig_robustness.json (see module docstring)."""
+    # 1. schema ----------------------------------------------------------
+    for key in ROBUST_TOP:
+        if key not in rep:
+            fail(f"missing top-level key {key!r}")
+    if rep["schema"] != "fig_robustness/v1":
+        fail(f"unknown robustness schema {rep['schema']!r}")
+    if not isinstance(rep["rows"], list) or not rep["rows"]:
+        fail("empty rows")
+    for tname in rep["config"].get("transports", ()):
+        if tname not in rep["clean"]:
+            fail(f"no clean reference row for transport {tname!r}")
+    for row in rep["rows"]:
+        for key in ROBUST_ROW:
+            if key not in row:
+                fail(f"row {row.get('transport')}/{row.get('behavior')}/"
+                     f"{row.get('defense')} missing {key!r}")
+        if not (isinstance(row["final_loss"], (int, float))
+                and row["final_loss"] > 0):
+            fail(f"non-positive final_loss in {row['transport']}/"
+                 f"{row['behavior']}/{row['defense']}")
+
+    # 2. the gated claim -------------------------------------------------
+    claim = rep["claim"]
+    for key in ROBUST_CLAIM:
+        if key not in claim:
+            fail(f"claim block missing {key!r}")
+    if claim["holds"] is not True:
+        fail(f"robustness claim does not hold: best defense "
+             f"{claim.get('best_defense')!r} recovered "
+             f"{claim.get('gap_recovery')} of the {claim.get('metric')} "
+             f"gap (threshold {claim.get('threshold')})")
+    if claim["gap_recovery"] < claim["threshold"]:
+        fail(f"claim.holds is true but gap_recovery "
+             f"{claim['gap_recovery']:.3f} < threshold "
+             f"{claim['threshold']:.2f} — inconsistent artifact")
+
+    # 3. privacy under attack --------------------------------------------
+    for row in rep["rows"]:
+        if row["dominated"] is False:
+            fail(f"{row['transport']}/{row['behavior']}/{row['defense']}: "
+                 "eps_hat exceeds analytic eps under attack")
+
+    audited = sum(1 for r in rep["rows"] if r["dominated"] is True)
+    print(f"check_bench: OK ({args.path}: {claim['best_defense']} recovers "
+          f"{claim['gap_recovery']:.2f} of the {claim['metric']} gap at "
+          f"{claim['fraction']:.0%} {claim['behavior']} on "
+          f"{claim['transport']} (>= {claim['threshold']:.2f}); "
+          f"eps_hat <= analytic eps on {audited} audited row(s))")
 
 
 def check_kernels(rep: dict, args) -> None:
@@ -118,6 +188,9 @@ def main() -> None:
     ap.add_argument("--kernels", action="store_true",
                     help="validate BENCH_kernels.json instead of "
                          "BENCH_engine.json")
+    ap.add_argument("--robustness", action="store_true",
+                    help="validate results/fig_robustness.json instead of "
+                         "BENCH_engine.json")
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="required scan speedup over loop at --gate-size")
     ap.add_argument("--gate-size", default="opt-125m-reduced")
@@ -132,6 +205,9 @@ def main() -> None:
 
     if args.kernels:
         check_kernels(rep, args)
+        return
+    if args.robustness:
+        check_robustness(rep, args)
         return
 
     # 1. schema ----------------------------------------------------------

@@ -36,6 +36,7 @@ DOCSTRING_MODULES = (
     "src/repro/core/transport.py",
     "src/repro/channel/__init__.py",
     "src/repro/privacy/__init__.py",
+    "src/repro/byzantine/__init__.py",
     "src/repro/kernels/__init__.py",
 )
 
