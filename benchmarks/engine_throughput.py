@@ -16,10 +16,14 @@ identical config across engines:
 plus the chunk-boundary overlap breakdown at the primary size:
 
   prefetch    scan with the chunk-prep thread on vs off (`overlap=`),
-              reporting the driver's boundary stall (RunResult.prep_stall_s)
+              reporting the driver's boundary stall as the sum of the
+              run's `prep_stall` spans (repro.obs span timeline — the
+              single source of truth; RunResult.prep_stall_s is asserted
+              equal to the span sum within 1ms)
   checkpoint  scan + checkpoint_every=chunk_rounds with the double-buffered
               snapshot vs the synchronous device_get baseline
-              (CheckpointHook(double_buffer=)), reporting ckpt_stall_s
+              (CheckpointHook(double_buffer=)), reporting the summed
+              `ckpt_snapshot` spans the same way
 
 The first run of each config is a throwaway warmup that pays tracing + XLA
 compile (cached via the memoized step factories); timed passes are
@@ -28,8 +32,9 @@ trajectories are asserted bit-identical to the loop engine, so every
 speedup is free.
 
 `--json` writes the machine-readable BENCH_engine.json
-(schema "bench_engine/v1"); `tools/check_bench.py` validates it and gates
-the scan speedup + stall reductions in CI.
+(schema "bench_engine/v2", spans_version 1: stall numbers are
+span-derived); `tools/check_bench.py` validates it and gates the scan
+speedup + stall reductions in CI.
 """
 from __future__ import annotations
 
@@ -43,6 +48,7 @@ sys.path.insert(0, "src")
 
 import jax  # noqa: E402
 
+from repro import obs  # noqa: E402
 from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,  # noqa: E402
                                 PairZeroConfig, PowerControlConfig, ZOConfig)
 from repro.core import fedsim  # noqa: E402
@@ -51,7 +57,8 @@ from repro.data.tasks import TaskSpec  # noqa: E402
 from repro.launch.mesh import make_client_mesh  # noqa: E402
 from repro.models import registry  # noqa: E402
 
-SCHEMA = "bench_engine/v1"
+SCHEMA = "bench_engine/v2"
+SPANS_VERSION = 1       # stall numbers derive from the repro.obs timeline
 
 
 def model_sizes() -> dict:
@@ -99,6 +106,22 @@ def timed(fn, rounds: int, repeats: int):
         if rps > best_rps:
             best_rps, best_res = rps, res
     return best_rps, best_res
+
+
+def span_stall(tel, span_name: str, legacy_s: float):
+    """Span-derived stall: Σ `span_name` durations from the run's tracer.
+
+    The spans are the single source of truth; the legacy RunResult scalar
+    must agree within 1ms or the timeline instrumentation has drifted
+    from the driver's accounting (SystemExit — this is a gate, not a
+    warning). Returns (stall_s, span_count)."""
+    total = tel.tracer.total_s(span_name)
+    if abs(total - legacy_s) > 1e-3:
+        raise SystemExit(
+            f"FAIL: sum of {span_name} spans = {total:.6f}s but legacy "
+            f"counter = {legacy_s:.6f}s — span timeline diverged from "
+            "the driver's stall accounting")
+    return total, len(tel.tracer.spans(span_name))
 
 
 def main() -> None:
@@ -169,39 +192,57 @@ def main() -> None:
     cfg = sizes[primary]
     print(f"-- overlap breakdown @ {primary} --")
 
+    def traced_run(overlap: bool):
+        """Fresh tracer per pass so span sums cover exactly one run."""
+        def go():
+            tel = obs.Telemetry.on()
+            res = fedsim.run(cfg, pz, make_pipe(cfg, args),
+                             rounds=args.rounds, engine="scan",
+                             chunk_rounds=args.chunk_rounds,
+                             overlap=overlap, telemetry=tel)
+            return res, tel
+        return go
+
     runner(cfg, "scan")()                                   # warm
     prefetch = {}
     for label, ov in (("on", True), ("off", False)):
-        rps, res = timed(runner(cfg, "scan", overlap=ov),
-                         args.rounds, args.repeats)
+        rps, (res, tel) = timed(traced_run(ov), args.rounds, args.repeats)
+        stall, n_spans = span_stall(tel, "prep_stall", res.prep_stall_s)
         prefetch[label] = {"rounds_per_s": round(rps, 2),
-                           "prep_stall_s": round(res.prep_stall_s, 4)}
+                           "prep_stall_s": round(stall, 4),
+                           "prep_stall_spans": n_spans}
         print(f"  prefetch {label:3s}: {rps:8.1f} r/s, "
-              f"boundary prep stall {res.prep_stall_s * 1e3:7.1f} ms")
+              f"boundary prep stall {stall * 1e3:7.1f} ms "
+              f"({n_spans} spans)")
 
     def ckpt_runner(double_buffer: bool):
         def go():
+            tel = obs.Telemetry.on()
             with tempfile.TemporaryDirectory() as d:
                 hooks = [fedsim.CheckpointHook(
                     d, every=args.chunk_rounds,
                     double_buffer=double_buffer)]
-                return fedsim.Experiment(
+                res = fedsim.Experiment(
                     cfg, pz, make_pipe(cfg, args), args.rounds,
                     engine="scan", chunk_rounds=args.chunk_rounds,
-                    hooks=hooks).run()
+                    hooks=hooks, telemetry=tel).run()
+            return res, tel
         return go
 
     ckpt_runner(True)()                                     # warm
     checkpoint = {}
     for label, db in (("double_buffer", True), ("sync", False)):
-        rps, res = timed(ckpt_runner(db), args.rounds, args.repeats)
+        rps, (res, tel) = timed(ckpt_runner(db), args.rounds, args.repeats)
+        stall, n_spans = span_stall(tel, "ckpt_snapshot", res.ckpt_stall_s)
         checkpoint[label] = {"rounds_per_s": round(rps, 2),
-                             "ckpt_stall_s": round(res.ckpt_stall_s, 4)}
+                             "ckpt_stall_s": round(stall, 4),
+                             "ckpt_snapshot_spans": n_spans}
         print(f"  checkpoint {label:13s}: {rps:8.1f} r/s, "
-              f"snapshot stall {res.ckpt_stall_s * 1e3:7.1f} ms")
+              f"snapshot stall {stall * 1e3:7.1f} ms ({n_spans} spans)")
 
     report = {
         "schema": SCHEMA,
+        "spans_version": SPANS_VERSION,
         "created_unix": int(time.time()),
         "host": {"devices": len(jax.devices()),
                  "platform": jax.devices()[0].platform},

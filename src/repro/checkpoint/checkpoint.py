@@ -21,6 +21,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs import spans as ob
+
 PyTree = Any
 
 
@@ -107,16 +109,27 @@ class AsyncCheckpointer:
     """
 
     def __init__(self, directory: str, keep: int = 3,
-                 double_buffer: bool = True):
+                 double_buffer: bool = True,
+                 tracer: ob.Tracer = ob.NULL_TRACER):
         self.directory = directory
         self.keep = keep
         self.double_buffer = double_buffer
         self.stall_s = 0.0
         self._thread = None
+        self._tracer = tracer
 
     def _write(self, step: int, snap: PyTree, extra: Optional[Dict]) -> None:
-        host_params = jax.tree_util.tree_map(lambda a: np.asarray(a), snap)
-        save(self.directory, step, host_params, extra=extra, keep=self.keep)
+        with self._tracer.span("ckpt_write", step=step):
+            host_params = jax.tree_util.tree_map(lambda a: np.asarray(a),
+                                                 snap)
+            save(self.directory, step, host_params, extra=extra,
+                 keep=self.keep)
+
+    def _write_host(self, step: int, host_params: PyTree,
+                    extra: Optional[Dict]) -> None:
+        with self._tracer.span("ckpt_write", step=step):
+            save(self.directory, step, host_params, extra=extra,
+                 keep=self.keep)
 
     def save(self, step: int, params: PyTree,
              extra: Optional[Dict] = None) -> None:
@@ -137,10 +150,14 @@ class AsyncCheckpointer:
             host_params = jax.tree_util.tree_map(
                 lambda a: np.asarray(a), params)     # sync D2H baseline
             self._thread = threading.Thread(
-                target=save, args=(self.directory, step, host_params),
-                kwargs={"extra": extra, "keep": self.keep}, daemon=True)
+                target=self._write_host, args=(step, host_params, extra),
+                daemon=True)
         self._thread.start()
-        self.stall_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.stall_s += t1 - t0
+        # span == the exact stall_s increment (same endpoints): the
+        # training-thread cost of dispatching this snapshot
+        self._tracer.add_span("ckpt_snapshot", t0, t1, step=step)
 
     def wait(self) -> None:
         if self._thread is not None:

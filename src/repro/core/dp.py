@@ -108,6 +108,22 @@ def round_privacy_cost(c_t: float, gamma_t: float, m_t: float) -> float:
     return 2.0 * (c_t * gamma_t / m_t) ** 2
 
 
+def cumulative_spend(costs, initial: float = 0.0) -> np.ndarray:
+    """[R] ledger value after charging each of `costs` in order.
+
+    The same strictly-sequential float64 left fold `spend`/`spend_batch`
+    perform (`np.cumsum` accumulates element by element), seeded with
+    `initial` (the ledger before the first of these rounds): entry r is
+    bit-identical to `PrivacyAccountant.spent` after charging rounds ≤ r.
+    This is the per-round ε ledger `RunResult.privacy_spent_per_round`
+    exposes and the audit/MetricsSink consume — one accounting, not three.
+    """
+    costs = np.asarray(costs, dtype=np.float64)
+    if costs.size == 0:
+        return np.zeros(0, dtype=np.float64)
+    return np.cumsum(np.concatenate(([float(initial)], costs)))[1:]
+
+
 @dataclass
 class PrivacyAccountant:
     """Tracks spent DP budget across rounds; part of the checkpointed state.

@@ -40,6 +40,8 @@ import numpy as np
 from repro.core import transport as tp
 from repro.core import zo
 from repro.core.dp import PrivacyAccountant
+from repro.obs import retrace
+from repro.obs import spans as ob
 from repro.runtime.fault import combined_mask
 
 PyTree = Any
@@ -237,16 +239,21 @@ class BatchStager:
     """
 
     def __init__(self, pipeline, sharding_fn: Optional[Callable] = None,
-                 slots: int = 2):
+                 slots: int = 2, tracer: ob.Tracer = ob.NULL_TRACER):
         self._pipeline = pipeline
         self._sharding_fn = sharding_fn
         self._slots: List[Dict] = [{"bufs": {}, "inflight": None}
                                    for _ in range(max(1, slots))]
         self._next = 0
+        self._tracer = tracer
 
     def stage(self, t0: int, t1: int) -> Dict[str, jnp.ndarray]:
         """Stacked round batches [R, ...] for rounds [t0, t1), on device
         (labels dropped, exactly as the loop path feeds the step)."""
+        with self._tracer.span("batch_stage", t0=t0, t1=t1):
+            return self._stage(t0, t1)
+
+    def _stage(self, t0: int, t1: int) -> Dict[str, jnp.ndarray]:
         slot = self._slots[self._next]
         self._next = (self._next + 1) % len(self._slots)
         if slot["inflight"] is not None:
@@ -299,10 +306,16 @@ class ChunkPrefetcher:
     kicked — chunk 0, or `overlap=False`); the wait time accumulates in
     `stall_s`, so the no-overlap control measures the full prep cost and
     the overlapped path only the residual.
+
+    Telemetry: each prep runs inside a `chunk_prep` span (on the worker
+    thread when kicked), every kick drops a `prefetch_kick` instant, and
+    each `get` records a `prep_stall` span from the SAME perf_counter
+    endpoints that feed `stall_s` — span sums equal the scalar exactly.
     """
 
     def __init__(self, prepare: Callable[[int, int], Any],
-                 bounds: Sequence[Tuple[int, int]], overlap: bool = True):
+                 bounds: Sequence[Tuple[int, int]], overlap: bool = True,
+                 tracer: ob.Tracer = ob.NULL_TRACER):
         self._prepare = prepare
         self._bounds = list(bounds)
         self._overlap = overlap and len(self._bounds) > 0
@@ -313,6 +326,13 @@ class ChunkPrefetcher:
         self._fut_i = -1
         self._next = 0            # next chunk index the driver may get()
         self.stall_s = 0.0
+        self._tracer = tracer
+
+    def _run_prepare(self, i: int, kicked: bool) -> Any:
+        a, b = self._bounds[i]
+        with self._tracer.span("chunk_prep", chunk=i, t0=a, t1=b,
+                               kicked=kicked):
+            return self._prepare(a, b)
 
     def kick(self, i: int) -> None:
         """Start chunk i's prep on the worker thread (no-op when overlap
@@ -320,7 +340,8 @@ class ChunkPrefetcher:
         if (self._overlap and self._fut is None and i == self._next
                 and i < len(self._bounds)):
             self._fut_i = i
-            self._fut = self._pool.submit(self._prepare, *self._bounds[i])
+            self._tracer.instant("prefetch_kick", chunk=i)
+            self._fut = self._pool.submit(self._run_prepare, i, True)
 
     def get(self, i: int) -> Any:
         """Prepared payload for chunk i (blocks; stall time recorded)."""
@@ -332,8 +353,10 @@ class ChunkPrefetcher:
             out = self._fut.result()
             self._fut = None
         else:
-            out = self._prepare(*self._bounds[i])
-        self.stall_s += time.perf_counter() - t0
+            out = self._run_prepare(i, False)
+        t1 = time.perf_counter()
+        self.stall_s += t1 - t0
+        self._tracer.add_span("prep_stall", t0, t1, chunk=i)
         return out
 
     def close(self) -> None:
@@ -389,6 +412,7 @@ class LoopExecutor:
 def get_loop_executor(step: Callable) -> "LoopExecutor":
     """Executor cache keyed on the jitted step object (mirrors
     `get_executor`) so identical configs share one executor."""
+    retrace.bump(retrace.LOOP_EXEC_BUILD)   # lru MISS: a fresh executor
     return LoopExecutor(step)
 
 
@@ -414,6 +438,10 @@ class ScanExecutor:
         @functools.partial(jax.jit, donate_argnums=(0,),
                            static_argnums=(3,))
         def chunk(carry, ctl_stack, batch_stack, _unroll):
+            # trace-time side effect only: fires once per XLA compilation
+            # of this chunk program, never on cached executions
+            retrace.bump(retrace.CHUNK_TRACE)
+
             def body(c, xs):
                 ctl, batch = xs
                 return step(c, batch, ctl)
@@ -438,6 +466,7 @@ def get_executor(step: Callable, unroll: Optional[int] = None
     """Executor cache keyed on the step function object. Paired with the
     memoized `pairzero.make_zo_step`, identical configs share one compiled
     chunk program across fedsim.run invocations."""
+    retrace.bump(retrace.SCAN_EXEC_BUILD)   # lru MISS: a fresh executor
     return ScanExecutor(step, unroll=unroll)
 
 

@@ -42,12 +42,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro import byzantine as byz
 from repro import channel
+from repro import obs
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs.base import ModelConfig, PairZeroConfig
 from repro.core import engine as eng
 from repro.core import pairzero
 from repro.core import transport as tp
-from repro.core.dp import PrivacyAccountant
+from repro.core.dp import PrivacyAccountant, cumulative_spend
 from repro.data.pipeline import FederatedPipeline
 from repro.models import registry
 from repro.optim import fo as fo_opt
@@ -85,6 +86,15 @@ class RunResult:
     # chunk-boundary stall accounting (seconds over the whole run):
     prep_stall_s: float = 0.0        # driver blocked on host-side chunk prep
     ckpt_stall_s: float = 0.0        # driver blocked on checkpoint snapshots
+    # observability (repro.obs):
+    peak_bytes: int = 0              # device-memory watermark (0: no sampler)
+    # build/retrace counter deltas for this run (always recorded — a warm
+    # rerun of an identical config must show all zeros)
+    compile_stats: Dict[str, int] = field(default_factory=dict)
+    # [steps] cumulative Eq.-16 ledger after each executed round (the
+    # accountant's own float64 fold — dp.cumulative_spend); the audit CLI
+    # and the MetricsSink trilemma ledger read these same numbers
+    privacy_spent_per_round: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +186,8 @@ class CheckpointHook(RoundHook):
             exp.result.resumed_from = exp.start_round
         if self.cadence:
             self._saver = ckpt.AsyncCheckpointer(
-                self.directory, double_buffer=self.double_buffer)
+                self.directory, double_buffer=self.double_buffer,
+                tracer=exp.telemetry.tracer)
 
     def on_boundary(self, t_done: int, exp: "Experiment") -> None:
         if self._saver is not None and t_done % self.cadence == 0:
@@ -227,7 +238,8 @@ class Experiment:
                  mesh: Optional[Mesh] = None, overlap: bool = True,
                  adversary: Optional[Any] = None,
                  behavior: Optional[Any] = None,
-                 defense: Optional[Any] = None):
+                 defense: Optional[Any] = None,
+                 telemetry: Optional[obs.Telemetry] = None):
         if engine not in ("scan", "loop"):
             raise ValueError(
                 f"unknown engine: {engine!r} (want 'scan'|'loop')")
@@ -286,10 +298,23 @@ class Experiment:
                     "the FO baseline has no shard_map variant (it uploads "
                     "d-dimensional gradients, not a scalar) — run it "
                     "without mesh=")
+        # host-side observability (repro.obs): span timeline + memory
+        # watermark. The default is the inert bundle (NULL_TRACER, no
+        # sampler) — instrumentation sites are then no-op method calls and
+        # the traced program is the bit-exact historical one.
+        self.telemetry = telemetry if telemetry is not None \
+            else obs.Telemetry.off()
         # populated by run()/hooks
         self.result = RunResult()
         self.accountant = PrivacyAccountant(pz.dp.epsilon, pz.dp.delta)
         self.start_round = 0
+        # per-round observability state populated by run(): realized
+        # K_eff(t) per executed round (the ledger's bit accounting), and
+        # the accountant ledger position when the run started (restored
+        # checkpoints begin with spent > 0 and an empty history)
+        self.round_k_eff: List[float] = []
+        self.spent_at_start = 0.0
+        self.hist_at_start = 0
 
     # -- engine plumbing --------------------------------------------------
     def _build_step(self):
@@ -317,6 +342,9 @@ class Experiment:
     def run(self) -> RunResult:
         t0 = time.time()
         pz, result = self.pz, self.result
+        tr = self.telemetry.tracer
+        mem = self.telemetry.memory
+        compile_before = obs.retrace.snapshot()
         result.privacy_budget = self.accountant.budget
 
         # channel + transmit schedule (the base station's offline solve).
@@ -324,21 +352,31 @@ class Experiment:
         # invocation's `rounds`: Theorem 3/4 budget privacy across all T,
         # and a resumed run must replay the identical channel + schedule.
         horizon = max(pz.rounds, self.rounds)
-        ctrace = self.channel_model.realize(pz.seed ^ 0xC4A7, horizon,
-                                            pz.n_clients)
+        with tr.span("channel_realize", horizon=horizon):
+            ctrace = self.channel_model.realize(pz.seed ^ 0xC4A7, horizon,
+                                                pz.n_clients)
         # an active defense may fold its PHY constraint into the solve
         # (transmit clip => tightened Theorem-3/4 sensitivity)
-        schedule = self.transport.make_schedule(ctrace, pz) \
-            if self.defense is None \
-            else self.defense.make_schedule(self.transport, ctrace, pz)
+        with tr.span("schedule_solve", transport=self.transport.name):
+            schedule = self.transport.make_schedule(ctrace, pz) \
+                if self.defense is None \
+                else self.defense.make_schedule(self.transport, ctrace, pz)
         self.channel_trace, self.schedule = ctrace, schedule
         result.schedule, result.transport = schedule, self.transport
 
         if self.params is None:
-            self.params = registry.init_params(jax.random.key(pz.seed),
-                                               self.model_cfg, self.dtype)
+            with tr.span("params_init"):
+                self.params = registry.init_params(jax.random.key(pz.seed),
+                                                   self.model_cfg,
+                                                   self.dtype)
         for hook in self.hooks:
             hook.on_start(self)
+        # the accountant may have been replaced by a restoring hook; the
+        # ledger position NOW is what per-round spend curves fold from
+        self.spent_at_start = self.accountant.spent
+        self.hist_at_start = len(self.accountant.history)
+        if mem is not None:
+            mem.sample(self.start_round, tracer=tr)
         if self.mesh is not None:
             # FSDP placement over the client axes ('model' TP when present);
             # restored checkpoints land default-placed, so this reshards
@@ -369,18 +407,23 @@ class Experiment:
             self.pipeline,
             sharding_fn=(lambda like:
                          shd.chunk_batch_sharding(self.mesh, like))
-            if self.mesh is not None else None)
+            if self.mesh is not None else None,
+            tracer=tr)
 
         def prepare(a: int, b: int):
-            trace = eng.build_trace(schedule, pz, a, b,
-                                    transport=self.transport,
-                                    fault=self.fault, elastic=self.elastic,
-                                    channel=ctrace, ctl_sharding=ctl_shard,
-                                    behavior=self.behavior,
-                                    defense=self.defense)
+            with tr.span("ctl_build", t0=a, t1=b):
+                trace = eng.build_trace(schedule, pz, a, b,
+                                        transport=self.transport,
+                                        fault=self.fault,
+                                        elastic=self.elastic,
+                                        channel=ctrace,
+                                        ctl_sharding=ctl_shard,
+                                        behavior=self.behavior,
+                                        defense=self.defense)
             return trace, stager.stage(a, b)
 
-        prefetch = eng.ChunkPrefetcher(prepare, bounds, overlap=self.overlap)
+        prefetch = eng.ChunkPrefetcher(prepare, bounds,
+                                       overlap=self.overlap, tracer=tr)
 
         # Software-pipelined chunk loop: the metric sync for chunk i is
         # deferred until chunk i+1 has been *dispatched*, so both the
@@ -395,50 +438,66 @@ class Experiment:
                 return
             a0, n_rounds, metrics = pending
             pending = None
-            host = {k: np.asarray(v) for k, v in metrics.items()}
-            result.losses.extend(float(x) for x in host["loss"])
-            if "p_hat" in host:
-                result.p_hats.extend(float(x) for x in host["p_hat"])
-            for hook in self.hooks:
-                for r in range(n_rounds):
-                    hook.on_round(a0 + r, {k: v[r] for k, v in host.items()})
+            with tr.span("metrics_flush", t0=a0, rounds=n_rounds):
+                host = {k: np.asarray(v) for k, v in metrics.items()}
+                result.losses.extend(float(x) for x in host["loss"])
+                if "p_hat" in host:
+                    result.p_hats.extend(float(x) for x in host["p_hat"])
+                for hook in self.hooks:
+                    for r in range(n_rounds):
+                        hook.on_round(a0 + r,
+                                      {k: v[r] for k, v in host.items()})
 
         try:
             for i, (a, b) in enumerate(bounds):
-                trace, batches = prefetch.get(i)
-                n_ok = eng.affordable_rounds(self.accountant, trace)
-                if n_ok == 0:
-                    result.privacy_exhausted_at = a
-                    break
-                eng.charge_rounds(self.accountant, trace, n_ok)
-                # uplink accounting: only clients that actually transmit
-                # (survival mask 1) are billed their payload this round
-                client_rounds += float(trace.host_masks[:n_ok].sum())
-                if n_ok < b - a:  # guard trips mid-chunk: truncated dispatch
-                    batches = {k: v[:n_ok] for k, v in batches.items()}
-                carry, metrics = executor.run(carry, trace.rows(n_ok),
-                                              batches)
-                flush()           # sync chunk i-1 while chunk i runs
-                pending = (a, n_ok, metrics)
-                if self.engine == "loop":
-                    # per-round dispatch already synced each round — deliver
-                    # metrics/on_round immediately (live logging), nothing
-                    # to pipeline against.
-                    flush()
-                # chunk i-1 is now synced ⇒ its stager slot (shared with
-                # chunk i+1) is reusable: start the next prep
-                prefetch.kick(i + 1)
-                self.params = carry[0] if self.transport.kind == "fo" \
-                    else carry
-                t_done = a + n_ok
-                if n_ok < b - a:  # guard tripped mid-chunk: hard stop
-                    flush()
-                    result.privacy_exhausted_at = t_done
-                    break
-                for hook in self.hooks:
-                    hook.on_boundary(t_done, self)
+                with tr.span("chunk", chunk=i, t0=a, t1=b):
+                    trace, batches = prefetch.get(i)
+                    n_ok = eng.affordable_rounds(self.accountant, trace)
+                    if n_ok == 0:
+                        result.privacy_exhausted_at = a
+                        break
+                    eng.charge_rounds(self.accountant, trace, n_ok)
+                    # uplink accounting: only clients that actually
+                    # transmit (survival mask 1) are billed their payload
+                    # this round; the per-round K_eff view feeds the
+                    # trilemma ledger (obs.MetricsSink)
+                    k_rows = trace.host_masks[:n_ok].sum(axis=1)
+                    client_rounds += float(k_rows.sum())
+                    self.round_k_eff.extend(float(x) for x in k_rows)
+                    if n_ok < b - a:  # guard trips mid-chunk: truncate
+                        batches = {k: v[:n_ok] for k, v in batches.items()}
+                    with tr.span("dispatch", chunk=i, rounds=n_ok):
+                        carry, metrics = executor.run(carry,
+                                                      trace.rows(n_ok),
+                                                      batches)
+                    flush()       # sync chunk i-1 while chunk i runs
+                    pending = (a, n_ok, metrics)
+                    if self.engine == "loop":
+                        # per-round dispatch already synced each round —
+                        # deliver metrics/on_round immediately (live
+                        # logging), nothing to pipeline against.
+                        flush()
+                    # chunk i-1 is now synced ⇒ its stager slot (shared
+                    # with chunk i+1) is reusable: start the next prep
+                    prefetch.kick(i + 1)
+                    self.params = carry[0] if self.transport.kind == "fo" \
+                        else carry
+                    t_done = a + n_ok
+                    if n_ok < b - a:  # guard tripped mid-chunk: hard stop
+                        flush()
+                        result.privacy_exhausted_at = t_done
+                        break
+                    if mem is not None and mem.due(t_done):
+                        mem.sample(t_done, tracer=tr)
+                    with tr.span("hooks_boundary", t=t_done):
+                        for hook in self.hooks:
+                            hook.on_boundary(t_done, self)
         finally:
             prefetch.close()
+        # final watermark BEFORE the last flush: MetricsSink rows and
+        # result.peak_bytes then report the same peak
+        if mem is not None:
+            mem.sample(self.start_round + len(self.round_k_eff), tracer=tr)
         flush()
 
         for hook in self.hooks:
@@ -447,21 +506,29 @@ class Experiment:
                            if result.privacy_exhausted_at >= 0
                            else self.rounds - self.start_round)
         result.privacy_spent = self.accountant.spent
+        # the per-round ε ledger: the accountant's own charges for this
+        # run's executed rounds, folded with the identical float64 cumsum
+        # (uncharged transports: a flat curve at the starting ledger)
+        costs = np.asarray(
+            self.accountant.history[self.hist_at_start:], dtype=np.float64)
+        if costs.size != result.steps:
+            costs = np.zeros(result.steps, dtype=np.float64)
+        result.privacy_spent_per_round = cumulative_spend(
+            costs, initial=self.spent_at_start)
         # payload per transmitting client x Σ_t K_eff(t): dropped/silenced
         # clients send nothing, so they cost nothing; an active defense
         # scales the payload (re-transmission factors) and bills its own
-        # side-channel bits per executed round
-        bits = self.transport.payload_bits(pz, self.model_cfg.param_count()) \
-            * client_rounds
-        if self.defense is not None:
-            bits = bits * self.defense.payload_bits_factor(pz) \
-                + self.defense.extra_bits_per_round(
-                    pz, self.model_cfg.param_count()) * result.steps
-        result.uplink_bits = int(round(bits))
+        # side-channel bits per executed round. uplink_bits_total is the
+        # ONE accounting expression — the MetricsSink ledger calls it too.
+        result.uplink_bits = tp.uplink_bits_total(
+            self.transport, self.defense, pz, self.model_cfg.param_count(),
+            client_rounds, result.steps)
         result.prep_stall_s = prefetch.stall_s
         result.ckpt_stall_s = sum(
             hk._saver.stall_s for hk in self.hooks
             if isinstance(hk, CheckpointHook) and hk._saver is not None)
+        result.peak_bytes = mem.peak_bytes if mem is not None else 0
+        result.compile_stats = obs.retrace.since(compile_before)
         result.wall_time_s = time.time() - t0
         result.params = self.params
         return result
@@ -488,6 +555,7 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         behavior: Optional[Any] = None,
         defense: Optional[Any] = None,
         hooks: Sequence[RoundHook] = (),
+        telemetry: Optional[obs.Telemetry] = None,
         variant: Optional[str] = None,
         scheme: Optional[str] = None) -> RunResult:
     """Run T rounds of pAirZero (or a baseline transport) on one host.
@@ -501,7 +569,11 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
     capture — pair it with a `repro.privacy.AttackHook` in `hooks=` to
     collect the observations. `behavior=`/`defense=` (repro.byzantine)
     override the pz.byzantine config resolution with explicit instances —
-    the active-adversary scenario axis. `variant=`/`scheme=` are the
+    the active-adversary scenario axis. `telemetry=` (a
+    `repro.obs.Telemetry`) switches on the host-side span timeline and
+    device-memory watermark; pair it with a `repro.obs.MetricsSink` in
+    `hooks=` for the per-round trilemma ledger — all host-side, so the
+    trajectory is bitwise unchanged. `variant=`/`scheme=` are the
     DEPRECATED string spellings, routed through the transport registry for
     one more release — pass `transport=` or put a TransportConfig in
     `pz.transport` instead.
@@ -527,4 +599,4 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
                       fault=fault, elastic=elastic, impl=impl, dtype=dtype,
                       params=params, mesh=mesh, overlap=overlap,
                       adversary=adversary, behavior=behavior,
-                      defense=defense).run()
+                      defense=defense, telemetry=telemetry).run()

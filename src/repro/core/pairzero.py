@@ -32,6 +32,7 @@ from repro.configs.base import ModelConfig, PairZeroConfig
 from repro.core import transport as tp
 from repro.core import zo
 from repro.models import registry
+from repro.obs import retrace
 
 PyTree = Any
 
@@ -140,6 +141,7 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
     part of the memo key; None traces the historical program unchanged —
     Byzantine neutrality is structural, like the adversary's.
     """
+    retrace.bump(retrace.ZO_STEP_BUILD)     # lru MISS: a fresh step build
     loss_fn = make_loss_fn(model_cfg, impl=impl)
     transport = transport if transport is not None \
         else tp.resolve(pz, scheme=scheme)
@@ -303,6 +305,7 @@ def make_fo_step(model_cfg: ModelConfig, optimizer,
     audited FO on short horizons/small chunks and cap the host-side stream
     with `AttackHook(max_rounds=...)`.
     """
+    retrace.bump(retrace.FO_STEP_BUILD)     # lru MISS: a fresh step build
     loss_fn = make_loss_fn(model_cfg, impl=impl)
 
     def step(params: PyTree, opt_state: PyTree, batch: Dict, ctl: Dict
@@ -334,5 +337,15 @@ def jit_zo_step(step: Callable, donate: bool = True):
 
     Memoized so the same step object maps to the same jitted wrapper (and
     therefore the same XLA executable cache) across fedsim.run calls.
+
+    The wrapper's only addition over a bare `jax.jit(step)` is a Python
+    side effect at TRACE time (`retrace.STEP_TRACE`): it calls `step`
+    unchanged, so the jaxpr — and therefore the loop engine's trajectory —
+    is bit-identical to the historical direct jit.
     """
-    return jax.jit(step, donate_argnums=(0,) if donate else ())
+    @functools.wraps(step)
+    def traced(*args):
+        retrace.bump(retrace.STEP_TRACE)
+        return step(*args)
+
+    return jax.jit(traced, donate_argnums=(0,) if donate else ())

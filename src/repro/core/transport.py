@@ -222,6 +222,27 @@ class Transport:
         return pz.n_clients * self.payload_bits(pz, d)
 
 
+def uplink_bits_total(transport: "Transport", defense, pz, d: int,
+                      client_rounds: float, rounds: int) -> int:
+    """Total uplink spend for `rounds` executed rounds with Σ_t K_eff(t) =
+    `client_rounds` transmitting client-rounds: payload per transmitting
+    client times client-rounds, with a defense's payload factor and
+    side-channel bits billed on top.
+
+    This is THE uplink accounting expression — `fedsim.Experiment` and the
+    trilemma ledger (`repro.obs.MetricsSink`) both call it, in the same
+    operation order, so the ledger's cumulative bits land on the exact
+    `RunResult.uplink_bits` integer (per-client payloads and K_eff counts
+    are integer-valued, so the float64 products/sums are exact well past
+    any realistic horizon).
+    """
+    bits = transport.payload_bits(pz, d) * client_rounds
+    if defense is not None:
+        bits = bits * defense.payload_bits_factor(pz) \
+            + defense.extra_bits_per_round(pz, d) * rounds
+    return int(round(bits))
+
+
 def trace_magnitudes(trace) -> np.ndarray:
     """[T, K] channel magnitudes from a ChannelTrace or a bare array (the
     pre-channel-registry calling convention, kept working one release)."""

@@ -172,6 +172,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "(exit 1 if the audit ever exceeds it)")
     ap.add_argument("--audit-trials", type=int, default=1500,
                     help="paired canary traces for the eps_hat audit")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the host-side span timeline here as Chrome "
+                         "trace-event JSON (open in Perfetto / "
+                         "chrome://tracing): chunk prep/prefetch/stall, "
+                         "dispatch, metric flush, checkpoint snapshot "
+                         "spans, plus the run's compile/stall counters "
+                         "under otherData (see docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream the per-round trilemma ledger here as "
+                         "JSONL (schema trilemma_ledger/v1): one record "
+                         "per round with loss, uplink bits, cumulative "
+                         "(eps, delta) spend, and the peak device-memory "
+                         "watermark — machine-readable evidence for all "
+                         "three trilemma axes")
+    ap.add_argument("--obs-sample-every", type=int, default=32,
+                    help="device-memory sampling period (rounds) for the "
+                         "--trace-out/--metrics-out watermark; samples "
+                         "are taken at chunk boundaries, so cadence never "
+                         "changes chunk shapes")
     ap.add_argument("--out", default=None, help="write result JSON here")
     return ap
 
@@ -251,6 +270,16 @@ def main() -> None:
         attack_hook = pv.AttackHook(max_rounds=cap)
         extra_hooks = [attack_hook]
 
+    # observability (repro.obs): span timeline + memory watermark +
+    # trilemma ledger — host-side only, trajectory bitwise unchanged
+    telemetry = None
+    if args.trace_out or args.metrics_out:
+        from repro import obs
+        telemetry = obs.Telemetry.on(
+            memory_sample_every=args.obs_sample_every)
+        if args.metrics_out:
+            extra_hooks = extra_hooks + [obs.MetricsSink(args.metrics_out)]
+
     res = fedsim.run(cfg, pz, pipe, rounds=args.rounds,
                      engine=args.engine, chunk_rounds=args.chunk_rounds,
                      eval_every=args.eval_every,
@@ -259,7 +288,18 @@ def main() -> None:
                      fault=fault, elastic=elastic, dtype=jnp.float32,
                      mesh=mesh, overlap=not args.no_overlap,
                      adversary=adversary, hooks=extra_hooks,
-                     on_round=log)
+                     telemetry=telemetry, on_round=log)
+
+    if args.trace_out:
+        telemetry.tracer.export_chrome(args.trace_out, metadata={
+            "engine": args.engine,
+            "overlap": not args.no_overlap,
+            "prep_stall_s": res.prep_stall_s,
+            "ckpt_stall_s": res.ckpt_stall_s,
+            "peak_bytes": res.peak_bytes,
+            "compile_stats": res.compile_stats,
+        })
+        print(f"trace timeline -> {args.trace_out}", flush=True)
 
     audit_summary = None
     if args.audit:
@@ -283,6 +323,8 @@ def main() -> None:
         "wall_time_s": round(res.wall_time_s, 1),
         "prep_stall_s": round(res.prep_stall_s, 3),
         "ckpt_stall_s": round(res.ckpt_stall_s, 3),
+        "peak_bytes": res.peak_bytes,
+        "compile_stats": res.compile_stats,
         "resumed_from": res.resumed_from,
     }
     if audit_summary is not None:
@@ -324,9 +366,13 @@ def run_audit(pz, res, attack_hook, args) -> dict:
             "per_client_exposed": replay["per_client_exposed"],
         }
     if res.transport.canary_payload(pz) is not None:
+        # analytic side fed from the run's OWN accountant ledger (the
+        # per-round spend curve on RunResult) instead of re-deriving the
+        # spend from the schedule — one accounting, audit and ledger agree
         audit = pv.audit_transport(
             res.transport, res.schedule, pz,
-            rounds=max(res.steps, 1), trials=args.audit_trials)
+            rounds=max(res.steps, 1), trials=args.audit_trials,
+            spent=res.privacy_spent)
         out.update(audit.to_dict())
         verdict = "OK (eps_hat <= analytic)" if audit.dominated \
             else "VIOLATED"

@@ -1,0 +1,74 @@
+"""Observability: span timeline, compile/memory watermarks, trilemma ledger.
+
+Three pillars, all host-side and structurally neutral (telemetry off runs
+the bit-exact historical program — pinned in tests/test_obs.py):
+
+  1. **Span timeline** (`repro.obs.spans`) — a `Tracer` of nested
+     wall-clock spans instrumented into the driver (`fedsim.Experiment`),
+     `ChunkPrefetcher` kick/stall, chunk prep, `BatchStager`,
+     `AsyncCheckpointer` snapshot/write, schedule solves, dispatch and
+     metric flushes; exported as Chrome trace-event JSON
+     (`train.py --trace-out trace.json`, loadable in Perfetto). Per-chunk
+     stall spans use the SAME perf_counter endpoints as the legacy
+     `prep_stall_s`/`ckpt_stall_s` scalars, which are kept as derived
+     sums.
+  2. **Compilation & memory watermarks** (`repro.obs.retrace`,
+     `repro.obs.memory`) — build/retrace counters inside the memoized
+     step/executor factories (surfaced as `RunResult.compile_stats`; a
+     warm rerun must show zero) and periodic device-memory sampling at
+     chunk boundaries (`RunResult.peak_bytes`).
+  3. **Trilemma ledger** (`repro.obs.ledger`) — a `MetricsSink` round
+     hook streaming one JSONL record per round: loss, uplink bits
+     (the driver's own `transport.uplink_bits_total` accounting),
+     cumulative (ε, δ) spend, peak memory, wall time
+     (`train.py --metrics-out metrics.jsonl`).
+
+`Telemetry` bundles the per-run pieces; `Telemetry.off()` (the default
+everywhere) carries the shared no-op tracer and no sampler, so the
+instrumented call sites cost one no-op method call when disabled.
+tools/check_trace.py validates both artifact schemas in CI.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs import ledger, memory, retrace, spans
+from repro.obs.ledger import MetricsSink, final_row, read_ledger
+from repro.obs.memory import MemoryWatermark
+from repro.obs.spans import NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "Telemetry", "Tracer", "NullTracer", "NULL_TRACER", "MemoryWatermark",
+    "MetricsSink", "read_ledger", "final_row",
+    "ledger", "memory", "retrace", "spans",
+]
+
+
+class Telemetry:
+    """Per-run observability bundle: a tracer + an optional memory sampler.
+
+    Pass one to `fedsim.Experiment(telemetry=...)` / `fedsim.run(...)`.
+    The default (`Telemetry.off()`) is inert: the shared `NULL_TRACER`
+    and no memory sampling — the historical program, bit for bit.
+    """
+
+    def __init__(self, tracer: Optional[Tracer] = None,
+                 memory: Optional[MemoryWatermark] = None):
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.memory = memory
+
+    @property
+    def enabled(self) -> bool:
+        """Whether any pillar is live (tracer recording or sampler set)."""
+        return self.tracer.enabled or self.memory is not None
+
+    @classmethod
+    def on(cls, memory_sample_every: int = 32) -> "Telemetry":
+        """Full telemetry: recording tracer + memory watermark sampler."""
+        return cls(tracer=Tracer(),
+                   memory=MemoryWatermark(memory_sample_every))
+
+    @classmethod
+    def off(cls) -> "Telemetry":
+        """Inert telemetry (the default): no recording, no sampling."""
+        return cls()

@@ -1,0 +1,82 @@
+"""Device-memory watermark sampling (the trilemma's memory axis, per run).
+
+The paper's memory claim is inference-level footprint; the benchmarks
+measure it offline (`benchmarks/kernel_memory.py`). This module measures
+it *per run*: periodic samples of live device bytes at chunk boundaries,
+folded into a `peak_bytes` watermark surfaced on `RunResult` and in every
+trilemma-ledger row.
+
+Two sources, best first:
+
+  * `device.memory_stats()["peak_bytes_in_use"]` — the allocator's own
+    high-water mark, when the backend reports one (TPU/GPU; CPU returns
+    None);
+  * sum of `a.nbytes` over `jax.live_arrays()` — live-buffer bytes at the
+    sample instant (always available; an instantaneous view, so the
+    boundary cadence is what makes it a useful watermark).
+
+Sampling is host-side and read-only — it never touches the traced program
+(structural-neutrality pin: telemetry-off runs are bit-identical).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+
+from repro.obs import spans
+
+
+def live_buffer_bytes() -> int:
+    """Total bytes of all live jax arrays on this process's devices."""
+    total = 0
+    for a in jax.live_arrays():
+        try:
+            total += int(a.nbytes)
+        except Exception:  # deleted/donated buffers race the walk
+            continue
+    return total
+
+
+def device_peak_bytes() -> Optional[int]:
+    """Allocator high-water mark summed over devices, or None when the
+    backend (e.g. CPU) reports no memory stats."""
+    total, seen = 0, False
+    for dev in jax.devices():
+        stats = dev.memory_stats()
+        if stats and "peak_bytes_in_use" in stats:
+            total += int(stats["peak_bytes_in_use"])
+            seen = True
+    return total if seen else None
+
+
+class MemoryWatermark:
+    """Periodic device-memory sampler with a running peak.
+
+    `sample_every` is a round period gating `due(t)`; the driver samples
+    at chunk boundaries that cross it (cadence 0: sampling never realigns
+    chunk boundaries, so it can never change compiled chunk shapes).
+    """
+
+    def __init__(self, sample_every: int = 32):
+        self.sample_every = max(1, int(sample_every))
+        self.peak_bytes = 0
+        self.samples: List[Tuple[int, int]] = []   # (round, bytes)
+        self._last_t: Optional[int] = None
+
+    def due(self, t: int) -> bool:
+        """Whether round t crosses the sampling period since last sample."""
+        return self._last_t is None or t - self._last_t >= self.sample_every
+
+    def sample(self, t: int,
+               tracer: spans.Tracer = spans.NULL_TRACER) -> int:
+        """Take one sample at round t; returns the bytes observed and
+        advances the `peak_bytes` watermark (also emitted as a trace
+        counter event for the timeline view)."""
+        peak = device_peak_bytes()
+        b = peak if peak is not None else live_buffer_bytes()
+        self.peak_bytes = max(self.peak_bytes, b)
+        self.samples.append((int(t), int(b)))
+        self._last_t = int(t)
+        tracer.counter("device_bytes", b, round=int(t))
+        return b

@@ -1,0 +1,67 @@
+"""Process-wide compilation watermarks: build and retrace counters.
+
+The engines lean on two layers of memoization — `pairzero.make_zo_step`/
+`make_fo_step`/`jit_zo_step` (lru_cache over frozen configs) and
+`engine.get_executor`/`get_loop_executor` (lru_cache over step objects) —
+so a repeated config should compile exactly once per process. An
+accidental cache-key break (an unhashable field, a fresh wrapper per run)
+is silent: everything still works, 10x slower. These counters make it a
+test failure instead.
+
+Two kinds of event are counted, both as plain Python side effects:
+
+  * ``*_build``  — bumped inside the lru-cached factory bodies, so they
+    fire only on a cache MISS (a new step/executor object was built);
+  * ``*_trace``  — bumped inside the traced function bodies, so they fire
+    only while jax is TRACING (one per XLA compilation of that program;
+    cached executions never re-enter Python).
+
+`Experiment.run` snapshots the counters around each run and surfaces the
+delta as `RunResult.compile_stats`; a warm second run of an identical
+config must show an all-zero delta (tests/test_obs.py pins this, and
+tools/check_trace.py asserts the expected cold-run counts in CI).
+
+Counters are process-global and monotone (like jax's own compilation
+cache); consumers diff snapshots rather than resetting.
+"""
+from __future__ import annotations
+
+import threading
+from collections import Counter
+from typing import Dict
+
+# canonical event names (the tests and check_trace key on these)
+ZO_STEP_BUILD = "zo_step_build"        # make_zo_step cache miss
+FO_STEP_BUILD = "fo_step_build"        # make_fo_step cache miss
+LOOP_EXEC_BUILD = "loop_executor_build"  # get_loop_executor cache miss
+SCAN_EXEC_BUILD = "scan_executor_build"  # get_executor cache miss
+STEP_TRACE = "loop_step_trace"         # jitted per-round step retraced
+CHUNK_TRACE = "scan_chunk_trace"       # scanned chunk program retraced
+
+CANONICAL = (ZO_STEP_BUILD, FO_STEP_BUILD, LOOP_EXEC_BUILD,
+             SCAN_EXEC_BUILD, STEP_TRACE, CHUNK_TRACE)
+
+_LOCK = threading.Lock()
+_COUNTS: Counter = Counter()
+
+
+def bump(name: str, n: int = 1) -> None:
+    """Increment a counter (called from factory bodies / trace time)."""
+    with _LOCK:
+        _COUNTS[name] += n
+
+
+def snapshot() -> Dict[str, int]:
+    """Current value of every counter (copy)."""
+    with _LOCK:
+        return dict(_COUNTS)
+
+
+def since(before: Dict[str, int]) -> Dict[str, int]:
+    """Per-counter delta vs an earlier `snapshot()`. Every CANONICAL
+    counter is always present (plus any ad-hoc names seen in either
+    snapshot), so 'no retrace happened' is an explicit, assertable
+    {…: 0} rather than a missing key."""
+    now = snapshot()
+    keys = set(now) | set(before) | set(CANONICAL)
+    return {k: now.get(k, 0) - before.get(k, 0) for k in sorted(keys)}

@@ -210,7 +210,8 @@ def paired_trace_statistics(transport, schedule, canary: float, *,
 
 def audit_transport(transport, schedule, pz, *, rounds: Optional[int] = None,
                     trials: int = 2000, confidence: float = 0.95,
-                    thresholds: int = 9, seed: int = 0xA0D17
+                    thresholds: int = 9, seed: int = 0xA0D17,
+                    spent: Optional[float] = None
                     ) -> AuditResult:
     """Audit one (transport, realized schedule) pair; ε̂ vs the analytic ε.
 
@@ -218,13 +219,24 @@ def audit_transport(transport, schedule, pz, *, rounds: Optional[int] = None,
     stop means later rounds never transmitted — they cost nothing and leak
     nothing). The threshold grid is Bonferroni-corrected, so ε̂ stays a
     valid lower bound at `confidence` despite the post-hoc max.
+
+    `spent` feeds the analytic side directly from a run's accountant
+    ledger (`RunResult.privacy_spent` / `privacy_spent_per_round[-1]`) so
+    the audit and the trilemma ledger read the same numbers; None keeps
+    the standalone behaviour of re-deriving the Eq.-16 sum from the
+    schedule (identical for a clean full-horizon run — the accountant
+    charges exactly these per-round costs).
     """
     rounds = int(schedule.c.shape[0] if rounds is None else rounds)
     canary = transport.canary_payload(pz)
     delta = pz.dp.delta
-    charged = transport.charges_privacy(schedule, pz)
-    spent = float(np.sum(transport.round_dp_costs(schedule, 0, rounds, pz))) \
-        if charged else 0.0
+    if spent is None:
+        charged = transport.charges_privacy(schedule, pz)
+        spent = float(np.sum(
+            transport.round_dp_costs(schedule, 0, rounds, pz))) \
+            if charged else 0.0
+    else:
+        spent = float(spent)
     if canary is None:
         # no DP mechanism → nothing to audit; ε̂ = ∞ is the honest verdict
         # for an uplink that exposes payloads exactly (digital/fo)

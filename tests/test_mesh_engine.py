@@ -183,6 +183,37 @@ def test_mesh_byzantine_noise_behavior_bitwise(tiny_model, make_pz,
 
 
 # ---------------------------------------------------------------------------
+# Telemetry neutrality on the mesh lane
+# ---------------------------------------------------------------------------
+
+def test_mesh_telemetry_is_numerically_passive(tiny_model, make_pz,
+                                               make_pipeline, mesh8,
+                                               tmp_path):
+    """Telemetry ON (tracer + sampler + trilemma ledger) under an 8-way
+    client mesh vs the default OFF: losses, p_hats, and privacy spend stay
+    bitwise identical, and the ledger's final row equals the mesh run's
+    own RunResult accounting exactly."""
+    from repro import obs
+    pz = make_pz(scheme="solution", rounds=6, n_clients=8)
+    pipe = lambda: make_pipeline(vocab=tiny_model.vocab_size, n_clients=8,
+                                 batch=2, seq=16)
+    ref = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                     chunk_rounds=4, mesh=mesh8)
+    ledger = str(tmp_path / "mesh_metrics.jsonl")
+    res = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
+                     chunk_rounds=4, mesh=mesh8,
+                     telemetry=obs.Telemetry.on(memory_sample_every=2),
+                     hooks=[obs.MetricsSink(ledger)])
+    assert res.losses == ref.losses
+    assert res.p_hats == ref.p_hats
+    assert res.privacy_spent == ref.privacy_spent
+    final = obs.final_row(ledger)
+    assert final["bits_cum"] == res.uplink_bits
+    assert final["dp_spent_cum"] == res.privacy_spent
+    assert final["peak_bytes"] == res.peak_bytes > 0
+
+
+# ---------------------------------------------------------------------------
 # The collective is real: all-reduce in the compiled HLO
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,345 @@
+"""Telemetry subsystem: neutrality, span invariants, ledger exactness.
+
+The contracts under test, in order of importance:
+
+  1. NEUTRALITY — telemetry off (the default) runs the bit-exact
+     historical program on both engines, and telemetry ON is passive:
+     attaching a tracer, memory sampler, and MetricsSink never changes a
+     loss, a p_hat, or the privacy spend.
+  2. EXACTNESS — the span timeline is the single source of truth for
+     host stalls (span sums equal the legacy scalars), and the trilemma
+     ledger's final row equals RunResult's accounting EXACTLY (one
+     accounting, not two).
+  3. WATERMARKS — RunResult.compile_stats counts step/executor builds:
+     a never-seen config trips the counters, a warm rerun shows all
+     zeros (retrace regression pin), and peak_bytes is a real watermark.
+  4. ARTIFACTS — the exported Chrome trace + JSONL ledger pass
+     tools/check_trace.py, the CI gate, end to end.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro import obs
+from repro.core import dp, fedsim
+from repro.core import transport as tp
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(cfg, pz, make_pipeline, *, rounds, engine="scan", chunk=3, **kw):
+    pipe = make_pipeline(vocab=cfg.vocab_size, n_clients=pz.n_clients,
+                         batch=2, seq=16)
+    return fedsim.run(cfg, pz, pipe, rounds=rounds, engine=engine,
+                      chunk_rounds=chunk, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Tracer unit behavior
+# ---------------------------------------------------------------------------
+
+def test_tracer_span_nesting_and_exactness():
+    tr = obs.Tracer()
+    with tr.span("outer", which=1):
+        with tr.span("inner"):
+            pass
+    t0 = time.perf_counter()
+    t1 = t0 + 0.25
+    tr.add_span("measured", t0, t1, chunk=7)
+    tr.instant("mark", chunk=7)
+    tr.counter("bytes", 123.0)
+
+    spans = tr.spans()
+    assert [s["name"] for s in spans] == ["inner", "outer", "measured"]
+    inner, outer, measured = spans
+    # context-manager spans nest: inner contained in outer
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-9
+    # add_span reports the caller's endpoints verbatim
+    assert measured["dur"] == pytest.approx(0.25, abs=0)
+    assert measured["args"] == {"chunk": 7}
+    assert tr.total_s("measured") == measured["dur"]
+    kinds = {e["ph"] for e in tr.events()}
+    assert kinds == {"X", "i", "C"}
+
+
+def test_tracer_export_chrome_schema(tmp_path):
+    tr = obs.Tracer()
+    with tr.span("work"):
+        pass
+    tr.instant("kick", chunk=0)
+    out = tmp_path / "trace.json"
+    tr.export_chrome(str(out), metadata={"prep_stall_s": 0.0})
+    doc = json.loads(out.read_text())
+    assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+    assert doc["otherData"] == {"prep_stall_s": 0.0}
+    phases = {e["ph"] for e in doc["traceEvents"]}
+    assert {"M", "X", "i"} <= phases
+    for e in doc["traceEvents"]:
+        assert {"name", "ph", "pid", "tid"} <= set(e)
+        if e["ph"] != "M":
+            assert "ts" in e          # µs since the tracer epoch
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+
+
+def test_null_tracer_is_inert(tmp_path):
+    nt = obs.NULL_TRACER
+    assert not nt.enabled
+    with nt.span("anything", x=1):
+        nt.add_span("a", 0.0, 1.0)
+        nt.instant("b")
+        nt.counter("c", 1.0)
+    assert nt.events() == []
+    out = tmp_path / "never.json"
+    nt.export_chrome(str(out))
+    assert not out.exists()
+    assert obs.Telemetry.off().enabled is False
+    assert obs.Telemetry.on().enabled is True
+
+
+def test_retrace_since_keeps_zero_entries():
+    before = obs.retrace.snapshot()
+    obs.retrace.bump(obs.retrace.ZO_STEP_BUILD)
+    delta = obs.retrace.since(before)
+    assert delta[obs.retrace.ZO_STEP_BUILD] == 1
+    # zero entries stay present so tests can assert "== 0" directly
+    assert delta[obs.retrace.CHUNK_TRACE] == 0
+    assert delta[obs.retrace.SCAN_EXEC_BUILD] == 0
+
+
+# ---------------------------------------------------------------------------
+# 1. Neutrality: telemetry never changes the program's numbers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["loop", "scan"])
+def test_telemetry_is_numerically_passive(tiny_model, make_pz,
+                                          make_pipeline, tmp_path, engine):
+    """Telemetry ON (tracer + sampler + ledger sink) vs the default OFF:
+    identical losses, p_hats, and privacy spend, bit for bit."""
+    pz = make_pz(scheme="solution", rounds=6)
+    ref = _run(tiny_model, pz, make_pipeline, rounds=6, engine=engine)
+    sink = obs.MetricsSink(str(tmp_path / "m.jsonl"))
+    res = _run(tiny_model, pz, make_pipeline, rounds=6, engine=engine,
+               telemetry=obs.Telemetry.on(memory_sample_every=2),
+               hooks=[sink])
+    assert res.losses == ref.losses
+    assert res.p_hats == ref.p_hats
+    assert res.privacy_spent == ref.privacy_spent
+    # and the observability side really ran
+    assert res.peak_bytes > 0
+    assert sink.rows_written() == 6
+
+
+def test_telemetry_off_records_nothing(tiny_model, make_pz, make_pipeline):
+    pz = make_pz(scheme="solution", rounds=4)
+    res = _run(tiny_model, pz, make_pipeline, rounds=4)
+    assert res.peak_bytes == 0            # no sampler attached
+
+
+# ---------------------------------------------------------------------------
+# 2a. Span invariants on a real run
+# ---------------------------------------------------------------------------
+
+def test_span_timeline_invariants(tiny_model, make_pz, make_pipeline):
+    """9 rounds / chunk 3: prefetch kick for chunk i fires inside chunk
+    i-1's driver span, the kicked prep starts at/after its kick, and the
+    prep_stall span sum IS RunResult.prep_stall_s."""
+    pz = make_pz(scheme="solution", rounds=9)
+    tel = obs.Telemetry.on()
+    res = _run(tiny_model, pz, make_pipeline, rounds=9, chunk=3,
+               telemetry=tel)
+    tr = tel.tracer
+
+    chunks = {s["args"]["chunk"]: s for s in tr.spans("chunk")}
+    assert sorted(chunks) == [0, 1, 2]
+    kicks = {e["args"]["chunk"]: e["ts"] for e in tr.events()
+             if e["ph"] == "i" and e["name"] == "prefetch_kick"}
+    assert kicks, "overlap on but no prefetch kicks recorded"
+    for i, ts in kicks.items():
+        prev = chunks[i - 1]
+        assert prev["ts"] <= ts <= prev["ts"] + prev["dur"], \
+            f"kick {i} fired outside chunk {i - 1}'s span"
+    for s in tr.spans("chunk_prep"):
+        if s["args"].get("kicked"):
+            i = s["args"]["chunk"]
+            assert s["ts"] >= kicks[i] - 1e-6
+
+    # exactness: the scalar is the span-derived sum
+    assert tr.total_s("prep_stall") == pytest.approx(res.prep_stall_s,
+                                                     abs=1e-9)
+    # one dispatch span per chunk, nested inside its chunk span
+    for s in tr.spans("dispatch"):
+        c = chunks[s["args"]["chunk"]]
+        assert c["ts"] <= s["ts"]
+        assert s["ts"] + s["dur"] <= c["ts"] + c["dur"] + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# 2b. Ledger exactness: one accounting, not two
+# ---------------------------------------------------------------------------
+
+def test_ledger_matches_runresult_exactly(tiny_model, make_pz,
+                                          make_pipeline, tmp_path):
+    pz = make_pz(scheme="solution", rounds=8)
+    path = str(tmp_path / "metrics.jsonl")
+    tel = obs.Telemetry.on(memory_sample_every=2)
+    res = _run(tiny_model, pz, make_pipeline, rounds=8, chunk=3,
+               telemetry=tel, hooks=[obs.MetricsSink(path)])
+
+    led = obs.read_ledger(path)
+    rows = led["rows"]
+    assert led["header"]["schema"] == "trilemma_ledger/v1"
+    assert led["header"]["n_clients"] == pz.n_clients
+    assert len(rows) == res.steps == 8
+
+    final = rows[-1]
+    assert final["bits_cum"] == res.uplink_bits            # exact int
+    assert final["dp_spent_cum"] == res.privacy_spent      # bit-exact fold
+    assert final["peak_bytes"] == res.peak_bytes
+    assert obs.final_row(path) == final
+
+    # per-round loss column is the run's loss trajectory verbatim
+    assert [r["loss"] for r in rows] == res.losses
+    # cumulative columns never decrease; rounds strictly increase
+    for a, b in zip(rows, rows[1:]):
+        assert b["round"] == a["round"] + 1
+        assert b["bits_cum"] >= a["bits_cum"]
+        assert b["dp_spent_cum"] >= a["dp_spent_cum"]
+        assert b["eps_cum"] >= a["eps_cum"]
+    # bits_round re-sums to bits_cum
+    assert sum(r["bits_round"] for r in rows) == final["bits_cum"]
+
+
+def test_ledger_bits_equal_transport_accounting(tiny_model, make_pz,
+                                                make_pipeline, tmp_path):
+    """Full participation, no defense: the ledger's uplink column is
+    exactly Transport.bits_per_round summed over executed rounds."""
+    pz = make_pz(scheme="solution", rounds=6)
+    path = str(tmp_path / "m.jsonl")
+    res = _run(tiny_model, pz, make_pipeline, rounds=6,
+               telemetry=obs.Telemetry.on(), hooks=[obs.MetricsSink(path)])
+    transport = tp.resolve(pz)
+    d = tiny_model.param_count()
+    per_round = transport.bits_per_round(pz, d)
+    rows = obs.read_ledger(path)["rows"]
+    assert all(r["bits_round"] == per_round for r in rows)
+    assert rows[-1]["bits_cum"] == per_round * 6 == res.uplink_bits
+
+
+def test_privacy_spent_per_round(tiny_model, make_pz, make_pipeline):
+    pz = make_pz(scheme="solution", rounds=7)
+    res = _run(tiny_model, pz, make_pipeline, rounds=7)
+    spend = res.privacy_spent_per_round
+    assert spend is not None and len(spend) == res.steps == 7
+    assert all(b >= a for a, b in zip(spend, spend[1:]))
+    assert spend[-1] == res.privacy_spent
+    # the canonical fold reproduces it from the accountant's history
+    costs = [spend[0]] + [b - a for a, b in zip(spend, spend[1:])]
+    re_fold = dp.cumulative_spend(costs)
+    assert re_fold[-1] == pytest.approx(spend[-1])
+
+
+# ---------------------------------------------------------------------------
+# 3. Compile watermarks: cold build trips the counters, warm rerun is zero
+# ---------------------------------------------------------------------------
+
+def test_retrace_counts_cold_build_then_zero_warm(tiny_model, make_pz,
+                                                  make_pipeline):
+    """A never-before-seen config (distinctive mu) must build exactly one
+    step + one scan executor + one chunk trace; the identical rerun hits
+    every cache and reports ALL ZEROS while staying bitwise identical."""
+    pz = make_pz(scheme="solution", rounds=6)
+    pz = dataclasses.replace(pz, zo=dataclasses.replace(pz.zo, mu=1.23e-3))
+    cold = _run(tiny_model, pz, make_pipeline, rounds=6, chunk=3)
+    assert cold.compile_stats["zo_step_build"] == 1
+    assert cold.compile_stats["scan_executor_build"] == 1
+    assert cold.compile_stats["scan_chunk_trace"] == 1
+
+    warm = _run(tiny_model, pz, make_pipeline, rounds=6, chunk=3)
+    assert all(v == 0 for v in warm.compile_stats.values()), \
+        f"warm rerun recompiled: {warm.compile_stats}"
+    assert warm.losses == cold.losses
+
+
+def test_memory_watermark_samples(tiny_model, make_pz, make_pipeline):
+    pz = make_pz(scheme="solution", rounds=6)
+    tel = obs.Telemetry.on(memory_sample_every=2)
+    res = _run(tiny_model, pz, make_pipeline, rounds=6, chunk=3,
+               telemetry=tel)
+    wm = tel.memory
+    assert res.peak_bytes == wm.peak_bytes > 0
+    # initial sample + >=1 boundary sample + final sample
+    assert len(wm.samples) >= 3
+    assert max(b for _, b in wm.samples) == wm.peak_bytes
+    # sampling surfaced as counter events on the timeline
+    counters = [e for e in tel.tracer.events()
+                if e["ph"] == "C" and e["name"] == "device_bytes"]
+    assert len(counters) == len(wm.samples)
+
+
+# ---------------------------------------------------------------------------
+# 4. The artifacts pass the CI gate end to end
+# ---------------------------------------------------------------------------
+
+def test_artifacts_pass_check_trace(tiny_model, make_pz, make_pipeline,
+                                    tmp_path):
+    pz = make_pz(scheme="solution", rounds=9)
+    trace = tmp_path / "trace.json"
+    ledger = tmp_path / "metrics.jsonl"
+    summary = tmp_path / "run.json"
+
+    tel = obs.Telemetry.on(memory_sample_every=4)
+    res = _run(tiny_model, pz, make_pipeline, rounds=9, chunk=3,
+               telemetry=tel, hooks=[obs.MetricsSink(str(ledger))])
+    tel.tracer.export_chrome(str(trace), metadata={
+        "engine": "scan", "overlap": True,
+        "prep_stall_s": res.prep_stall_s,
+        "ckpt_stall_s": res.ckpt_stall_s,
+        "peak_bytes": res.peak_bytes,
+        "compile_stats": res.compile_stats})
+    summary.write_text(json.dumps({
+        "rounds": res.steps, "uplink_bits": res.uplink_bits,
+        "privacy_spent": res.privacy_spent,
+        "peak_bytes": res.peak_bytes}))
+
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_trace.py"),
+         str(trace), "--ledger", str(ledger), "--summary", str(summary)],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "check_trace: OK" in proc.stdout
+
+
+def test_check_trace_rejects_broken_ledger(tiny_model, make_pz,
+                                           make_pipeline, tmp_path):
+    """The gate actually gates: corrupt the final bits_cum and the
+    summary cross-check must fail."""
+    pz = make_pz(scheme="solution", rounds=4)
+    trace, ledger = tmp_path / "t.json", tmp_path / "m.jsonl"
+    tel = obs.Telemetry.on()
+    res = _run(tiny_model, pz, make_pipeline, rounds=4, chunk=2,
+               telemetry=tel, hooks=[obs.MetricsSink(str(ledger))])
+    tel.tracer.export_chrome(str(trace), metadata={
+        "prep_stall_s": res.prep_stall_s})
+    lines = ledger.read_text().splitlines()
+    last = json.loads(lines[-1])
+    last["bits_cum"] += 1
+    lines[-1] = json.dumps(last)
+    ledger.write_text("\n".join(lines) + "\n")
+    summary = tmp_path / "s.json"
+    summary.write_text(json.dumps({
+        "rounds": res.steps, "uplink_bits": res.uplink_bits,
+        "privacy_spent": res.privacy_spent,
+        "peak_bytes": res.peak_bytes}))
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_trace.py"),
+         str(trace), "--ledger", str(ledger), "--summary", str(summary)],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 1
+    assert "bits_cum" in proc.stdout

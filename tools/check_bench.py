@@ -3,9 +3,12 @@
     python tools/check_bench.py BENCH_engine.json --min-speedup 1.3
     python tools/check_bench.py BENCH_kernels.json --kernels
 
-Default mode (BENCH_engine.json, schema "bench_engine/v1") checks, in order:
-  1. schema shape: required top-level keys, grid rows, overlap breakdown —
-     a benchmark refactor that silently changes the artifact fails here;
+Default mode (BENCH_engine.json, schema "bench_engine/v2") checks, in order:
+  1. schema shape: required top-level keys (including `spans_version` —
+     since v2 the overlap stall numbers are sums over the run's
+     repro.obs span timeline, not ad-hoc counters), grid rows, overlap
+     breakdown — a benchmark refactor that silently changes the artifact
+     fails here;
   2. correctness: every engine row is bit-identical to the loop engine;
   3. performance gates:
        - scan speedup_vs_loop >= --min-speedup at --gate-size (default
@@ -45,8 +48,8 @@ import argparse
 import json
 import sys
 
-REQUIRED_TOP = ("schema", "created_unix", "host", "config", "sizes",
-                "grid", "overlap")
+REQUIRED_TOP = ("schema", "spans_version", "created_unix", "host",
+                "config", "sizes", "grid", "overlap")
 REQUIRED_ROW = ("size", "engine", "rounds_per_s", "speedup_vs_loop",
                 "bit_identical_to_loop", "mesh")
 ENGINES = ("loop", "scan", "scan_mesh")
@@ -214,8 +217,12 @@ def main() -> None:
     for key in REQUIRED_TOP:
         if key not in rep:
             fail(f"missing top-level key {key!r}")
-    if rep["schema"] != "bench_engine/v1":
+    if rep["schema"] != "bench_engine/v2":
         fail(f"unknown schema {rep['schema']!r}")
+    if not (isinstance(rep["spans_version"], int)
+            and rep["spans_version"] >= 1):
+        fail(f"spans_version must be a positive int, got "
+             f"{rep['spans_version']!r}")
     if not isinstance(rep["grid"], list) or not rep["grid"]:
         fail("empty grid")
     for row in rep["grid"]:
@@ -229,13 +236,18 @@ def main() -> None:
                 and row["rounds_per_s"] > 0):
             fail(f"non-positive rounds_per_s in {row}")
     ov = rep["overlap"]
-    for section, keys in (("prefetch", ("on", "off")),
-                          ("checkpoint", ("double_buffer", "sync"))):
+    for section, keys, span_key in (
+            ("prefetch", ("on", "off"), "prep_stall_spans"),
+            ("checkpoint", ("double_buffer", "sync"),
+             "ckpt_snapshot_spans")):
         if section not in ov:
             fail(f"overlap missing {section!r}")
         for k in keys:
             if k not in ov[section]:
                 fail(f"overlap.{section} missing {k!r}")
+            if span_key not in ov[section][k]:
+                fail(f"overlap.{section}.{k} missing {span_key!r} — "
+                     "v2 stall numbers must be span-derived")
     for name, meta in rep["sizes"].items():
         if "param_count" not in meta:
             fail(f"sizes[{name!r}] missing param_count")

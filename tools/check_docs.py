@@ -8,9 +8,10 @@ Checks, in order:
      REGEX over the source, never by importing the modules (dryrun.py
      sets XLA_FLAGS at import time to emulate a multi-device host, which
      would poison this process's jax).
-  2. Module docstrings — the five documented public modules
+  2. Module docstrings — the documented public modules
      (repro, repro.core.transport, repro.channel, repro.privacy,
-     repro.kernels) carry a module docstring and every public top-level
+     repro.byzantine, repro.kernels, repro.obs) carry a module
+     docstring and every public top-level
      class/function (and public method of a public class) carries one.
      AST-based: no imports, works without ruff (CI additionally runs
      ruff's pydocstyle rules on the same files — see pyproject.toml).
@@ -38,6 +39,7 @@ DOCSTRING_MODULES = (
     "src/repro/privacy/__init__.py",
     "src/repro/byzantine/__init__.py",
     "src/repro/kernels/__init__.py",
+    "src/repro/obs/__init__.py",
 )
 
 FLAG_RE = re.compile(r"add_argument\(\s*\n?\s*\"(--[a-z0-9][a-z0-9-]*)\"")

@@ -1,0 +1,259 @@
+"""Telemetry artifact gate: trace-event JSON + trilemma ledger schemas.
+
+    python tools/check_trace.py trace.json [--ledger metrics.jsonl]
+        [--summary run.json] [--expect-chunk-traces N]
+        [--expect-step-builds N] [--stall-tol 1e-3]
+
+Checks, in order:
+  1. Trace structure — Chrome trace-event JSON ({traceEvents, otherData});
+     every event carries ph/name/pid/tid/ts, complete ("X") events a
+     non-negative dur, and the driver's core span names are present
+     (chunk, dispatch, chunk_prep, prep_stall, metrics_flush).
+  2. Nesting — per thread lane, "X" spans are properly nested (contained
+     or disjoint, never partially overlapping): the tracer records via
+     nested context managers, so a violation means a broken clock.
+  3. Stall attribution — the sum of prep_stall (and ckpt_snapshot) span
+     durations equals otherData's legacy prep_stall_s/ckpt_stall_s
+     counters within --stall-tol seconds (default 1ms): spans are the
+     single source of truth, the scalars its derived sums.
+  4. Prefetch overlap — when otherData.overlap is true, every kicked
+     chunk_prep span for chunk i starts at/after its prefetch_kick
+     instant, and that kick fires inside chunk i-1's driver span: the
+     pipeline's next-chunk prep really overlaps the current chunk.
+  5. Compile watermarks — with --expect-chunk-traces/--expect-step-builds,
+     otherData.compile_stats must match exactly (a CI cold run compiles a
+     known number of programs; more means a cache-key break).
+  6. Ledger (--ledger) — line 1 is the trilemma_ledger/v1 header; every
+     row carries the full record schema; rounds strictly increase and the
+     cumulative columns (bits_cum, dp_spent_cum, eps_cum) never decrease.
+  7. Summary cross-check (--summary, needs --ledger) — the final row's
+     bits_cum / dp_spent_cum / peak_bytes equal the run summary's
+     uplink_bits / privacy_spent / peak_bytes EXACTLY, and the row count
+     equals the executed rounds: the ledger and RunResult are one
+     accounting, not two.
+Exit code 0 on pass; 1 with every violation listed on failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+REQUIRED_SPANS = ("chunk", "dispatch", "chunk_prep", "prep_stall",
+                  "metrics_flush")
+LEDGER_SCHEMA = "trilemma_ledger/v1"
+LEDGER_KEYS = ("round", "loss", "k_eff", "bits_round", "bits_cum",
+               "dp_cost", "dp_spent_cum", "eps_cum", "peak_bytes",
+               "wall_s")
+
+
+def _spans(events, name=None):
+    return [e for e in events if e.get("ph") == "X"
+            and (name is None or e.get("name") == name)]
+
+
+def check_trace(doc, errors, stall_tol):
+    """Checks 1-4 over a parsed trace document; appends to `errors`."""
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        errors.append("trace: not a trace-event document "
+                      "(missing traceEvents)")
+        return
+    events = doc["traceEvents"]
+    meta = doc.get("otherData", {})
+    if not isinstance(meta, dict):
+        errors.append("trace: otherData must be an object")
+        meta = {}
+
+    # 1. structure ------------------------------------------------------
+    for i, e in enumerate(events):
+        keys = ("ph", "name", "pid", "tid") if e.get("ph") == "M" \
+            else ("ph", "name", "pid", "tid", "ts")
+        for key in keys:
+            if key not in e:
+                errors.append(f"trace: event {i} missing {key!r}")
+        if e.get("ph") == "X" and not (e.get("dur", -1) >= 0):
+            errors.append(f"trace: X event {i} ({e.get('name')}) has no "
+                          "non-negative dur")
+    names = {e.get("name") for e in events}
+    for want in REQUIRED_SPANS:
+        if want not in names:
+            errors.append(f"trace: required span {want!r} absent")
+
+    # 2. nesting per thread lane ---------------------------------------
+    lanes = defaultdict(list)
+    for e in _spans(events):
+        lanes[e["tid"]].append((float(e["ts"]), float(e["ts"]) +
+                                float(e.get("dur", 0)), e["name"]))
+    eps = 1.0  # µs slack for equal perf_counter quanta
+    for tid, spans in lanes.items():
+        spans.sort(key=lambda s: (s[0], -(s[1] - s[0])))
+        stack = []
+        for (a, b, nm) in spans:
+            while stack and a >= stack[-1][1] - eps:
+                stack.pop()
+            if stack and b > stack[-1][1] + eps:
+                errors.append(
+                    f"trace: span {nm!r} [{a:.1f}, {b:.1f}] partially "
+                    f"overlaps {stack[-1][2]!r} [{stack[-1][0]:.1f}, "
+                    f"{stack[-1][1]:.1f}] on tid {tid}")
+                continue
+            stack.append((a, b, nm))
+
+    # 3. stall attribution ---------------------------------------------
+    for span_name, scalar in (("prep_stall", "prep_stall_s"),
+                              ("ckpt_snapshot", "ckpt_stall_s")):
+        if scalar not in meta:
+            continue
+        total = sum(e["dur"] for e in _spans(events, span_name)) * 1e-6
+        want = float(meta[scalar])
+        if abs(total - want) > stall_tol:
+            errors.append(
+                f"trace: Σ {span_name} spans = {total:.6f}s but "
+                f"otherData.{scalar} = {want:.6f}s "
+                f"(tol {stall_tol}s) — the scalar is no longer the "
+                "span-derived sum")
+
+    # 4. prefetch overlap ----------------------------------------------
+    if meta.get("overlap"):
+        kicks = {e["args"]["chunk"]: float(e["ts"]) for e in events
+                 if e.get("ph") == "i" and e.get("name") == "prefetch_kick"}
+        chunks = {e["args"]["chunk"]:
+                  (float(e["ts"]), float(e["ts"]) + float(e["dur"]))
+                  for e in _spans(events, "chunk")}
+        kicked = [e for e in _spans(events, "chunk_prep")
+                  if e.get("args", {}).get("kicked")]
+        if not kicked and len(chunks) > 1:
+            errors.append("trace: overlap on but no kicked chunk_prep "
+                          "spans recorded")
+        for e in kicked:
+            i = e["args"]["chunk"]
+            ts = float(e["ts"])
+            if i in kicks and ts < kicks[i] - eps:
+                errors.append(f"trace: chunk_prep {i} starts before its "
+                              "prefetch_kick")
+            prev = chunks.get(i - 1)
+            if i in kicks and prev and not \
+                    (prev[0] - eps <= kicks[i] <= prev[1] + eps):
+                errors.append(
+                    f"trace: prefetch_kick {i} at {kicks[i]:.1f} fired "
+                    f"outside chunk {i - 1}'s span {prev} — prep does "
+                    "not overlap the previous chunk")
+    return meta
+
+
+def check_compile(meta, args, errors):
+    """Check 5: exact compile-count assertions vs otherData."""
+    stats = meta.get("compile_stats", {})
+    for flag, key in ((args.expect_chunk_traces, "scan_chunk_trace"),
+                      (args.expect_step_builds, "zo_step_build")):
+        if flag is None:
+            continue
+        got = int(stats.get(key, 0))
+        if got != flag:
+            errors.append(f"trace: compile_stats[{key!r}] = {got}, "
+                          f"expected exactly {flag} — the step/executor "
+                          "memoization keys changed")
+
+
+def check_ledger(path, errors):
+    """Check 6: schema + monotonicity. Returns (header, rows)."""
+    try:
+        with open(path) as f:
+            lines = [json.loads(ln) for ln in f if ln.strip()]
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"ledger: unreadable ({e})")
+        return None, []
+    if not lines or lines[0].get("schema") != LEDGER_SCHEMA:
+        errors.append(f"ledger: line 1 must carry schema={LEDGER_SCHEMA!r}")
+        return None, []
+    header, rows = lines[0], lines[1:]
+    prev_round, prev = None, {}
+    for i, row in enumerate(rows):
+        missing = [k for k in LEDGER_KEYS if k not in row]
+        if missing:
+            errors.append(f"ledger: row {i} missing keys {missing}")
+            continue
+        if prev_round is not None and row["round"] <= prev_round:
+            errors.append(f"ledger: rounds not strictly increasing at "
+                          f"row {i}")
+        for cum in ("bits_cum", "dp_spent_cum", "eps_cum", "peak_bytes"):
+            if prev and row[cum] < prev[cum]:
+                errors.append(f"ledger: {cum} decreases at row {i}")
+        prev_round, prev = row["round"], row
+    return header, rows
+
+
+def check_summary(path, rows, errors):
+    """Check 7: the final ledger row equals the run summary exactly."""
+    try:
+        with open(path) as f:
+            summary = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"summary: unreadable ({e})")
+        return
+    if not rows:
+        errors.append("summary: cross-check requested but ledger has no "
+                      "rows")
+        return
+    final = rows[-1]
+    for row_key, sum_key in (("bits_cum", "uplink_bits"),
+                             ("dp_spent_cum", "privacy_spent"),
+                             ("peak_bytes", "peak_bytes")):
+        if sum_key not in summary:
+            errors.append(f"summary: missing {sum_key!r}")
+        elif final[row_key] != summary[sum_key]:
+            errors.append(
+                f"summary: ledger {row_key} = {final[row_key]!r} != "
+                f"summary {sum_key} = {summary[sum_key]!r} (exact match "
+                "required — one accounting, not two)")
+    if "rounds" in summary and len(rows) != int(summary["rounds"]):
+        errors.append(f"summary: {len(rows)} ledger rows != "
+                      f"{summary['rounds']} executed rounds")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON (--trace-out)")
+    ap.add_argument("--ledger", default=None,
+                    help="trilemma JSONL ledger (--metrics-out)")
+    ap.add_argument("--summary", default=None,
+                    help="run summary JSON (train.py --out); requires "
+                         "--ledger — cross-checked exactly")
+    ap.add_argument("--expect-chunk-traces", type=int, default=None,
+                    help="assert compile_stats.scan_chunk_trace == N")
+    ap.add_argument("--expect-step-builds", type=int, default=None,
+                    help="assert compile_stats.zo_step_build == N")
+    ap.add_argument("--stall-tol", type=float, default=1e-3,
+                    help="span-sum vs legacy stall counter tolerance (s)")
+    args = ap.parse_args()
+    errors = []
+
+    try:
+        with open(args.trace) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_trace: FAIL (trace unreadable: {e})")
+        sys.exit(1)
+
+    meta = check_trace(doc, errors, args.stall_tol) or {}
+    check_compile(meta, args, errors)
+    rows = []
+    if args.ledger:
+        _, rows = check_ledger(args.ledger, errors)
+    if args.summary:
+        check_summary(args.summary, rows, errors)
+
+    if errors:
+        print(f"check_trace: FAIL ({len(errors)} violation(s))")
+        for e in errors:
+            print(f"  {e}")
+        sys.exit(1)
+    n_events = len(doc.get("traceEvents", []))
+    print(f"check_trace: OK ({n_events} trace events"
+          + (f", {len(rows)} ledger rows" if args.ledger else "")
+          + (", summary cross-checked" if args.summary else "") + ")")
+
+
+if __name__ == "__main__":
+    main()
