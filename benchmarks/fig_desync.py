@@ -1,0 +1,253 @@
+"""Desync tolerance sweep: seed-broadcast ZO vs conventional analog OTA.
+
+The paper's scalar uplink has a structural synchronization advantage this
+figure quantifies. A pAirZero client transmits ONE symbol per round and
+the perturbation itself travels as a broadcast seed, so imperfect
+synchronization can only (a) attenuate the scalar by cos(theta) of its
+persistent clock-skew phase error, or (b) make a straggler's scalar ride
+a stale round seed z_{t-d} — a bounded-noise contribution the server's
+inversion averages away. A conventional first-order analog-OTA baseline
+uploads d-dimensional gradients over n symbols per frame: the SAME skew
+theta accumulates across the frame, so the coordinate riding symbol slot
+k combines with gain cos(k*theta) — across clients most late-frame
+coordinates are persistently annihilated or sign-flipped (mean coherent
+gain collapses along the Dirichlet kernel |sin(n*theta/2) /
+(n*sin(theta/2))|) plus inter-symbol interference. Both mechanisms
+report the TRUE masked-mean loss (the degraded decode drives only the
+gradient), so retained-progress ratios are comparable.
+
+Cells (all matched rounds/seed/channel):
+  zo   analog pAirZero at stale fractions {0, 0.25, 0.5} with the same
+       per-client clock-skew std the baseline sees;
+  fo   the FO analog baseline, clean and under the same desync trace
+       with an n-symbol frame (frame_symbols) per-coordinate gain + ICI.
+
+The gated claim (enforced by tools/check_bench.py --desync and pinned in
+CI): at 50% stale clients + 0.3 rad clock skew, ZO retains >= 30% of
+its clean-run loss progress and keeps descending, while the misaligned
+FO baseline retains <= 10% of its own (measured: its loss RISES — the
+persistently sign-flipped coordinates diverge) — the seed-broadcast
+design degrades gracefully where the d-dimensional frame collapses.
+
+The same artifact also records a `torn_fallback` block: an in-process
+kill-free rehearsal of the crash-consistency contract — a checkpoint is
+torn (truncated npz), resume falls back to the last CRC-valid one via
+checkpoint.latest_valid, and the re-run's final parameters are compared
+bitwise to an uninterrupted run's (the process-level SIGKILL version
+lives in tools/chaos_run.py).
+
+    PYTHONPATH=src python -m benchmarks.fig_desync \
+        [--rounds 60] [--fractions 0,0.25,0.5] [--phase-std 0.3] \
+        [--frame-symbols 64] [--seed 0]
+
+Writes results/fig_desync.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import (ChannelConfig, DesyncConfig, DPConfig,
+                                ModelConfig, PairZeroConfig,
+                                PowerControlConfig, TransportConfig,
+                                ZOConfig)
+from repro.core import fedsim
+
+TINY = ModelConfig(name="tiny-opt", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=64,
+                   head_dim=16)
+
+N_CLIENTS = 8
+
+# the claim cell (see module docstring)
+CLAIM_FRACTION = 0.5
+ZO_RETAIN_MIN = 0.30
+FO_RETAIN_MAX = 0.10
+
+
+def build_pz(mechanism: str, rounds: int, seed: int,
+             desync: DesyncConfig | None) -> PairZeroConfig:
+    return PairZeroConfig(
+        n_clients=N_CLIENTS, rounds=rounds,
+        zo=ZOConfig(mu=1e-3, lr=5e-3, clip_gamma=5.0, n_perturb=4),
+        channel=ChannelConfig(n0=1.0, power=100.0),
+        dp=DPConfig(epsilon=50.0, delta=0.01),
+        power=PowerControlConfig(scheme="solution"),
+        transport=TransportConfig(mechanism, "solution"),
+        desync=desync, seed=seed)
+
+
+def make_pipeline(seed: int):
+    from repro.data.pipeline import FederatedPipeline
+    from repro.data.tasks import TaskSpec
+    return FederatedPipeline(task="sst2", spec=TaskSpec("sst2", 64, 24),
+                             n_clients=N_CLIENTS, per_client_batch=4,
+                             seed=seed)
+
+
+def run_cell(mechanism: str, rounds: int, seed: int,
+             desync: DesyncConfig | None) -> dict:
+    pz = build_pz(mechanism, rounds, seed, desync)
+    res = fedsim.run(TINY, pz, make_pipeline(seed), rounds=rounds,
+                     engine="scan", chunk_rounds=max(rounds // 4, 1))
+    return {
+        "mechanism": mechanism,
+        "stale_fraction": desync.fraction if desync else 0.0,
+        "phase_std": desync.phase_std if desync else 0.0,
+        "frame_symbols": desync.frame_symbols if desync else 1,
+        "rounds": res.steps,
+        "first_loss": float(np.mean(res.losses[:5])),
+        "final_loss": float(np.mean(res.losses[-10:])),
+        "uplink_bits": res.uplink_bits,
+    }
+
+
+def retained(cell: dict, clean: dict) -> float:
+    """Fraction of the clean run's loss progress a desynced run keeps."""
+    progress_clean = clean["first_loss"] - clean["final_loss"]
+    if progress_clean <= 1e-9:
+        return 1.0
+    return (cell["first_loss"] - cell["final_loss"]) / progress_clean
+
+
+def torn_fallback_check(rounds: int, every: int, seed: int) -> dict:
+    """In-process torn-checkpoint fallback rehearsal (bitwise contract).
+
+    Uninterrupted run vs: partial run, newest checkpoint torn, resume
+    (latest_valid falls back past the tear), run to completion — final
+    params must match leaf-for-leaf bitwise.
+    """
+    pz = build_pz("analog", rounds, seed, None)
+    work = tempfile.mkdtemp(prefix="fig_desync_torn_")
+    d_ref, d_torn = os.path.join(work, "ref"), os.path.join(work, "torn")
+    try:
+        ref = fedsim.run(TINY, pz, make_pipeline(seed), rounds=rounds,
+                         checkpoint_dir=d_ref, checkpoint_every=every,
+                         eval_every=0)
+        fedsim.run(TINY, pz, make_pipeline(seed), rounds=rounds // 2,
+                   checkpoint_dir=d_torn, checkpoint_every=every,
+                   eval_every=0)
+        newest = ckpt.latest(d_torn)
+        ckpt.tear_checkpoint(newest)
+        fell_back = ckpt.latest_valid(d_torn) != newest
+        res = fedsim.run(TINY, pz, make_pipeline(seed), rounds=rounds,
+                         checkpoint_dir=d_torn, checkpoint_every=every,
+                         eval_every=0)
+        equal = all(
+            (np.asarray(a) == np.asarray(b)).all()
+            for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                            jax.tree_util.tree_leaves(res.params)))
+        return {"exercised": True, "fell_back": bool(fell_back),
+                "resumed_from": int(res.resumed_from),
+                "torn_step": int(os.path.basename(newest).split("_")[1]),
+                "bitwise_equal": bool(equal)}
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--fractions", default="0,0.25,0.5",
+                    help="comma-separated stale-client fractions")
+    ap.add_argument("--phase-std", type=float, default=0.3,
+                    help="fractional-timing phase-error std (radians), "
+                         "applied identically to both mechanisms")
+    ap.add_argument("--frame-symbols", type=int, default=64,
+                    help="symbols per frame for the FO baseline's "
+                         "Dirichlet gain (the d-dim payload duration)")
+    ap.add_argument("--max-lag", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    fractions = [float(x) for x in args.fractions.split(",")]
+
+    def desync_for(frac: float, frame: int) -> DesyncConfig | None:
+        if frac == 0.0:
+            return None
+        return DesyncConfig(fraction=frac, max_lag=args.max_lag,
+                            phase_std=args.phase_std, frame_symbols=frame,
+                            seed=args.seed)
+
+    zo_rows, fo_rows = [], []
+    for frac in fractions:
+        row = run_cell("analog", args.rounds, args.seed,
+                       desync_for(frac, 1))
+        zo_rows.append(row)
+        print(f"zo  stale={frac:.2f} first={row['first_loss']:.4f} "
+              f"final={row['final_loss']:.4f}", flush=True)
+    for frac in (0.0, CLAIM_FRACTION):
+        row = run_cell("fo", args.rounds, args.seed,
+                       desync_for(frac, args.frame_symbols))
+        fo_rows.append(row)
+        print(f"fo  stale={frac:.2f} first={row['first_loss']:.4f} "
+              f"final={row['final_loss']:.4f}", flush=True)
+
+    zo_clean = zo_rows[0]
+    fo_clean = fo_rows[0]
+    for row in zo_rows:
+        row["retained"] = retained(row, zo_clean)
+    for row in fo_rows:
+        row["retained"] = retained(row, fo_clean)
+
+    zo_claim = next(r for r in zo_rows
+                    if r["stale_fraction"] == CLAIM_FRACTION)
+    fo_claim = next(r for r in fo_rows
+                    if r["stale_fraction"] == CLAIM_FRACTION)
+    claim = {
+        "stale_fraction": CLAIM_FRACTION,
+        "phase_std": args.phase_std,
+        "frame_symbols": args.frame_symbols,
+        "zo_retained": zo_claim["retained"],
+        "zo_threshold": ZO_RETAIN_MIN,
+        "fo_retained": fo_claim["retained"],
+        "fo_threshold": FO_RETAIN_MAX,
+        "holds": bool(zo_claim["retained"] >= ZO_RETAIN_MIN
+                      and fo_claim["retained"] <= FO_RETAIN_MAX),
+    }
+
+    print("running torn-fallback rehearsal...", flush=True)
+    torn = torn_fallback_check(rounds=16, every=4, seed=args.seed)
+
+    os.makedirs("results", exist_ok=True)
+    out = "results/fig_desync.json"
+    with open(out, "w") as f:
+        json.dump({"schema": "fig_desync/v1",
+                   "created_unix": int(time.time()),
+                   "config": {"rounds": args.rounds,
+                              "n_clients": N_CLIENTS,
+                              "fractions": fractions,
+                              "phase_std": args.phase_std,
+                              "frame_symbols": args.frame_symbols,
+                              "max_lag": args.max_lag,
+                              "seed": args.seed},
+                   "zo": zo_rows, "fo": fo_rows, "claim": claim,
+                   "torn_fallback": torn}, f, indent=1)
+    print(f"\nwrote {out}")
+
+    failures = []
+    if not claim["holds"]:
+        failures.append(
+            f"zo retains {claim['zo_retained']:.2f} "
+            f"(need >= {ZO_RETAIN_MIN}) / fo retains "
+            f"{claim['fo_retained']:.2f} (need <= {FO_RETAIN_MAX})")
+    if not (torn["fell_back"] and torn["bitwise_equal"]):
+        failures.append(f"torn fallback: {torn}")
+    if failures:
+        raise SystemExit("DESYNC CLAIMS VIOLATED: " + "; ".join(failures))
+    print(f"claim holds: zo retains {claim['zo_retained']:.2f} of clean "
+          f"progress at {CLAIM_FRACTION:.0%} stale clients; the "
+          f"{args.frame_symbols}-symbol FO frame retains only "
+          f"{claim['fo_retained']:.2f}; torn-checkpoint resume is "
+          "bitwise-equal")
+
+
+if __name__ == "__main__":
+    main()

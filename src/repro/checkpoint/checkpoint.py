@@ -106,30 +106,72 @@ class AsyncCheckpointer:
     spent inside `save()` either way, so the boundary stall attributable to
     the snapshot is directly comparable across modes. `wait()` joins the
     in-flight write (writes never interleave).
+
+    Degradation contract: `save` is atomic at the filesystem level AND
+    best-effort at the run level. A failing write is retried
+    `write_retries` times with backoff (`retry` spans via
+    repro.runtime.inject); if it still fails the failure is swallowed,
+    counted in `write_failures`, and the run keeps its last good
+    checkpoint instead of aborting (resume picks it up via
+    `latest_valid`). A failing snapshot dispatch likewise skips the
+    boundary (`snapshot_failures`) rather than killing training.
+    `injector` (repro.runtime.FaultInjector) arms the `ckpt_snapshot` /
+    `ckpt_write` sites; its `torn_write` mode truncates the just-written
+    `arrays.npz` to simulate bitrot that `restore` must reject and
+    `latest_valid` must skip.
     """
 
     def __init__(self, directory: str, keep: int = 3,
                  double_buffer: bool = True,
-                 tracer: ob.Tracer = ob.NULL_TRACER):
+                 tracer: ob.Tracer = ob.NULL_TRACER,
+                 injector: Optional[Any] = None,
+                 write_retries: int = 3):
         self.directory = directory
         self.keep = keep
         self.double_buffer = double_buffer
         self.stall_s = 0.0
+        self.write_failures = 0
+        self.snapshot_failures = 0
+        self.retries: Dict[str, int] = {}
+        self.write_retries = write_retries
         self._thread = None
         self._tracer = tracer
+        self._injector = injector
+
+    def _save_retrying(self, step: int, host_params: PyTree,
+                       extra: Optional[Dict]) -> None:
+        """save() with bounded retry + keep-last-good on final failure."""
+        from repro.runtime import inject as inj
+
+        def attempt():
+            torn = None
+            if self._injector is not None:
+                torn = self._injector.fire("ckpt_write")
+            path = save(self.directory, step, host_params, extra=extra,
+                        keep=self.keep)
+            if torn == "torn_write":
+                tear_checkpoint(path)
+                self._tracer.instant("ckpt_torn", step=step)
+
+        try:
+            inj.with_retries(attempt, site="ckpt_write",
+                             attempts=self.write_retries,
+                             tracer=self._tracer, retries=self.retries)
+        except Exception as exc:  # noqa: BLE001 - keep-last-good
+            self.write_failures += 1
+            self._tracer.instant("ckpt_write_failed", step=step,
+                                 error=type(exc).__name__)
 
     def _write(self, step: int, snap: PyTree, extra: Optional[Dict]) -> None:
         with self._tracer.span("ckpt_write", step=step):
             host_params = jax.tree_util.tree_map(lambda a: np.asarray(a),
                                                  snap)
-            save(self.directory, step, host_params, extra=extra,
-                 keep=self.keep)
+            self._save_retrying(step, host_params, extra)
 
     def _write_host(self, step: int, host_params: PyTree,
                     extra: Optional[Dict]) -> None:
         with self._tracer.span("ckpt_write", step=step):
-            save(self.directory, step, host_params, extra=extra,
-                 keep=self.keep)
+            self._save_retrying(step, host_params, extra)
 
     def save(self, step: int, params: PyTree,
              extra: Optional[Dict] = None) -> None:
@@ -138,21 +180,29 @@ class AsyncCheckpointer:
 
         t0 = time.perf_counter()
         self.wait()
-        if self.double_buffer and any(
-                isinstance(leaf, jax.Array)
-                for leaf in jax.tree_util.tree_leaves(params)):
-            snap = _device_snapshot(params)
-            for leaf in jax.tree_util.tree_leaves(snap):
-                leaf.copy_to_host_async()
-            self._thread = threading.Thread(
-                target=self._write, args=(step, snap, extra), daemon=True)
-        else:
-            host_params = jax.tree_util.tree_map(
-                lambda a: np.asarray(a), params)     # sync D2H baseline
-            self._thread = threading.Thread(
-                target=self._write_host, args=(step, host_params, extra),
-                daemon=True)
-        self._thread.start()
+        try:
+            if self._injector is not None:
+                self._injector.fire("ckpt_snapshot")
+            if self.double_buffer and any(
+                    isinstance(leaf, jax.Array)
+                    for leaf in jax.tree_util.tree_leaves(params)):
+                snap = _device_snapshot(params)
+                for leaf in jax.tree_util.tree_leaves(snap):
+                    leaf.copy_to_host_async()
+                self._thread = threading.Thread(
+                    target=self._write, args=(step, snap, extra),
+                    daemon=True)
+            else:
+                host_params = jax.tree_util.tree_map(
+                    lambda a: np.asarray(a), params)     # sync D2H baseline
+                self._thread = threading.Thread(
+                    target=self._write_host,
+                    args=(step, host_params, extra), daemon=True)
+            self._thread.start()
+        except Exception as exc:  # noqa: BLE001 - skip boundary, don't abort
+            self.snapshot_failures += 1
+            self._tracer.instant("ckpt_skipped", step=step,
+                                 error=type(exc).__name__)
         t1 = time.perf_counter()
         self.stall_s += t1 - t0
         # span == the exact stall_s increment (same endpoints): the
@@ -166,11 +216,70 @@ class AsyncCheckpointer:
 
 
 def latest(directory: str) -> Optional[str]:
+    """Path of the newest step_* checkpoint (no integrity check)."""
     if not os.path.isdir(directory):
         return None
     ckpts = sorted(d for d in os.listdir(directory)
                    if d.startswith("step_") and not d.endswith(".tmp"))
     return os.path.join(directory, ckpts[-1]) if ckpts else None
+
+
+def valid_checkpoint(path: str) -> bool:
+    """Whether `path` holds a complete, CRC-consistent checkpoint.
+
+    Tolerant by design: any missing/undecodable manifest, unreadable or
+    truncated npz, missing leaf or CRC mismatch makes the checkpoint
+    invalid rather than raising — `latest_valid` uses this to fall back
+    past torn writes.
+    """
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            for n, crc in manifest["crc32"].items():
+                if n not in data.files:
+                    return False
+                if zlib.crc32(data[n].tobytes()) != int(crc):
+                    return False
+        return True
+    except Exception:  # noqa: BLE001 - any damage means "not valid"
+        return False
+
+
+def latest_valid(directory: str) -> Optional[str]:
+    """Path of the newest checkpoint that passes full CRC validation.
+
+    Walks step_* newest-first, skipping torn/corrupt ones (a SIGKILL mid
+    `os.rename`, simulated bitrot, a half-written npz) — the crash-
+    consistent resume entry point: the atomic save protocol plus this
+    fallback guarantee a resumable state whenever ANY save completed.
+    """
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted((d for d in os.listdir(directory)
+                    if d.startswith("step_") and not d.endswith(".tmp")),
+                   reverse=True)
+    for name in ckpts:
+        path = os.path.join(directory, name)
+        if valid_checkpoint(path):
+            return path
+    return None
+
+
+def tear_checkpoint(path: str) -> None:
+    """Truncate a checkpoint's arrays.npz in half (simulated torn write).
+
+    The result keeps its manifest, so naive `latest` still returns it —
+    `valid_checkpoint` must reject it and `latest_valid` must fall back
+    to the previous intact checkpoint. Used by the chaos harness and the
+    `torn_write` injection mode.
+    """
+    npz = os.path.join(path, "arrays.npz")
+    size = os.path.getsize(npz)
+    with open(npz, "r+b") as f:
+        f.truncate(max(size // 2, 1))
+        f.flush()
+        os.fsync(f.fileno())
 
 
 def restore(path: str, params_like: PyTree

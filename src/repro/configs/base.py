@@ -283,6 +283,28 @@ class ByzantineConfig:
 
 
 @dataclass(frozen=True)
+class DesyncConfig:
+    """Client synchronization-failure scenario (repro.runtime.desync).
+
+    `fraction` is the per-round probability a client is *stale*: it
+    missed the round-t seed broadcast and its scalar rides z_{t−d} in
+    the superposition (the shared per-round lag d is drawn uniform in
+    [1, `max_lag`]). `phase_std` is the std (radians) of each client's
+    per-symbol timing/phase error: pAirZero's scalar payload is
+    attenuated by cos θ, while the conventional d-symbol baseline's
+    coherent gain collapses along the Dirichlet kernel with
+    `frame_symbols` symbols per frame. `seed` salts the per-round
+    draws. fraction 0 with phase_std 0 (or no DesyncConfig at all)
+    reproduces the perfectly-synchronized program bit for bit.
+    """
+    fraction: float = 0.0
+    max_lag: int = 4
+    phase_std: float = 0.0
+    frame_symbols: int = 1
+    seed: int = 0
+
+
+@dataclass(frozen=True)
 class PairZeroConfig:
     """Run config. New code selects the uplink via `transport`; the legacy
     `variant` + `power.scheme` strings remain as a one-release deprecation
@@ -299,6 +321,9 @@ class PairZeroConfig:
     # active-adversary scenario (repro.byzantine); None (or fraction 0 with
     # defense "none") reproduces the honest-cohort program bit for bit
     byzantine: Optional[ByzantineConfig] = None
+    # synchronization-failure scenario (repro.runtime.desync); None (or an
+    # all-zero config) reproduces the synchronized program bit for bit
+    desync: Optional[DesyncConfig] = None
     seed: int = 0
     # Pallas-fused dual forward: regenerate z inside the matmul/gather
     # consumers (kernels/perturbed_matmul.py) instead of materializing

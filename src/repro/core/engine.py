@@ -63,12 +63,16 @@ class ControlTrace:
 
     `host_masks` is the host-side numpy view of ctl["mask"] — the driver's
     uplink-bit accounting reads it instead of syncing the device copy back.
+    `host_stale` is the matching [R, K] view of ctl["dsync_stale"] when a
+    desync model is active (None otherwise) — the ledger's k_sync column
+    derives from it the same way.
     """
     t0: int
     ctl: Dict[str, jnp.ndarray]
     acct_cost: np.ndarray     # [R] per-round DP cost (Transport.round_dp_costs)
     charged: bool             # whether these rounds cost privacy at all
     host_masks: Optional[np.ndarray] = None   # [R, K] survival view
+    host_stale: Optional[np.ndarray] = None   # [R, K] desync stale view
 
     def __len__(self) -> int:
         return int(self.ctl["seed"].shape[0])
@@ -91,7 +95,8 @@ def _noise_bits_trace(key_base: jax.Array, ts: jnp.ndarray) -> jnp.ndarray:
 def build_trace(schedule, pz, t0: int, t1: int, *,
                 transport=None, fault=None, elastic=None,
                 channel=None, ctl_sharding=None,
-                behavior=None, defense=None) -> ControlTrace:
+                behavior=None, defense=None,
+                desync=None) -> ControlTrace:
     """Precompute the control trace for rounds [t0, t1).
 
     Mask generation consumes the (stateful) FaultModel RNG in round order, so
@@ -118,6 +123,13 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
     takes over the DP pricing (a transmit clip tightens the Lemma-1
     sensitivity; delegation keeps the accounting Transport-owned). None
     for either reproduces the historical trace bit for bit.
+
+    `desync` (repro.runtime.DesyncModel) adds the synchronization-failure
+    rows: the lagged broadcast seed ctl["dsync_seed"] plus the per-client
+    ctl["dsync_stale"] / ctl["dsync_a"] / ctl["dsync_frame"] rows. The
+    per-round draws are seeded by (desync seed, round), so the trace is
+    invariant to chunk boundaries and resume points. None keeps the rows
+    absent — the historical block, bit for bit.
     """
     if transport is None:
         transport = tp.resolve(pz)
@@ -168,6 +180,11 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
     if behavior is not None:
         host_ctl["byz"] = np.broadcast_to(
             behavior.client_mask(k)[None, :], (rounds, k)).copy()
+    host_stale = None
+    if desync is not None:
+        from repro.runtime import desync as ds
+        dsync_rows, host_stale = ds.control_rows(desync, pz.seed, t0, t1, k)
+        host_ctl.update(dsync_rows)
     # one transfer for the whole block (sharded placement, when requested,
     # happens here rather than as a post-hoc reshard)
     ctl = jax.device_put(host_ctl, ctl_sharding)
@@ -181,7 +198,7 @@ def build_trace(schedule, pz, t0: int, t1: int, *,
         acct_cost = transport.round_dp_costs(schedule, t0, t1, pz) \
             if charged else np.zeros(rounds)
     return ControlTrace(t0=t0, ctl=ctl, acct_cost=acct_cost, charged=charged,
-                        host_masks=masks)
+                        host_masks=masks, host_stale=host_stale)
 
 
 def affordable_rounds(accountant: PrivacyAccountant, trace: ControlTrace,
@@ -311,11 +328,20 @@ class ChunkPrefetcher:
     thread when kicked), every kick drops a `prefetch_kick` instant, and
     each `get` records a `prep_stall` span from the SAME perf_counter
     endpoints that feed `stall_s` — span sums equal the scalar exactly.
+
+    Degradation: a kicked prep that died on the worker thread no longer
+    aborts the run from `get()` — the failure is logged as a
+    `prefetch_degraded` span and the prep is re-run inline ONCE (counted
+    in `degraded`); only a second failure propagates. The inline re-run
+    is deterministic because chunks are prepared in round order and an
+    injected fault (`injector`, site "chunk_prep") fires at prep ENTRY —
+    before the stateful FaultModel RNG is consumed.
     """
 
     def __init__(self, prepare: Callable[[int, int], Any],
                  bounds: Sequence[Tuple[int, int]], overlap: bool = True,
-                 tracer: ob.Tracer = ob.NULL_TRACER):
+                 tracer: ob.Tracer = ob.NULL_TRACER,
+                 injector: Optional[Any] = None):
         self._prepare = prepare
         self._bounds = list(bounds)
         self._overlap = overlap and len(self._bounds) > 0
@@ -326,12 +352,16 @@ class ChunkPrefetcher:
         self._fut_i = -1
         self._next = 0            # next chunk index the driver may get()
         self.stall_s = 0.0
+        self.degraded = 0         # kicked preps recovered inline
         self._tracer = tracer
+        self._injector = injector
 
     def _run_prepare(self, i: int, kicked: bool) -> Any:
         a, b = self._bounds[i]
         with self._tracer.span("chunk_prep", chunk=i, t0=a, t1=b,
                                kicked=kicked):
+            if self._injector is not None:
+                self._injector.fire("chunk_prep")
             return self._prepare(a, b)
 
     def kick(self, i: int) -> None:
@@ -350,7 +380,13 @@ class ChunkPrefetcher:
         t0 = time.perf_counter()
         if self._fut is not None:
             assert self._fut_i == i
-            out = self._fut.result()
+            try:
+                out = self._fut.result()
+            except Exception as exc:  # noqa: BLE001 - degrade, don't abort
+                self.degraded += 1
+                with self._tracer.span("prefetch_degraded", chunk=i,
+                                       error=type(exc).__name__):
+                    out = self._run_prepare(i, False)  # inline re-run, once
             self._fut = None
         else:
             out = self._run_prepare(i, False)

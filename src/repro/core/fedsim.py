@@ -52,6 +52,8 @@ from repro.core.dp import PrivacyAccountant, cumulative_spend
 from repro.data.pipeline import FederatedPipeline
 from repro.models import registry
 from repro.optim import fo as fo_opt
+from repro.runtime import desync as dsync
+from repro.runtime import inject as inj
 from repro.runtime import sharding as shd
 from repro.runtime.fault import ElasticSchedule, FaultModel
 
@@ -95,6 +97,11 @@ class RunResult:
     # accountant's own float64 fold — dp.cumulative_spend); the audit CLI
     # and the MetricsSink trilemma ledger read these same numbers
     privacy_spent_per_round: Optional[np.ndarray] = None
+    # robustness accounting (repro.runtime.inject): nonzero retry /
+    # degradation counters by site ("dispatch", "ckpt_write",
+    # "prefetch_degraded", "ckpt_write_failed", "ckpt_snapshot_failed").
+    # Empty on a clean run — the ledger's final row asserts against it.
+    retry_attempts: Dict[str, int] = field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +184,10 @@ class CheckpointHook(RoundHook):
         self._saver = None
 
     def on_start(self, exp: "Experiment") -> None:
-        latest = ckpt.latest(self.directory)
+        # newest *CRC-valid* checkpoint: a SIGKILL mid-write (or simulated
+        # bitrot) leaves a torn step_N that plain `latest` would return —
+        # crash-consistent resume falls back to the last intact save
+        latest = ckpt.latest_valid(self.directory)
         if latest:
             exp.params, exp.start_round, extra = ckpt.restore(latest,
                                                               exp.params)
@@ -187,7 +197,7 @@ class CheckpointHook(RoundHook):
         if self.cadence:
             self._saver = ckpt.AsyncCheckpointer(
                 self.directory, double_buffer=self.double_buffer,
-                tracer=exp.telemetry.tracer)
+                tracer=exp.telemetry.tracer, injector=exp.injector)
 
     def on_boundary(self, t_done: int, exp: "Experiment") -> None:
         if self._saver is not None and t_done % self.cadence == 0:
@@ -239,7 +249,9 @@ class Experiment:
                  adversary: Optional[Any] = None,
                  behavior: Optional[Any] = None,
                  defense: Optional[Any] = None,
-                 telemetry: Optional[obs.Telemetry] = None):
+                 telemetry: Optional[obs.Telemetry] = None,
+                 desync: Optional[dsync.DesyncModel] = None,
+                 injector: Optional[inj.FaultInjector] = None):
         if engine not in ("scan", "loop"):
             raise ValueError(
                 f"unknown engine: {engine!r} (want 'scan'|'loop')")
@@ -272,6 +284,16 @@ class Experiment:
             else byz.resolve_behavior(pz)
         self.defense = defense if defense is not None \
             else byz.resolve_defense(pz)
+        # imperfect synchronization (repro.runtime.desync): explicit model
+        # overrides the pz.desync config resolution (mirrors transport=).
+        # Unlike byzantine, desync IS meaningful for the FO baseline — the
+        # Dirichlet frame-gain collapse is the fig_desync comparison.
+        self.desync = desync if desync is not None else dsync.resolve(pz)
+        if self.desync is not None and not self.desync.active:
+            self.desync = None     # inert config == historical program
+        # chaos testing (repro.runtime.inject): deterministic fault
+        # injection at the named host sites; None arms nothing
+        self.injector = injector
         if self.transport.kind == "fo" and (self.behavior is not None
                                             or self.defense is not None):
             raise ValueError(
@@ -313,8 +335,14 @@ class Experiment:
         # the accountant ledger position when the run started (restored
         # checkpoints begin with spent > 0 and an empty history)
         self.round_k_eff: List[float] = []
+        # per executed round: surviving clients whose scalar rode the
+        # CURRENT round seed (K_eff minus the stale stragglers) — the
+        # ledger's k_sync column; == round_k_eff when desync is off
+        self.round_k_sync: List[float] = []
         self.spent_at_start = 0.0
         self.hist_at_start = 0
+        # bounded-retry counters by site, merged into result.retry_attempts
+        self._retries: Dict[str, int] = {}
 
     # -- engine plumbing --------------------------------------------------
     def _build_step(self):
@@ -323,14 +351,16 @@ class Experiment:
             optimizer = fo_opt.make("adam", self.pz.zo.lr)
             raw = pairzero.make_fo_step(self.model_cfg, optimizer,
                                         impl=self.impl,
-                                        adversary=self.adversary)
+                                        adversary=self.adversary,
+                                        desync=self.desync)
             return _fo_scan_step(raw), (self.params,
                                         optimizer.init(self.params))
         raw = pairzero.make_zo_step(self.model_cfg, self.pz, impl=self.impl,
                                     transport=self.transport, mesh=self.mesh,
                                     adversary=self.adversary,
                                     behavior=self.behavior,
-                                    defense=self.defense)
+                                    defense=self.defense,
+                                    desync=self.desync)
         return raw, self.params
 
     def _executor(self, step_fn):
@@ -419,11 +449,18 @@ class Experiment:
                                         channel=ctrace,
                                         ctl_sharding=ctl_shard,
                                         behavior=self.behavior,
-                                        defense=self.defense)
+                                        defense=self.defense,
+                                        desync=self.desync)
             return trace, stager.stage(a, b)
 
         prefetch = eng.ChunkPrefetcher(prepare, bounds,
-                                       overlap=self.overlap, tracer=tr)
+                                       overlap=self.overlap, tracer=tr,
+                                       injector=self.injector)
+        # dispatch retry is sound only for entry injection: the executor
+        # donates the carry buffers, so a REAL mid-flight failure is not
+        # replayable — without an armed injector, fail fast (attempts=1)
+        dispatch_attempts = 3 if (self.injector is not None
+                                  and self.injector.armed("dispatch")) else 1
 
         # Software-pipelined chunk loop: the metric sync for chunk i is
         # deferred until chunk i+1 has been *dispatched*, so both the
@@ -464,12 +501,24 @@ class Experiment:
                     k_rows = trace.host_masks[:n_ok].sum(axis=1)
                     client_rounds += float(k_rows.sum())
                     self.round_k_eff.extend(float(x) for x in k_rows)
+                    # synchronized survivors: exclude the stale stragglers
+                    # whose scalar rode a lagged round seed this round
+                    if trace.host_stale is not None:
+                        sync_rows = (trace.host_masks[:n_ok]
+                                     * (1.0 - trace.host_stale[:n_ok])
+                                     ).sum(axis=1)
+                    else:
+                        sync_rows = k_rows
+                    self.round_k_sync.extend(float(x) for x in sync_rows)
                     if n_ok < b - a:  # guard trips mid-chunk: truncate
                         batches = {k: v[:n_ok] for k, v in batches.items()}
                     with tr.span("dispatch", chunk=i, rounds=n_ok):
-                        carry, metrics = executor.run(carry,
-                                                      trace.rows(n_ok),
-                                                      batches)
+                        carry, metrics = inj.with_retries(
+                            lambda: executor.run(carry, trace.rows(n_ok),
+                                                 batches),
+                            site="dispatch", attempts=dispatch_attempts,
+                            injector=self.injector, tracer=tr,
+                            retries=self._retries)
                     flush()       # sync chunk i-1 while chunk i runs
                     pending = (a, n_ok, metrics)
                     if self.engine == "loop":
@@ -527,6 +576,24 @@ class Experiment:
         result.ckpt_stall_s = sum(
             hk._saver.stall_s for hk in self.hooks
             if isinstance(hk, CheckpointHook) and hk._saver is not None)
+        # robustness ledger: only nonzero counters, so a clean run reports
+        # an empty dict (asserted bit-for-bit by the trace checker)
+        attempts = dict(self._retries)
+        if prefetch.degraded:
+            attempts["prefetch_degraded"] = prefetch.degraded
+        for hk in self.hooks:
+            if isinstance(hk, CheckpointHook) and hk._saver is not None:
+                for site, n in hk._saver.retries.items():
+                    attempts[site] = attempts.get(site, 0) + n
+                if hk._saver.write_failures:
+                    attempts["ckpt_write_failed"] = (
+                        attempts.get("ckpt_write_failed", 0)
+                        + hk._saver.write_failures)
+                if hk._saver.snapshot_failures:
+                    attempts["ckpt_snapshot_failed"] = (
+                        attempts.get("ckpt_snapshot_failed", 0)
+                        + hk._saver.snapshot_failures)
+        result.retry_attempts = {k: v for k, v in attempts.items() if v}
         result.peak_bytes = mem.peak_bytes if mem is not None else 0
         result.compile_stats = obs.retrace.since(compile_before)
         result.wall_time_s = time.time() - t0
@@ -556,6 +623,8 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
         defense: Optional[Any] = None,
         hooks: Sequence[RoundHook] = (),
         telemetry: Optional[obs.Telemetry] = None,
+        desync: Optional[dsync.DesyncModel] = None,
+        injector: Optional[inj.FaultInjector] = None,
         variant: Optional[str] = None,
         scheme: Optional[str] = None) -> RunResult:
     """Run T rounds of pAirZero (or a baseline transport) on one host.
@@ -573,7 +642,13 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
     `repro.obs.Telemetry`) switches on the host-side span timeline and
     device-memory watermark; pair it with a `repro.obs.MetricsSink` in
     `hooks=` for the per-round trilemma ledger — all host-side, so the
-    trajectory is bitwise unchanged. `variant=`/`scheme=` are the
+    trajectory is bitwise unchanged. `desync=` (a
+    `repro.runtime.DesyncModel`) switches on imperfect-synchronization
+    modeling — stale stragglers riding lagged round seeds plus fractional
+    timing misalignment entering the OTA superposition; `injector=` (a
+    `repro.runtime.FaultInjector`) arms deterministic fault injection at
+    the named host sites for chaos testing. Both default to None, tracing
+    the bit-exact historical program. `variant=`/`scheme=` are the
     DEPRECATED string spellings, routed through the transport registry for
     one more release — pass `transport=` or put a TransportConfig in
     `pz.transport` instead.
@@ -599,4 +674,5 @@ def run(model_cfg: ModelConfig, pz: PairZeroConfig,
                       fault=fault, elastic=elastic, impl=impl, dtype=dtype,
                       params=params, mesh=mesh, overlap=overlap,
                       adversary=adversary, behavior=behavior,
-                      defense=defense, telemetry=telemetry).run()
+                      defense=defense, telemetry=telemetry,
+                      desync=desync, injector=injector).run()

@@ -64,7 +64,8 @@ def draw_channels(seed: int, rounds: int, n_clients: int,
 def superpose(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
               n0: jnp.ndarray, key: jax.Array,
               mask: Optional[jnp.ndarray] = None,
-              g: Optional[jnp.ndarray] = None
+              g: Optional[jnp.ndarray] = None,
+              a: Optional[jnp.ndarray] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """The raw RF observation at the receiver front-end (Eq. 4):
 
@@ -76,6 +77,11 @@ def superpose(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
     (`analog_ota`) and the privacy subsystem's observation capture
     (repro.privacy) both call this function with the same key, so the
     captured observation is bit-identical to the signal the server decoded.
+
+    `g` is the per-client cos θ of residual CSI phase error after
+    pre-compensation; `a` is the per-client timing/phase *misalignment*
+    attenuation from the desync trace (repro.runtime.desync) — both
+    default to None, which traces the historical aligned program.
 
     Returns (y, k_eff): the observation and the surviving client count.
     """
@@ -89,8 +95,11 @@ def superpose(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
     z = jnp.sqrt(n0).astype(p.dtype) * jax.random.normal(z_key, (),
                                                          dtype=p.dtype)
     # superposition: only surviving clients contribute signal AND noise,
-    # each rotated to cos θ of its residual pre-compensation error
+    # each rotated to cos θ of its residual pre-compensation error and
+    # attenuated by its symbol-timing alignment
     w = mask if g is None else mask * g.astype(p.dtype)
+    if a is not None:
+        w = w * a.astype(p.dtype)
     y = c * jnp.sum(w * (p + n_k)) + z
     k_eff = jnp.maximum(jnp.sum(mask), 1.0)
     return y, k_eff
@@ -99,7 +108,8 @@ def superpose(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
 def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
                n0: jnp.ndarray, key: jax.Array,
                mask: Optional[jnp.ndarray] = None,
-               g: Optional[jnp.ndarray] = None
+               g: Optional[jnp.ndarray] = None,
+               a: Optional[jnp.ndarray] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Analog pAirZero uplink (Eqs. 8–9) + channel inversion (Eq. 5).
 
@@ -116,11 +126,14 @@ def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
              or all-ones is the perfect-CSI h_k α_k = c alignment; the
              all-ones multiply is bitwise neutral, so perfect-CSI runs are
              unchanged by the trace plumbing.
+      a:     [K] per-client timing/phase misalignment attenuation from the
+             desync trace (None = perfectly synchronized, historical
+             program).
 
     Returns:
       (p_hat, k_eff): the recovered noisy mean and the surviving client count.
     """
-    y, k_eff = superpose(p, c, sigma, n0, key, mask, g)
+    y, k_eff = superpose(p, c, sigma, n0, key, mask, g, a)
     # c == 0 means a SILENT round (the sign-variant schedule zeroes early
     # rounds when Ã^{-t} weighting concentrates the privacy budget late):
     # nobody transmits, the server applies no update.
@@ -132,7 +145,8 @@ def analog_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
 def sign_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
              n0: jnp.ndarray, key: jax.Array,
              mask: Optional[jnp.ndarray] = None,
-             g: Optional[jnp.ndarray] = None
+             g: Optional[jnp.ndarray] = None,
+             a: Optional[jnp.ndarray] = None
              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sign-pAirZero uplink (Eq. 11): clients transmit sign{p_k} + n_k.
 
@@ -141,7 +155,7 @@ def sign_ota(p: jnp.ndarray, c: jnp.ndarray, sigma: jnp.ndarray,
     recovered p̂ (Algorithm 1, line 14). Imperfect CSI weighs each vote by
     cos θ_k — a deeply misaligned client can even flip its ballot.
     """
-    return analog_ota(jnp.sign(p), c, sigma, n0, key, mask, g)
+    return analog_ota(jnp.sign(p), c, sigma, n0, key, mask, g, a)
 
 
 def perfect_analog(p: jnp.ndarray,

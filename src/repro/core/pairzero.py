@@ -33,6 +33,7 @@ from repro.core import transport as tp
 from repro.core import zo
 from repro.models import registry
 from repro.obs import retrace
+from repro.runtime import desync as ds
 
 PyTree = Any
 
@@ -50,30 +51,41 @@ def make_loss_fn(model_cfg: ModelConfig, impl: Optional[str] = None
 
 def control_spec(n_clients: int,
                  transport: Optional[tp.Transport] = None,
-                 behavior: Optional[Any] = None
+                 behavior: Optional[Any] = None,
+                 desync: Optional[Any] = None
                  ) -> Dict[str, jax.ShapeDtypeStruct]:
     """Abstract shapes of the per-round control block (dry-run input spec).
 
     The spec is owned by the Transport; the default is the standard block
     shared by every built-in mechanism. An active `behavior`
-    (repro.byzantine) extends it with the [K] cohort indicator row."""
+    (repro.byzantine) extends it with the [K] cohort indicator row; an
+    active `desync` (repro.runtime.desync) with the lagged round seed and
+    the [K] stale/alignment/frame rows."""
     t = transport if transport is not None else tp.Transport()
     spec = t.control_spec(n_clients)
     if behavior is not None:
         spec = dict(spec)
         spec["byz"] = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+    if desync is not None:
+        spec = dict(spec)
+        spec["dsync_seed"] = jax.ShapeDtypeStruct((), jnp.uint32)
+        for row in ("dsync_stale", "dsync_a", "dsync_frame"):
+            spec[row] = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
     return spec
 
 
 def make_control(t: int, schedule, base_seed: int, n_clients: int,
-                 mask=None, g=None, byz=None) -> Dict:
+                 mask=None, g=None, byz=None, dsync=None) -> Dict:
     """Host-side: build round-t control block from a PowerSchedule.
 
     `g` is the round's [K] per-client effective-gain (cos θ) vector from
     the channel trace; None means perfect CSI (all ones — bitwise neutral
     in the step). `byz` is the [K] malicious-cohort indicator
     (repro.byzantine); None keeps the historical block — the key is only
-    present when a behavior is active, mirroring `engine.build_trace`."""
+    present when a behavior is active, mirroring `engine.build_trace`.
+    `dsync` is the round's desync row dict (dsync_seed / dsync_stale /
+    dsync_a / dsync_frame, from `repro.runtime.desync.control_rows`);
+    None likewise keeps the rows absent."""
     key = jax.random.fold_in(jax.random.key(base_seed ^ 0x5EED), t)
     ctl = {
         "seed": zo.round_seed(base_seed, t),
@@ -88,6 +100,10 @@ def make_control(t: int, schedule, base_seed: int, n_clients: int,
     }
     if byz is not None:
         ctl["byz"] = jnp.asarray(byz, jnp.float32)
+    if dsync is not None:
+        ctl["dsync_seed"] = jnp.asarray(dsync["dsync_seed"], jnp.uint32)
+        for row in ("dsync_stale", "dsync_a", "dsync_frame"):
+            ctl[row] = jnp.asarray(dsync[row], jnp.float32)
     return ctl
 
 
@@ -99,7 +115,8 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                  mesh: Optional[Mesh] = None,
                  adversary: Optional[Any] = None,
                  behavior: Optional[Any] = None,
-                 defense: Optional[Any] = None) -> Callable:
+                 defense: Optional[Any] = None,
+                 desync: Optional[Any] = None) -> Callable:
     """Build the jitted ZO train step for any scalar-payload Transport
     (analog / sign / perfect / digital / user-registered).
 
@@ -140,6 +157,15 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
     decode, replaces the aggregate call (sub-slot group decodes). Both are
     part of the memo key; None traces the historical program unchanged —
     Byzantine neutrality is structural, like the adversary's.
+
+    `desync` (a frozen `repro.runtime.DesyncModel`) models clients that
+    missed the round-t seed broadcast: each stale client's scalar is the
+    projection of an EXTRA fresh-mode dual forward evaluated against the
+    lagged broadcast seed ctl["dsync_seed"] (z_{t−d}), selected per client
+    by the device-resident ctl["dsync_stale"] row before the behavior /
+    defense / Transport chain; the per-client timing attenuation
+    ctl["dsync_a"] enters `ota.superpose` inside the Transports. Part of
+    the memo key; None traces the bit-exact synchronized program.
     """
     retrace.bump(retrace.ZO_STEP_BUILD)     # lru MISS: a fresh step build
     loss_fn = make_loss_fn(model_cfg, impl=impl)
@@ -178,6 +204,14 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
         k_total = ctl["mask"].shape[-1]
         for j in range(n_perturb):
             seed = zo.perturb_seed(ctl["seed"], j)
+            if desync is not None:
+                # stale clients evaluated against the LAGGED broadcast
+                # seed: a non-destructive fresh-mode dual forward BEFORE
+                # the main (possibly chained, in-place) walk below
+                s_seed = zo.perturb_seed(ctl["dsync_seed"], j)
+                lp_s, lm_s, _ = zo.dual_forward(
+                    lambda p: loss_fn(p, batch), params, s_seed, mu,
+                    mode="fresh")
             lp, lm, params_at = zo.dual_forward(
                 lambda p: loss_fn(p, batch), params, seed, mu, mode=mode)
             noise_key = jax.random.wrap_key_data(ctl["noise_bits"])
@@ -185,6 +219,10 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
             if client_axes:
                 offset = client_ids[0]        # shard's first global client
                 p_local = zo.projection(lp, lm, mu, gamma)    # [K/n]
+                if desync is not None:
+                    p_local = ds.stale_payload(
+                        p_local, zo.projection(lp_s, lm_s, mu, gamma),
+                        ctl, offset)
                 if behavior is not None:
                     p_local = byz_behaviors.apply_behavior(
                         behavior, p_local, ctl, round_key, offset)
@@ -196,13 +234,21 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                 else:
                     p_hat = transport.aggregate_mesh(
                         p_local, ctl, round_key, client_axes, offset)
-                lp, lm = tp.client_all_gather(
-                    jnp.stack([lp, lm]), client_axes, offset, k_total)
+                if desync is not None:
+                    lp, lm, lp_s, lm_s = tp.client_all_gather(
+                        jnp.stack([lp, lm, lp_s, lm_s]), client_axes,
+                        offset, k_total)
+                else:
+                    lp, lm = tp.client_all_gather(
+                        jnp.stack([lp, lm]), client_axes, offset, k_total)
                 p_k = zo.projection(lp, lm, mu, gamma)        # [K], full
                 # the full radiated payload for metrics/observations:
                 # re-applying attack + PHY clip on the gathered vector is
                 # bit-identical to the concatenation of the shard-local
                 # payloads (elementwise ops; shared draws sliced per shard)
+                if desync is not None:
+                    p_k = ds.stale_payload(
+                        p_k, zo.projection(lp_s, lm_s, mu, gamma), ctl)
                 if behavior is not None:
                     p_k = byz_behaviors.apply_behavior(
                         behavior, p_k, ctl, round_key)
@@ -210,6 +256,9 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
                     p_k = defense.transmit(p_k, ctl)
             else:
                 p_k = zo.projection(lp, lm, mu, gamma)        # [K]
+                if desync is not None:
+                    p_k = ds.stale_payload(
+                        p_k, zo.projection(lp_s, lm_s, mu, gamma), ctl)
                 if behavior is not None:
                     p_k = byz_behaviors.apply_behavior(
                         behavior, p_k, ctl, round_key)
@@ -289,7 +338,8 @@ def make_zo_step(model_cfg: ModelConfig, pz: PairZeroConfig,
 @functools.lru_cache(maxsize=128)
 def make_fo_step(model_cfg: ModelConfig, optimizer,
                  impl: Optional[str] = None,
-                 adversary: Optional[Any] = None) -> Callable:
+                 adversary: Optional[Any] = None,
+                 desync: Optional[Any] = None) -> Callable:
     """First-order FedSGD baseline: full backprop + cross-client grad
     averaging (the d-dimensional all-reduce the paper eliminates).
 
@@ -304,6 +354,21 @@ def make_fo_step(model_cfg: ModelConfig, optimizer,
     chunk carries chunk_rounds of them) — at production model sizes run
     audited FO on short horizons/small chunks and cap the host-side stream
     with `AttackHook(max_rounds=...)`.
+
+    `desync` (a frozen `repro.runtime.DesyncModel`) models what frame
+    desynchronization does to this CONVENTIONAL d-dimensional analog OTA
+    uplink: a client's phase error θ accumulates across the
+    frame_symbols-slot frame, so the coordinate riding symbol k combines
+    with gain cos(kθ) — averaged over clients the late-frame coordinates
+    random-phase out while the server still inverts by the full
+    surviving count (`desync.conventional_frame`; stale clients
+    contribute nothing — their frame carries an old round), and the
+    energy the misaligned clients lose re-enters as inter-symbol
+    interference noise on the decoded gradient
+    (`desync.conventional_ici`, keyed off the round's noise_bits). The
+    degraded decode drives the GRADIENT only; the reported `loss` metric
+    stays the true masked mean, so desynced and clean runs are directly
+    comparable. None traces the bit-exact synchronized program.
     """
     retrace.bump(retrace.FO_STEP_BUILD)     # lru MISS: a fresh step build
     loss_fn = make_loss_fn(model_cfg, impl=impl)
@@ -317,6 +382,17 @@ def make_fo_step(model_cfg: ModelConfig, optimizer,
                 jnp.sum(mask), 1.0)
 
         loss, grads = jax.value_and_grad(mean_loss)(params)
+        if desync is not None:
+            # the server decodes a per-coordinate attenuated frame (phase
+            # error accumulating over the frame's symbol slots) plus the
+            # lost energy as interference; the reported `loss` metric
+            # stays the true masked mean so desynced and clean runs are
+            # directly comparable
+            noise_key = jax.random.wrap_key_data(ctl["noise_bits"])
+            framed = ds.conventional_frame(grads, ctl,
+                                           desync.frame_symbols)
+            grads = ds.conventional_ici(framed, ctl, noise_key,
+                                        ref=grads)
         metrics = {"loss": loss}
         if adversary is not None:
             from jax.flatten_util import ravel_pytree

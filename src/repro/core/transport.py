@@ -359,7 +359,8 @@ class AnalogOTA(Transport):
         if self.scheme == "perfect":
             return ota.perfect_analog(p, ctl["mask"])
         return ota.analog_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
-                              ctl["mask"], ctl.get("g"))[0]
+                              ctl["mask"], ctl.get("g"),
+                              ctl.get("dsync_a"))[0]
 
     def observe(self, p, ctl, key):
         """What an eavesdropper hears: the same electromagnetic
@@ -371,7 +372,7 @@ class AnalogOTA(Transport):
             w = ctl["mask"].astype(p.dtype)
             return {"y": jnp.sum(w * p)}
         y, _ = ota.superpose(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
-                             ctl["mask"], ctl.get("g"))
+                             ctl["mask"], ctl.get("g"), ctl.get("dsync_a"))
         return {"y": y}
 
     def observation_spec(self, n_clients):
@@ -431,7 +432,8 @@ class SignOTA(AnalogOTA):
         if self.scheme == "perfect":
             return ota.perfect_sign(p, ctl["mask"])
         return ota.sign_ota(p, ctl["c"], ctl["sigma"], ctl["n0"], key,
-                            ctl["mask"], ctl.get("g"))[0]
+                            ctl["mask"], ctl.get("g"),
+                            ctl.get("dsync_a"))[0]
 
     def observe(self, p, ctl, key):
         """The radiated payload is the +/-1 ballot, so the listener hears

@@ -39,14 +39,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import byzantine as byz
-from repro.configs.base import (ByzantineConfig, ChannelConfig, DPConfig,
-                                PairZeroConfig, PowerControlConfig,
-                                TransportConfig, ZOConfig)
+from repro.configs.base import (ByzantineConfig, ChannelConfig, DesyncConfig,
+                                DPConfig, PairZeroConfig,
+                                PowerControlConfig, TransportConfig,
+                                ZOConfig)
 from repro.core import fedsim, transport
 from repro.data.pipeline import FederatedPipeline
 from repro.data.tasks import TaskSpec
 from repro.models import registry
 from repro.runtime.fault import ElasticSchedule, FaultModel
+from repro.runtime.inject import FaultInjector
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -162,6 +164,36 @@ def build_parser() -> argparse.ArgumentParser:
                     help="transmit-clip bound for --defense clip: "
                          "gamma_d = factor * gamma, folded into the "
                          "power-control solve")
+    ap.add_argument("--desync-frac", type=float, default=0.0,
+                    help="per-round probability a client is a stale "
+                         "straggler whose scalar rode a lagged round seed "
+                         "(repro.runtime.desync); 0 disables desync "
+                         "modeling — bit-identical to a build without it")
+    ap.add_argument("--desync-max-lag", type=int, default=4,
+                    help="max staleness (rounds) for --desync-frac "
+                         "stragglers; the realized lag is drawn per round")
+    ap.add_argument("--desync-phase-std", type=float, default=0.0,
+                    help="fractional-timing phase-error std (radians): "
+                         "every client's OTA contribution is attenuated "
+                         "by cos(theta) of its realized misalignment")
+    ap.add_argument("--desync-frame-symbols", type=int, default=1,
+                    help="symbols per OTA frame for the conventional "
+                         "d-dimensional baseline's Dirichlet frame gain "
+                         "(only affects --transport fo under desync)")
+    ap.add_argument("--inject", action="append", default=[],
+                    metavar="SITE:MODE[:SEL]",
+                    help="arm a deterministic host fault (repeatable): "
+                         "site in {chunk_prep, dispatch, ckpt_snapshot, "
+                         "ckpt_write}, mode in {exception, delay, "
+                         "torn_write}, selector '@2,5' (exact invocation "
+                         "indices) or a probability like '0.1' (default: "
+                         "every invocation). The run recovers via bounded "
+                         "retries / graceful degradation and reports the "
+                         "counters under summary.retry_attempts")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for probabilistic --inject selectors "
+                         "(fires are a pure function of seed, site, "
+                         "invocation index)")
     ap.add_argument("--audit", action="store_true",
                     help="eavesdropper capture + empirical privacy audit "
                          "(repro.privacy): records what an over-the-air "
@@ -181,7 +213,7 @@ def build_parser() -> argparse.ArgumentParser:
                          "under otherData (see docs/observability.md)")
     ap.add_argument("--metrics-out", default=None,
                     help="stream the per-round trilemma ledger here as "
-                         "JSONL (schema trilemma_ledger/v1): one record "
+                         "JSONL (schema trilemma_ledger/v2): one record "
                          "per round with loss, uplink bits, cumulative "
                          "(eps, delta) spend, and the peak device-memory "
                          "watermark — machine-readable evidence for all "
@@ -209,6 +241,12 @@ def main() -> None:
             scale=args.byzantine_scale, defense=args.defense,
             groups=args.defense_groups,
             clip_factor=args.defense_clip_factor, seed=args.seed)
+    desynccfg = None
+    if args.desync_frac or args.desync_phase_std:
+        desynccfg = DesyncConfig(
+            fraction=args.desync_frac, max_lag=args.desync_max_lag,
+            phase_std=args.desync_phase_std,
+            frame_symbols=args.desync_frame_symbols, seed=args.seed)
     pz = PairZeroConfig(
         variant=args.variant, n_clients=args.clients, rounds=args.rounds,
         zo=ZOConfig(mu=args.mu, lr=args.lr, clip_gamma=args.gamma,
@@ -229,6 +267,7 @@ def main() -> None:
         transport=TransportConfig(mechanism=mechanism, scheme=args.scheme,
                                   quant_bits=args.quant_bits),
         byzantine=byzcfg,
+        desync=desynccfg,
         seed=args.seed)
 
     pipe = FederatedPipeline(
@@ -280,6 +319,14 @@ def main() -> None:
         if args.metrics_out:
             extra_hooks = extra_hooks + [obs.MetricsSink(args.metrics_out)]
 
+    injector = None
+    if args.inject:
+        from repro.obs.spans import NULL_TRACER
+        injector = FaultInjector.from_specs(
+            args.inject, seed=args.inject_seed,
+            tracer=telemetry.tracer if telemetry is not None
+            else NULL_TRACER)
+
     res = fedsim.run(cfg, pz, pipe, rounds=args.rounds,
                      engine=args.engine, chunk_rounds=args.chunk_rounds,
                      eval_every=args.eval_every,
@@ -288,7 +335,7 @@ def main() -> None:
                      fault=fault, elastic=elastic, dtype=jnp.float32,
                      mesh=mesh, overlap=not args.no_overlap,
                      adversary=adversary, hooks=extra_hooks,
-                     telemetry=telemetry, on_round=log)
+                     telemetry=telemetry, injector=injector, on_round=log)
 
     if args.trace_out:
         telemetry.tracer.export_chrome(args.trace_out, metadata={
@@ -313,6 +360,12 @@ def main() -> None:
                        "fraction": args.byzantine_frac,
                        "defense": args.defense}
                       if byzcfg is not None else None),
+        "desync": ({"fraction": args.desync_frac,
+                    "max_lag": args.desync_max_lag,
+                    "phase_std": args.desync_phase_std}
+                   if desynccfg is not None else None),
+        "retry_attempts": res.retry_attempts,
+        "injected": injector.fired if injector is not None else {},
         "mesh": dict(mesh.shape) if mesh is not None else None,
         "rounds": res.steps,
         "uplink_bits": res.uplink_bits,

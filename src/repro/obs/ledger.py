@@ -13,12 +13,15 @@ record per executed round:
     (bit-identical to `PrivacyAccountant.spent`: the identical float64
     left fold), and the closed-form ε it implies (`epsilon_for_budget`);
   memory — the run's `peak_bytes` watermark so far (repro.obs.memory);
-  plus loss, K_eff, and wall-clock seconds since the sink started.
+  plus loss, K_eff, the desync view (`k_sync`: surviving clients whose
+  scalar rode the current round seed; `stale_frac`: the stale share of
+  K_eff, 0.0 when desync is off), and wall-clock seconds since the sink
+  started.
 
-Line 1 is a header record carrying `schema: "trilemma_ledger/v1"` and the
-run's static facts; every later line is one round. tools/check_trace.py
-validates the schema and cross-checks the final row against the run
-summary in CI.
+Line 1 is a header record carrying `schema: "trilemma_ledger/v2"` (v2
+added the k_sync/stale_frac columns) and the run's static facts; every
+later line is one round. tools/check_trace.py validates the schema and
+cross-checks the final row against the run summary in CI.
 """
 from __future__ import annotations
 
@@ -41,7 +44,7 @@ class MetricsSink:
     """
 
     cadence = 0
-    SCHEMA = "trilemma_ledger/v1"
+    SCHEMA = "trilemma_ledger/v2"
 
     def __init__(self, path: str):
         self.path = path
@@ -89,6 +92,11 @@ class MetricsSink:
             self._spend_cum = exp.spent_at_start
         self._spend_cum += cost
         k_eff = float(exp.round_k_eff[t - exp.start_round])
+        # synchronized survivors this round (== k_eff when desync is off;
+        # duck-typed getattr keeps the sink usable against older drivers)
+        k_sync_all = getattr(exp, "round_k_sync", None)
+        k_sync = float(k_sync_all[t - exp.start_round]) \
+            if k_sync_all else k_eff
         self._k_sum += k_eff
         self._rows += 1
         bits_cum = tp.uplink_bits_total(
@@ -99,6 +107,8 @@ class MetricsSink:
             "round": int(t),
             "loss": float(metrics["loss"]),
             "k_eff": k_eff,
+            "k_sync": k_sync,
+            "stale_frac": (k_eff - k_sync) / k_eff if k_eff > 0 else 0.0,
             "bits_round": bits_cum - self._bits_prev,
             "bits_cum": bits_cum,
             "dp_cost": cost,

@@ -1,0 +1,33 @@
+"""Host runtime: faults, desync, chaos injection, sharding rules.
+
+The scenario + resilience layer wrapped around the device engines:
+
+- `repro.runtime.fault` — stochastic client availability (`FaultModel`:
+  dropout / stragglers / hard failures with repair) and planned elastic
+  membership (`ElasticSchedule`); both feed `combined_mask` into the
+  control traces the engines scan over.
+- `repro.runtime.desync` — the synchronization-failure axis
+  (`DesyncModel`): stale round seeds with lag d (a lagging client's
+  scalar rides z_{t−d}) and fractional timing/phase misalignment
+  entering `ota.superpose` as a per-client attenuation; plus the
+  d-symbol frame-collapse row for the conventional-OTA baseline.
+- `repro.runtime.inject` — deterministic seeded chaos (`FaultInjector`):
+  exception / delay / torn-write faults at named host sites
+  (chunk_prep, dispatch, ckpt_snapshot, ckpt_write) with the bounded
+  `with_retries` recovery wrapper, span-instrumented via `repro.obs`.
+- `repro.runtime.sharding` — param/activation PartitionSpec rules for
+  the client mesh (see module docstring).
+
+Everything here is host-side and structurally neutral: with no fault
+model, no desync model and no injector armed, the engines trace the
+bit-exact historical program.
+"""
+from repro.runtime.desync import DesyncModel
+from repro.runtime.fault import ElasticSchedule, FaultModel, combined_mask
+from repro.runtime.inject import (FaultInjector, InjectedFault, SiteFault,
+                                  with_retries)
+
+__all__ = [
+    "DesyncModel", "ElasticSchedule", "FaultModel", "combined_mask",
+    "FaultInjector", "InjectedFault", "SiteFault", "with_retries",
+]

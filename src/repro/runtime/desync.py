@@ -1,0 +1,286 @@
+"""Client desynchronization: stale round seeds + fractional misalignment.
+
+The abstract's third robustness claim is that pAirZero "alleviates the
+strict synchronization requirements that plague conventional OTA
+methods". This module turns that sentence into a testable scenario axis
+with two failure modes, both seeded and bit-reproducible:
+
+1. **Stale rounds (compute stragglers).** A lagging client never saw the
+   round-t seed broadcast; the scalar it transmits was computed against
+   the perturbation of round t−d, so its contribution to the
+   superposition points along z_{t−d} instead of z_t. Because the
+   payload is ONE scalar, the server-side decode is unchanged — the
+   stale client contributes bounded off-axis noise rather than
+   corrupting a d-dimensional frame. Per round, a shared lag d_t is
+   drawn in [1, max_lag] and each client goes stale with probability
+   ``fraction`` (so one extra dual forward per step covers every stale
+   client, not max_lag of them).
+
+2. **Fractional timing / phase misalignment.** A client whose sampling
+   clock is skewed by a fraction of a symbol superposes with amplitude
+   cos θ_k instead of 1. The skew is a PERSISTENT per-device property
+   (drawn once per trace, not per round). For pAirZero's single-symbol
+   payload this is a mild, constant per-client attenuation entering
+   :func:`repro.core.ota.superpose` alongside the realized CSI gains.
+   For a conventional d-symbol analog OTA frame the same skew
+   ACCUMULATES across the frame: the coordinate riding symbol slot k
+   combines with gain cos(kθ) (:func:`conventional_frame`), so most of
+   the d-dimensional payload is persistently annihilated or
+   sign-flipped — the mean coherent gain collapses along the Dirichlet
+   kernel |sin(nθ/2)/(n sin(θ/2))| and the lost energy reappears as
+   inter-symbol interference — which is what
+   ``benchmarks/fig_desync.py`` measures against the FO baseline.
+
+Contract (mirrors `repro.byzantine`): when a :class:`DesyncModel` is
+active, `engine.build_trace` ships four extra ctl rows —
+``dsync_seed`` [R] u32 (the lagged round seed), ``dsync_stale`` [R,K],
+``dsync_a`` [R,K] (scalar-payload alignment cos θ) and ``dsync_frame``
+[R,K] (d-symbol frame gain, stale clients zeroed). When inactive the
+rows are absent and every consumer traces the bit-exact historical
+program (`ctl.get(...)` → None everywhere).
+
+Host draws use ``np.random.default_rng([seed, _TRACE_TAG, t])`` — one
+generator per round, so traces are invariant to chunking and resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+PyTree = Any
+
+# host-side rng stream tags (keep distinct from 0x5EED / 0xB52 / 0xB52C0 /
+# 0x51B5 / 0xC4A7 used by noise, byzantine, sub-slots and channels)
+_TRACE_TAG = 0xD5CA1
+# persistent per-client clock-skew draw (round-independent)
+_SKEW_TAG = 0xD5CA2
+# jit-side fold_in tag for the conventional-frame ICI noise
+DESYNC_ICI_TAG = 0xD51C
+
+
+@dataclasses.dataclass(frozen=True)
+class DesyncModel:
+    """Seeded per-round, per-client synchronization-state trace.
+
+    fraction: probability a client-round is stale (rides z_{t-d}).
+    max_lag: the shared per-round lag d_t is drawn uniform in [1, max_lag].
+    phase_std: std of the persistent per-client clock-skew phase error
+        θ_k (radians), drawn once per trace.
+    frame_symbols: symbols per uplink frame for the *conventional* d-dim
+        baseline row (1 ≡ pAirZero's scalar payload, where cos θ is the
+        whole story).
+    seed: host rng stream seed.
+    """
+
+    fraction: float = 0.0
+    max_lag: int = 4
+    phase_std: float = 0.0
+    frame_symbols: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        """Validate the scenario parameters."""
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(f"desync fraction must be in [0, 1], got "
+                             f"{self.fraction}")
+        if self.max_lag < 1:
+            raise ValueError(f"desync max_lag must be >= 1, got "
+                             f"{self.max_lag}")
+        if self.phase_std < 0.0:
+            raise ValueError(f"desync phase_std must be >= 0, got "
+                             f"{self.phase_std}")
+        if self.frame_symbols < 1:
+            raise ValueError(f"desync frame_symbols must be >= 1, got "
+                             f"{self.frame_symbols}")
+
+    @classmethod
+    def from_config(cls, cfg) -> "DesyncModel":
+        """Build from a ``configs.base.DesyncConfig``."""
+        return cls(fraction=cfg.fraction, max_lag=cfg.max_lag,
+                   phase_std=cfg.phase_std,
+                   frame_symbols=cfg.frame_symbols, seed=cfg.seed)
+
+    @property
+    def active(self) -> bool:
+        """Whether the scenario perturbs anything at all."""
+        return self.fraction > 0.0 or self.phase_std > 0.0
+
+    def sync_trace(self, t0: int, t1: int, n_clients: int
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray]:
+        """Draw the sync state for rounds [t0, t1).
+
+        Returns ``(stale [R,K] f32, lag [R] i64, align [R,K] f32,
+        frame [R,K] f32)``. Stale is forced to 0 for rounds t < d_t
+        (there is no round t−d to be stale against). The phase error
+        θ_k is a PERSISTENT per-client clock skew (a device's
+        sampling-clock offset is a calibration property, not per-round
+        jitter) drawn once from the round-independent ``_SKEW_TAG``
+        stream — per-round i.i.d. phase errors would average out over
+        training and hide the conventional frame's structural collapse.
+        The frame row already folds the stale mask in: a stale client's
+        d-dim frame carries an old round's payload, i.e. zero useful
+        signal.
+        """
+        rounds = t1 - t0
+        stale = np.zeros((rounds, n_clients), dtype=np.float32)
+        lag = np.zeros(rounds, dtype=np.int64)
+        align = np.ones((rounds, n_clients), dtype=np.float32)
+        frame = np.ones((rounds, n_clients), dtype=np.float32)
+        theta = np.random.default_rng(
+            [self.seed & 0xFFFFFFFF, _SKEW_TAG]).normal(
+            0.0, 1.0, n_clients) * self.phase_std
+        cos_theta = np.cos(theta).astype(np.float32)
+        gain = frame_gain(theta, self.frame_symbols)
+        for i, t in enumerate(range(t0, t1)):
+            rng = np.random.default_rng(
+                [self.seed & 0xFFFFFFFF, _TRACE_TAG, t])
+            d = int(rng.integers(1, self.max_lag + 1))
+            lag[i] = d
+            s = (rng.random(n_clients) < self.fraction) & (t >= d)
+            stale[i] = s.astype(np.float32)
+            align[i] = cos_theta
+            frame[i] = (gain * (1.0 - stale[i])).astype(np.float32)
+        return stale, lag, align, frame
+
+
+def frame_gain(theta: np.ndarray, n: int) -> np.ndarray:
+    """Coherent gain of an n-symbol analog frame under per-symbol phase θ.
+
+    The Dirichlet kernel |sin(nθ/2) / (n sin(θ/2))|: 1 at θ=0, and for
+    large n collapsing rapidly — the d-dimensional conventional OTA
+    payload loses its coherent combining gain long before the scalar
+    payload's cos θ notices the misalignment.
+    """
+    th = np.asarray(theta, dtype=np.float64)
+    half = th / 2.0
+    num = np.sin(n * half)
+    den = n * np.sin(half)
+    out = np.where(np.abs(den) < 1e-12, 1.0,
+                   num / np.where(np.abs(den) < 1e-12, 1.0, den))
+    return np.abs(out)
+
+
+def control_rows(model: DesyncModel, base_seed: int, t0: int, t1: int,
+                 n_clients: int) -> Tuple[Dict[str, np.ndarray],
+                                          np.ndarray]:
+    """Host ctl rows for rounds [t0, t1) plus the raw stale matrix.
+
+    ``dsync_seed`` is the *lagged* round seed zo.round_seed(base, t−d_t)
+    (clamped at 0) — jit-side, a stale client's dual forward regenerates
+    z_{t−d} from it exactly as the in-sync clients regenerate z_t.
+    """
+    from repro.core import zo  # local: keep numpy-only callers jax-free
+
+    stale, lag, align, frame = model.sync_trace(t0, t1, n_clients)
+    ts = np.arange(t0, t1, dtype=np.int64)
+    src = np.maximum(ts - lag, 0).astype(np.uint32)
+    seeds = np.asarray(zo.round_seed(base_seed, src), dtype=np.uint32)
+    rows = {
+        "dsync_seed": seeds,
+        "dsync_stale": stale,
+        "dsync_a": align,
+        "dsync_frame": frame,
+    }
+    return rows, stale
+
+
+def resolve(pz) -> Optional[DesyncModel]:
+    """PairZeroConfig -> active DesyncModel, or None (historical program)."""
+    cfg = getattr(pz, "desync", None)
+    if cfg is None:
+        return None
+    model = DesyncModel.from_config(cfg)
+    return model if model.active else None
+
+
+def stale_payload(p_fresh, p_stale, ctl, offset=None):
+    """Jit-side per-client select between fresh and stale projections.
+
+    With ``offset`` (mesh shard), the full-[K] ``dsync_stale`` row is
+    sliced at the shard's client offset so mesh and single-device
+    programs see identical values.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    stale = ctl["dsync_stale"].astype(p_fresh.dtype)
+    if offset is not None:
+        stale = jax.lax.dynamic_slice_in_dim(
+            stale, offset, p_fresh.shape[-1], axis=-1)
+    return jnp.where(stale > 0, p_stale, p_fresh)
+
+
+def conventional_frame(grads: PyTree, ctl, n: int) -> PyTree:
+    """Per-coordinate coherent gain of a misaligned d-dim frame (FO).
+
+    A conventional analog OTA payload occupies an n-symbol frame, and a
+    client whose timing/oscillator is off by θ sees that error
+    *accumulate* across the frame: the coordinate riding symbol k
+    combines with gain cos(kθ), recovered jit-side from the shipped
+    ``dsync_a`` = cos θ row via the Chebyshev identity
+    cos(kθ) = T_k(cos θ) (cos is even, so the sign of θ is irrelevant).
+    Averaged over clients with independent θ ~ N(0, σ²) the late-frame
+    coordinates random-phase out (E[cos kθ] = e^{−k²σ²/2}) — the server
+    decodes a gradient whose coordinates beyond the first few symbol
+    slots are annihilated, while others arrive sign-flipped. This is the
+    structural collapse a single-symbol scalar payload (k = 0, gain
+    cos θ) is immune to. Stale clients carry an old round's frame — zero
+    useful signal — so they are dropped from the combining sum while the
+    server still inverts by the full surviving count.
+
+    Coordinates map to symbol slots in flattened leaf order with a
+    global offset, so the gain profile tiles every ``n`` coordinates.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    mask = ctl["mask"]
+    theta = jnp.arccos(jnp.clip(ctl["dsync_a"], -1.0, 1.0))     # [K]
+    w = mask * (1.0 - ctl["dsync_stale"])                       # [K]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    out = []
+    off = 0
+    for leaf in leaves:
+        k = (off + jnp.arange(leaf.size)) % n                   # [d_leaf]
+        gain = (jnp.cos(jnp.outer(k.astype(theta.dtype), theta))
+                @ w) / denom                                    # [d_leaf]
+        out.append(leaf * gain.reshape(leaf.shape).astype(leaf.dtype))
+        off += leaf.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def conventional_ici(grads: PyTree, ctl, noise_key,
+                     ref: Optional[PyTree] = None) -> PyTree:
+    """Inter-symbol interference a misaligned d-dim frame injects (FO).
+
+    A conventional analog OTA server decodes the d-dimensional gradient
+    frame by inverting the *nominal* coherent gain; the energy the
+    misaligned clients lose (1 − a²) does not vanish — it lands across
+    the frame as interference. Modeled as per-leaf Gaussian noise scaled
+    by the misaligned energy fraction times the leaf's RMS, keyed off
+    the round's noise_bits so it is reproducible and engine-invariant.
+    ``ref`` supplies the RMS reference (the *transmitted* gradient);
+    interference energy tracks what the clients radiated, not the
+    attenuated decode it lands on.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    mask = ctl["mask"]
+    a = ctl["dsync_frame"]
+    scale = (jnp.sqrt(jnp.sum(mask * (1.0 - a * a)))
+             / jnp.maximum(jnp.sum(mask), 1.0))
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    refs = jax.tree_util.tree_leaves(ref) if ref is not None else leaves
+    keys = jax.random.split(
+        jax.random.fold_in(noise_key, DESYNC_ICI_TAG), len(leaves))
+    noisy = []
+    for leaf, r, key in zip(leaves, refs, keys):
+        rms = jnp.sqrt(jnp.mean(jnp.square(r)) + 1e-12)
+        noisy.append(leaf + (scale * rms).astype(leaf.dtype)
+                     * jax.random.normal(key, leaf.shape, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, noisy)

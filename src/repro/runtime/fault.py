@@ -34,6 +34,19 @@ class FaultModel:
     seed: int = 0
 
     def __post_init__(self):
+        """Validate probabilities and seed the replayable rng stream."""
+        if self.n_clients < 1:
+            raise ValueError(f"n_clients must be >= 1, got {self.n_clients}")
+        for name in ("dropout_p", "straggler_p"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {p}")
+        if self.dropout_p + self.straggler_p > 1.0:
+            raise ValueError(
+                f"dropout_p + straggler_p must be <= 1 (the per-round "
+                f"keep-probability 1 - dropout_p - straggler_p would be "
+                f"negative), got {self.dropout_p} + {self.straggler_p} = "
+                f"{self.dropout_p + self.straggler_p}")
         self._rng = np.random.default_rng(self.seed)
         self._down_until = np.zeros(self.n_clients, dtype=np.int64)
 
@@ -65,6 +78,7 @@ class ElasticSchedule:
     events: tuple = ()
 
     def active_k(self, t: int) -> int:
+        """Planned number of active clients in round t (last event wins)."""
         k = self.n_clients
         for round_t, k_new in sorted(self.events):
             if t >= round_t:
@@ -72,6 +86,7 @@ class ElasticSchedule:
         return max(1, min(k, self.n_clients))
 
     def membership_mask(self, t: int) -> np.ndarray:
+        """[K] 0/1 mask activating the first active_k(t) client slots."""
         mask = np.zeros(self.n_clients, dtype=np.float32)
         mask[: self.active_k(t)] = 1.0
         return mask
@@ -80,7 +95,16 @@ class ElasticSchedule:
 def combined_mask(t: int, fault: Optional[FaultModel] = None,
                   elastic: Optional[ElasticSchedule] = None,
                   n_clients: Optional[int] = None) -> np.ndarray:
+    """[K] survival ∧ membership mask for round t (never all-zero).
+
+    With neither model, ``n_clients`` is required to size the all-ones
+    mask (a clear error here beats a TypeError deep in numpy).
+    """
     if fault is None and elastic is None:
+        if n_clients is None:
+            raise ValueError(
+                "combined_mask: n_clients is required when neither a "
+                "FaultModel nor an ElasticSchedule is given")
         return np.ones(n_clients, dtype=np.float32)
     mask = None
     if elastic is not None:

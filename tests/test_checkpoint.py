@@ -111,6 +111,59 @@ def test_double_buffered_snapshot_survives_donation(tmp_path, params):
                                   np.arange(12.0).reshape(3, 4))
 
 
+def test_async_writer_ioerror_keeps_last_good(tmp_path, params,
+                                              monkeypatch):
+    """A real IOError on the writer thread (disk full, permissions) is
+    retried, then swallowed under the keep-last-good contract — it must
+    never propagate into the training thread, and the previous checkpoint
+    must survive untouched."""
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), write_retries=2)
+    acp.save(1, params, extra={})
+    acp.wait()
+
+    def broken_save(*a, **kw):
+        raise IOError("No space left on device")
+
+    monkeypatch.setattr(ckpt, "save", broken_save)
+    acp.save(2, params, extra={})       # returns immediately, no raise
+    acp.wait()                          # writer thread swallowed the error
+    assert acp.write_failures == 1
+    assert acp.retries.get("ckpt_write", 0) == 1     # write_retries - 1
+    monkeypatch.undo()
+    assert ckpt.latest_valid(str(tmp_path)).endswith("step_00000001")
+    like = jax.tree_util.tree_map(jnp.zeros_like, params)
+    restored, step, _ = ckpt.restore(ckpt.latest_valid(str(tmp_path)), like)
+    assert step == 1
+
+
+def test_restore_rejects_torn_npz(tmp_path, params):
+    """A half-written arrays.npz (manifest intact) must never restore."""
+    path = ckpt.save(str(tmp_path), 3, params)
+    ckpt.tear_checkpoint(path)
+    like = jax.tree_util.tree_map(jnp.zeros_like, params)
+    with pytest.raises(Exception):      # BadZipFile/IOError: anything but
+        ckpt.restore(path, like)        # a silent half-restore
+
+
+def test_valid_checkpoint_and_latest_valid_walk(tmp_path, params):
+    """latest_valid walks newest-first past any mix of damage: torn npz,
+    missing manifest, missing npz — and returns None when nothing valid
+    survives."""
+    assert ckpt.latest_valid(str(tmp_path / "missing")) is None
+    for step in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), step, params, keep=10)
+    assert ckpt.valid_checkpoint(str(tmp_path / "step_00000004"))
+    ckpt.tear_checkpoint(str(tmp_path / "step_00000004"))
+    os.remove(tmp_path / "step_00000003" / "manifest.json")
+    os.remove(tmp_path / "step_00000002" / "arrays.npz")
+    assert not ckpt.valid_checkpoint(str(tmp_path / "step_00000004"))
+    # naive latest() still points at the torn one; the CRC walk recovers
+    assert ckpt.latest(str(tmp_path)).endswith("step_00000004")
+    assert ckpt.latest_valid(str(tmp_path)).endswith("step_00000001")
+    ckpt.tear_checkpoint(str(tmp_path / "step_00000001"))
+    assert ckpt.latest_valid(str(tmp_path)) is None
+
+
 def test_numpy_params_fall_back_to_sync_snapshot(tmp_path):
     """Host-side pytrees (no jax arrays) take the synchronous path even
     with double_buffer on — nothing to copy_to_host_async."""

@@ -1,0 +1,240 @@
+"""Desynchronization modeling: trace determinism, ctl rows, neutrality.
+
+The load-bearing contract: with `desync=None` (or an inert config) every
+engine traces the bit-exact historical program — the dsync_* ctl rows are
+absent and `desync.stale_payload` is never called. With an active model,
+loop and scan stay bitwise identical to each other while the trajectory
+genuinely diverges from the clean run.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import DesyncConfig
+from repro.core import engine as eng
+from repro.core import fedsim, pairzero
+from repro.core import power_control as pc
+from repro.runtime import desync as ds
+
+
+# ---------------------------------------------------------------------------
+# DesyncModel: validation, determinism, chunk invariance
+# ---------------------------------------------------------------------------
+
+def test_model_validation():
+    with pytest.raises(ValueError, match="fraction"):
+        ds.DesyncModel(fraction=1.5)
+    with pytest.raises(ValueError, match="max_lag"):
+        ds.DesyncModel(max_lag=0)
+    with pytest.raises(ValueError, match="phase_std"):
+        ds.DesyncModel(phase_std=-0.1)
+    with pytest.raises(ValueError, match="frame_symbols"):
+        ds.DesyncModel(frame_symbols=0)
+
+
+def test_active_property():
+    assert not ds.DesyncModel().active
+    assert not ds.DesyncModel(max_lag=7, frame_symbols=64).active
+    assert ds.DesyncModel(fraction=0.1).active
+    assert ds.DesyncModel(phase_std=0.1).active
+
+
+def test_resolve_inert_config_is_none():
+    """An all-zero DesyncConfig must resolve to the historical program."""
+
+    class FakePz:
+        desync = DesyncConfig(fraction=0.0, phase_std=0.0)
+
+    assert ds.resolve(FakePz()) is None
+    FakePz.desync = None
+    assert ds.resolve(FakePz()) is None
+    FakePz.desync = DesyncConfig(fraction=0.5)
+    assert ds.resolve(FakePz()).fraction == 0.5
+
+
+def test_sync_trace_chunk_invariant():
+    """Per-round seeding: the realization is identical however the round
+    range is split (the property resume + scan chunking rely on)."""
+    m = ds.DesyncModel(fraction=0.4, max_lag=3, phase_std=0.2, seed=5)
+    whole = m.sync_trace(0, 12, 6)
+    a = m.sync_trace(0, 7, 6)
+    b = m.sync_trace(7, 12, 6)
+    for w, x, y in zip(whole, a, b, strict=True):
+        np.testing.assert_array_equal(w, np.concatenate([x, y]))
+
+
+def test_sync_trace_stale_zero_before_lag():
+    """Round t can only be stale against an existing round t-d >= 0."""
+    m = ds.DesyncModel(fraction=1.0, max_lag=4, seed=0)
+    stale, lag, _, _ = m.sync_trace(0, 20, 4)
+    for i in range(20):
+        if i < lag[i]:
+            assert stale[i].sum() == 0.0
+    # and staleness does occur once rounds exist to be stale against
+    assert stale[10:].sum() > 0
+
+
+def test_frame_gain_limits():
+    # n=1 is the scalar payload: no frame to decohere, gain 1 everywhere
+    theta = np.linspace(-1.0, 1.0, 11)
+    np.testing.assert_allclose(ds.frame_gain(theta, 1), np.ones(11))
+    # theta=0 is perfect sync at any frame length
+    assert ds.frame_gain(np.zeros(3), 64) == pytest.approx(1.0)
+    # the claim cell: a 64-symbol frame at 0.3 rad has collapsed
+    assert ds.frame_gain(np.array([0.3]), 64)[0] < 0.05
+    # gain is an attenuation, never again
+    assert (ds.frame_gain(theta, 64) <= 1.0 + 1e-12).all()
+
+
+def test_control_rows_lagged_seed():
+    """dsync_seed is zo.round_seed(base, t - d) with the same d the
+    sync trace drew (clamped at round 0)."""
+    from repro.core import zo
+    m = ds.DesyncModel(fraction=0.5, max_lag=3, seed=2)
+    rows, stale = ds.control_rows(m, base_seed=11, t0=4, t1=10, n_clients=5)
+    _, lag, _, _ = m.sync_trace(4, 10, 5)
+    for i, t in enumerate(range(4, 10)):
+        expect = np.uint32(zo.round_seed(11, np.uint32(max(t - lag[i], 0))))
+        assert rows["dsync_seed"][i] == expect
+    np.testing.assert_array_equal(stale, rows["dsync_stale"])
+
+
+# ---------------------------------------------------------------------------
+# ctl rows: only-when-active, shapes, chunk invariance through build_trace
+# ---------------------------------------------------------------------------
+
+def _schedule(pz, rounds):
+    from repro.channel import RayleighFading
+    h = RayleighFading().realize(pz.seed ^ 0xC4A7, rounds, pz.n_clients).h
+    return pc.make_schedule(
+        "analog", "solution", h, power=100.0, n0=1.0, gamma=5.0,
+        n_clients=pz.n_clients, e0=pz.power.e0,
+        contraction_a=pz.power.contraction_a,
+        contraction_a_tilde=pz.power.contraction_a_tilde,
+        epsilon=5.0, delta=0.01)
+
+
+def test_ctl_rows_only_when_active(make_pz):
+    pz = make_pz(rounds=8)
+    sched = _schedule(pz, 8)
+    off = eng.build_trace(sched, pz, 0, 8)
+    for row in ("dsync_seed", "dsync_stale", "dsync_a", "dsync_frame"):
+        assert row not in off.ctl
+    assert off.host_stale is None
+
+    model = ds.DesyncModel(fraction=0.5, max_lag=2, phase_std=0.2, seed=0)
+    on = eng.build_trace(sched, pz, 0, 8, desync=model)
+    assert np.asarray(on.ctl["dsync_seed"]).shape == (8,)
+    for row in ("dsync_stale", "dsync_a", "dsync_frame"):
+        assert np.asarray(on.ctl[row]).shape == (8, pz.n_clients)
+    assert on.host_stale.shape == (8, pz.n_clients)
+    # the non-dsync rows are untouched by the extra rows
+    for key in off.ctl:
+        np.testing.assert_array_equal(np.asarray(off.ctl[key]),
+                                      np.asarray(on.ctl[key]))
+
+
+def test_ctl_rows_chunk_invariant(make_pz):
+    pz = make_pz(rounds=10)
+    sched = _schedule(pz, 10)
+    model = ds.DesyncModel(fraction=0.5, max_lag=2, phase_std=0.3, seed=1)
+    whole = eng.build_trace(sched, pz, 0, 10, desync=model)
+    a = eng.build_trace(sched, pz, 0, 6, desync=model)
+    b = eng.build_trace(sched, pz, 6, 10, desync=model)
+    for row in ("dsync_seed", "dsync_stale", "dsync_a", "dsync_frame"):
+        np.testing.assert_array_equal(
+            np.asarray(whole.ctl[row]),
+            np.concatenate([np.asarray(a.ctl[row]),
+                            np.asarray(b.ctl[row])]))
+
+
+# ---------------------------------------------------------------------------
+# Structural neutrality + engine equivalence (system level)
+# ---------------------------------------------------------------------------
+
+def _desynced_pz(make_pz, rounds=6, **kw):
+    cfg = DesyncConfig(fraction=0.5, max_lag=2, phase_std=0.2, seed=0)
+    return dataclasses.replace(make_pz(rounds=rounds, **kw), desync=cfg)
+
+
+def test_historical_program_never_touches_desync(tiny_model, make_pz,
+                                                 make_pipeline, monkeypatch):
+    """Neutrality pin: without an active model the step function must not
+    even CALL the desync helpers — the branch is absent from the trace,
+    not dynamically disabled."""
+    def boom(*a, **kw):
+        raise AssertionError("desync helper reached from a clean run")
+
+    monkeypatch.setattr(ds, "stale_payload", boom)
+    monkeypatch.setattr(ds, "conventional_ici", boom)
+    pairzero.make_zo_step.cache_clear()   # cached steps closed over the real fn
+    pairzero.make_fo_step.cache_clear()
+    pz = make_pz(rounds=3)
+    fedsim.run(tiny_model, pz, make_pipeline(), rounds=3, engine="loop")
+    fedsim.run(tiny_model, pz, make_pipeline(), rounds=3, engine="scan",
+               chunk_rounds=2)
+    fo = make_pz(variant="fo", scheme="perfect", rounds=3)
+    fedsim.run(tiny_model, fo, make_pipeline(), rounds=3, engine="loop")
+
+
+def test_inert_config_bitwise_equals_no_config(tiny_model, make_pz,
+                                               make_pipeline):
+    """DesyncConfig with every knob at zero == no config, bit for bit."""
+    pz = make_pz(rounds=4)
+    inert = dataclasses.replace(
+        pz, desync=DesyncConfig(fraction=0.0, phase_std=0.0, max_lag=9))
+    ref = fedsim.run(tiny_model, pz, make_pipeline(), rounds=4)
+    res = fedsim.run(tiny_model, inert, make_pipeline(), rounds=4)
+    assert res.losses == ref.losses
+    assert res.p_hats == ref.p_hats
+
+
+def test_desync_run_loop_scan_bitwise(tiny_model, make_pz, make_pipeline):
+    """Active desync preserves the loop == scan bitwise contract, and the
+    trajectory genuinely differs from the clean run."""
+    pz = _desynced_pz(make_pz, rounds=6)
+    loop = fedsim.run(tiny_model, pz, make_pipeline(), rounds=6,
+                      engine="loop")
+    scan = fedsim.run(tiny_model, pz, make_pipeline(), rounds=6,
+                      engine="scan", chunk_rounds=4)
+    assert scan.losses == loop.losses
+    assert scan.p_hats == loop.p_hats
+    clean = fedsim.run(tiny_model, make_pz(rounds=6), make_pipeline(),
+                       rounds=6, engine="loop")
+    assert loop.p_hats != clean.p_hats
+
+
+def test_desync_fo_loop_scan_close(tiny_model, make_pz, make_pipeline):
+    """The conventional-frame path (Dirichlet gain + ICI) runs on both
+    engines; FO gets fp-tolerance like the clean FO baseline."""
+    pz = _desynced_pz(make_pz, rounds=4, variant="fo", scheme="perfect")
+    pz = dataclasses.replace(
+        pz, desync=dataclasses.replace(pz.desync, frame_symbols=64))
+    loop = fedsim.run(tiny_model, pz, make_pipeline(), rounds=4,
+                      engine="loop")
+    scan = fedsim.run(tiny_model, pz, make_pipeline(), rounds=4,
+                      engine="scan", chunk_rounds=3)
+    np.testing.assert_allclose(scan.losses, loop.losses, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_k_sync_accounting(tiny_model, make_pz, make_pipeline):
+    """round_k_sync = surviving clients on the CURRENT round seed: equal to
+    k_eff on clean runs, strictly below it on rounds with stale clients."""
+    pz = _desynced_pz(make_pz, rounds=8)
+    exp = fedsim.Experiment(tiny_model, pz, make_pipeline(), rounds=8,
+                            engine="scan", chunk_rounds=3)
+    exp.run()
+    ks, ke = np.asarray(exp.round_k_sync), np.asarray(exp.round_k_eff)
+    assert ks.shape == ke.shape == (8,)
+    assert (ks <= ke + 1e-9).all() and (ks >= 0).all()
+    stale_rows = np.asarray(exp.desync.sync_trace(0, 8, pz.n_clients)[0])
+    expect = ke - stale_rows.sum(axis=1)   # full masks: every client alive
+    np.testing.assert_allclose(ks, expect)
+    assert (ks < ke).any()                 # the scenario genuinely bites
+
+    clean = fedsim.Experiment(tiny_model, make_pz(rounds=4),
+                              make_pipeline(), rounds=4)
+    clean.run()
+    np.testing.assert_array_equal(clean.round_k_sync, clean.round_k_eff)

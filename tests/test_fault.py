@@ -9,6 +9,29 @@ def test_no_faults_full_mask():
     assert mask.sum() == 5
 
 
+def test_faultmodel_validation():
+    import pytest
+    with pytest.raises(ValueError, match="n_clients"):
+        FaultModel(n_clients=0)
+    with pytest.raises(ValueError, match="dropout_p"):
+        FaultModel(n_clients=4, dropout_p=1.2)
+    with pytest.raises(ValueError, match="straggler_p"):
+        FaultModel(n_clients=4, straggler_p=-0.1)
+    # each probability is legal alone but their sum exceeds 1: the
+    # per-round keep-probability would go negative
+    with pytest.raises(ValueError, match="dropout_p . straggler_p"):
+        FaultModel(n_clients=4, dropout_p=0.7, straggler_p=0.5)
+
+
+def test_combined_mask_requires_population():
+    import pytest
+    with pytest.raises(ValueError, match="n_clients"):
+        combined_mask(0, None, None)
+    # any of the three sources pins K without the explicit arg
+    es = ElasticSchedule(n_clients=6)
+    assert combined_mask(0, None, es).shape == (6,)
+
+
 def test_dropout_rate():
     fm = FaultModel(n_clients=100, dropout_p=0.3, seed=0)
     rates = [fm.survival_mask(t).mean() for t in range(200)]
@@ -42,6 +65,33 @@ def test_elastic_schedule():
     assert es.active_k(10) == 4
     assert es.active_k(25) == 6
     assert es.membership_mask(12).sum() == 4
+
+
+def test_elastic_event_boundaries_through_scan():
+    """Membership flips land on the exact event round even when a scan
+    chunk spans the event — the precomputed trace replays the per-round
+    loop's masks row for row."""
+    from repro.configs.base import (ModelConfig, PairZeroConfig,
+                                    PowerControlConfig, ZOConfig)
+    from repro.core import engine as eng
+    from repro.core import power_control as pc
+
+    es = ElasticSchedule(n_clients=5, events=((4, 3), (8, 5)))
+    pz = PairZeroConfig(variant="analog", n_clients=5, rounds=10,
+                        zo=ZOConfig(mu=1e-3, lr=5e-3, clip_gamma=5.0,
+                                    n_perturb=1),
+                        power=PowerControlConfig(scheme="perfect"))
+    sched = pc.PowerSchedule(c=np.ones(10), sigma=np.zeros((10, 5)),
+                             scheme="perfect", n0=0.0)
+    # chunks [0,6) and [6,10) both straddle an event round (4 and 8)
+    tr_a = eng.build_trace(sched, pz, 0, 6, elastic=es)
+    tr_b = eng.build_trace(sched, pz, 6, 10, elastic=es)
+    masks = np.concatenate([np.asarray(tr_a.ctl["mask"]),
+                            np.asarray(tr_b.ctl["mask"])])
+    expect = np.stack([es.membership_mask(t) for t in range(10)])
+    np.testing.assert_array_equal(masks, expect)
+    assert masks[3].sum() == 5 and masks[4].sum() == 3   # flip AT round 4
+    assert masks[7].sum() == 3 and masks[8].sum() == 5   # and back at 8
 
 
 def test_training_survives_faults():

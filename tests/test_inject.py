@@ -1,0 +1,233 @@
+"""Fault injection + bounded retry: determinism, recovery, degradation.
+
+The chaos layer's contract: faults fire at site ENTRY as a pure function
+of (seed, site, invocation index), recoveries are span-instrumented and
+counted, and a recovered run finishes bit-identical to an undisturbed
+one — the retried work replays from a clean slate.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import engine as eng
+from repro.core import fedsim
+from repro.obs import spans as ob
+from repro.runtime import inject as inj
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: spec parsing, determinism, selectors
+# ---------------------------------------------------------------------------
+
+def test_from_specs_parsing():
+    injector = inj.FaultInjector.from_specs(
+        ["dispatch:exception:@2,5", "ckpt_write:torn_write",
+         "chunk_prep:delay:0.25"])
+    assert injector.faults["dispatch"].at == (2, 5)
+    assert injector.faults["ckpt_write"].p == 1.0
+    assert injector.faults["chunk_prep"].p == 0.25
+    with pytest.raises(ValueError, match="spec"):
+        inj.FaultInjector.from_specs(["dispatch"])
+    with pytest.raises(ValueError, match="site"):
+        inj.FaultInjector.from_specs(["warp_core:exception"])
+    with pytest.raises(ValueError, match="mode"):
+        inj.FaultInjector.from_specs(["dispatch:segfault"])
+    with pytest.raises(ValueError, match="probability"):
+        inj.FaultInjector.from_specs(["dispatch:exception:1.5"])
+
+
+def test_exact_invocation_selector():
+    injector = inj.FaultInjector.from_specs(["dispatch:exception:@1,3"])
+    fired = []
+    for i in range(5):
+        try:
+            injector.fire("dispatch")
+            fired.append(False)
+        except inj.InjectedFault:
+            fired.append(True)
+    assert fired == [False, True, False, True, False]
+    assert injector.fired["dispatch"] == 2
+    assert injector.counts["dispatch"] == 5
+
+
+def test_probabilistic_fires_are_deterministic():
+    """Same (seed, site, invocation) => same decision, independent of any
+    other site's history or process state."""
+    a = inj.FaultInjector.from_specs(["dispatch:delay:0.3",
+                                      "chunk_prep:delay:0.4"], seed=7)
+    b = inj.FaultInjector.from_specs(["dispatch:delay:0.3"], seed=7)
+    seq_a = [a.fire("dispatch") for _ in range(50)]
+    for _ in range(13):
+        a.fire("chunk_prep")                  # interleaved other-site fires
+    b_seq = [b.fire("dispatch") for _ in range(50)]
+    assert seq_a == b_seq
+    assert 0 < seq_a.count("delay") < 50      # p=0.3 actually does both
+    c = inj.FaultInjector.from_specs(["dispatch:delay:0.3"], seed=8)
+    assert [c.fire("dispatch") for _ in range(50)] != seq_a
+
+
+def test_unarmed_site_never_fires():
+    injector = inj.FaultInjector.from_specs(["dispatch:exception"])
+    assert injector.fire("ckpt_write") is None
+    assert injector.counts["ckpt_write"] == 1
+    assert injector.fired == {}
+
+
+# ---------------------------------------------------------------------------
+# with_retries: spans, counters, exhaustion
+# ---------------------------------------------------------------------------
+
+def test_with_retries_recovers_and_instruments():
+    injector = inj.FaultInjector.from_specs(["dispatch:exception:@0"])
+    tracer = ob.Tracer()
+    retries = {}
+    calls = []
+    out = inj.with_retries(lambda: calls.append(1) or "ok", site="dispatch",
+                           attempts=3, injector=injector, tracer=tracer,
+                           backoff_s=0.0, retries=retries)
+    assert out == "ok"
+    assert calls == [1]                       # fault fired BEFORE fn ran
+    assert retries == {"dispatch": 1}
+    spans = [e for e in tracer.spans() if e["name"] == "retry"]
+    assert len(spans) == 1
+    assert spans[0]["args"]["site"] == "dispatch"
+    assert spans[0]["args"]["error"] == "InjectedFault"
+
+
+def test_with_retries_exhausts_and_raises():
+    injector = inj.FaultInjector.from_specs(["dispatch:exception"])  # always
+    retries = {}
+    with pytest.raises(inj.InjectedFault):
+        inj.with_retries(lambda: "never", site="dispatch", attempts=3,
+                         injector=injector, backoff_s=0.0, retries=retries)
+    assert retries == {"dispatch": 2}         # attempts-1 re-tries
+
+
+def test_with_retries_plain_call_without_injector():
+    assert inj.with_retries(lambda: 42, site="dispatch") == 42
+    with pytest.raises(KeyError):
+        inj.with_retries(lambda: {}["x"], site="dispatch", attempts=2,
+                         backoff_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# ChunkPrefetcher degradation: worker death -> inline re-run, once
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_degrades_to_inline_rerun():
+    injector = inj.FaultInjector.from_specs(["chunk_prep:exception:@1"])
+    tracer = ob.Tracer()
+    prepared = []
+    pf = eng.ChunkPrefetcher(lambda a, b: prepared.append((a, b)) or (a, b),
+                             [(0, 2), (2, 4), (4, 6)], overlap=True,
+                             tracer=tracer, injector=injector)
+    out = []
+    for i in range(3):
+        pf.kick(i)                 # chunk i's prep on the worker thread
+        out.append(pf.get(i))
+    pf.close()
+    # invocation 1 = chunk 1's kicked prep died; re-ran inline (invocation
+    # 2, clean) and every payload still arrived in order
+    assert out == [(0, 2), (2, 4), (4, 6)]
+    assert pf.degraded == 1
+    assert prepared == [(0, 2), (2, 4), (4, 6)]
+    names = [e["name"] for e in tracer.spans()]
+    assert names.count("prefetch_degraded") == 1
+
+
+def test_prefetcher_second_failure_propagates():
+    injector = inj.FaultInjector.from_specs(["chunk_prep:exception"])
+    pf = eng.ChunkPrefetcher(lambda a, b: (a, b), [(0, 2)], overlap=True,
+                             injector=injector)
+    pf.kick(0)
+    with pytest.raises(inj.InjectedFault):
+        pf.get(0)                  # inline re-run also dies -> propagate
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer under injection: retry, keep-last-good, torn writes
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def params():
+    import jax.numpy as jnp
+    return {"w": jnp.arange(8.0), "b": jnp.ones((3,))}
+
+
+def test_ckpt_write_retry_then_success(tmp_path, params):
+    injector = inj.FaultInjector.from_specs(["ckpt_write:exception:@0"])
+    tracer = ob.Tracer()
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), tracer=tracer,
+                                 injector=injector)
+    acp.save(1, params, extra={})
+    acp.wait()
+    assert acp.write_failures == 0
+    assert acp.retries == {"ckpt_write": 1}
+    assert ckpt.latest_valid(str(tmp_path)).endswith("step_00000001")
+    assert any(e["name"] == "retry" for e in tracer.spans())
+
+
+def test_ckpt_write_keep_last_good(tmp_path, params):
+    """Exhausting write retries swallows the failure and keeps the last
+    good checkpoint — a flaky filesystem must not abort training."""
+    injector = inj.FaultInjector.from_specs(["ckpt_write:exception:@1,2"])
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), injector=injector,
+                                 write_retries=2)
+    acp.save(1, params, extra={})             # invocation 0: clean
+    acp.wait()
+    acp.save(2, params, extra={})             # invocations 1,2: both die
+    acp.wait()
+    assert acp.write_failures == 1
+    assert ckpt.latest_valid(str(tmp_path)).endswith("step_00000001")
+
+
+def test_ckpt_snapshot_failure_skips_boundary(tmp_path, params):
+    injector = inj.FaultInjector.from_specs(["ckpt_snapshot:exception:@0"])
+    tracer = ob.Tracer()
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), tracer=tracer,
+                                 injector=injector)
+    acp.save(1, params, extra={})             # boundary skipped, no raise
+    acp.wait()
+    acp.save(2, params, extra={})             # next boundary lands
+    acp.wait()
+    assert acp.snapshot_failures == 1
+    assert ckpt.latest(str(tmp_path)).endswith("step_00000002")
+    assert any(e["name"] == "ckpt_skipped" for e in tracer.events())
+
+
+def test_torn_write_detected_and_skipped(tmp_path, params):
+    """torn_write truncates the just-written npz: naive latest() still
+    points at it, the CRC walk falls back past it."""
+    injector = inj.FaultInjector.from_specs(["ckpt_write:torn_write:@1"])
+    acp = ckpt.AsyncCheckpointer(str(tmp_path), injector=injector)
+    acp.save(1, params, extra={})
+    acp.wait()
+    acp.save(2, params, extra={})             # written, then torn
+    acp.wait()
+    torn = ckpt.latest(str(tmp_path))
+    assert torn.endswith("step_00000002")
+    assert not ckpt.valid_checkpoint(torn)
+    assert ckpt.latest_valid(str(tmp_path)).endswith("step_00000001")
+
+
+# ---------------------------------------------------------------------------
+# End to end: an injected run recovers bit-identical to a clean one
+# ---------------------------------------------------------------------------
+
+def test_injected_run_recovers_bit_exact(tiny_model, make_pz,
+                                         make_pipeline):
+    """dispatch dies once and a prefetch worker dies once; the run retries
+    /degrades and still lands on the clean run's exact trajectory, with
+    the recoveries visible in RunResult.retry_attempts."""
+    pz = make_pz(rounds=6)
+    clean = fedsim.run(tiny_model, pz, make_pipeline(), rounds=6,
+                       engine="scan", chunk_rounds=2)
+    assert clean.retry_attempts == {}
+    injector = inj.FaultInjector.from_specs(
+        ["dispatch:exception:@1", "chunk_prep:exception:@1"])
+    res = fedsim.run(tiny_model, pz, make_pipeline(), rounds=6,
+                     engine="scan", chunk_rounds=2, injector=injector)
+    assert res.losses == clean.losses
+    assert res.p_hats == clean.p_hats
+    assert res.retry_attempts == {"dispatch": 1, "prefetch_degraded": 1}

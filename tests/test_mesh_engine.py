@@ -182,6 +182,34 @@ def test_mesh_byzantine_noise_behavior_bitwise(tiny_model, make_pz,
     assert res4.losses == ref4.losses == res.losses
 
 
+def test_mesh_desync_bitwise(tiny_model, make_pz, make_pipeline, mesh8):
+    """Active desync on the mesh == single-device, bitwise: the full-[K]
+    dsync_stale/dsync_a rows ship replicated with the control block and
+    each shard slices its own client window (draw-then-slice, like the
+    byzantine noise behavior), while the stale dual forward rides the
+    same shard_map body."""
+    import dataclasses
+
+    from repro.configs.base import DesyncConfig
+    dz = DesyncConfig(fraction=0.5, max_lag=2, phase_std=0.2, seed=0)
+    pz = dataclasses.replace(
+        make_pz(scheme="solution", rounds=6, n_clients=8), desync=dz)
+    ref, res = _runs(tiny_model, pz, make_pipeline, mesh8)
+    assert res.losses == ref.losses
+    assert res.p_hats == ref.p_hats
+    # multi-client shards slice interior offsets of the same stale rows
+    mesh4 = make_client_mesh("4")
+    ref4, res4 = _runs(tiny_model, pz, make_pipeline, mesh4)
+    assert res4.losses == ref4.losses == res.losses
+    # and the scenario is genuinely active in the meshed run
+    clean = fedsim.run(tiny_model,
+                       make_pz(scheme="solution", rounds=6, n_clients=8),
+                       make_pipeline(vocab=tiny_model.vocab_size,
+                                     n_clients=8, batch=2, seq=16),
+                       rounds=6, engine="scan", chunk_rounds=4)
+    assert res.p_hats != clean.p_hats
+
+
 # ---------------------------------------------------------------------------
 # Telemetry neutrality on the mesh lane
 # ---------------------------------------------------------------------------

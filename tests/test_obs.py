@@ -194,7 +194,7 @@ def test_ledger_matches_runresult_exactly(tiny_model, make_pz,
 
     led = obs.read_ledger(path)
     rows = led["rows"]
-    assert led["header"]["schema"] == "trilemma_ledger/v1"
+    assert led["header"]["schema"] == "trilemma_ledger/v2"
     assert led["header"]["n_clients"] == pz.n_clients
     assert len(rows) == res.steps == 8
 

@@ -1,0 +1,216 @@
+"""Process-level crash consistency harness: SIGKILL, resume, compare.
+
+    python tools/chaos_run.py [--engine loop|scan] [--rounds 24]
+        [--ckpt-every 4] [--seed 0] [--tear] [--keep-dirs]
+
+The contract under test — crash-consistent resume end to end, across a
+real process boundary (no in-process mocking):
+
+  1. run the training CLI uninterrupted to completion (the reference),
+  2. run the identical command in a fresh checkpoint directory and
+     SIGKILL the process the moment a sampled early checkpoint lands
+     (the round is drawn from the run's own boundary grid, seeded),
+  3. optionally (--tear) truncate the newest surviving checkpoint's
+     arrays.npz in half — the torn-write a SIGKILL mid-save leaves —
+     so resume must fall back to the last CRC-valid one
+     (checkpoint.latest_valid),
+  4. re-run the identical command: it must resume (summary.resumed_from
+     > 0) and reach the final round,
+  5. the final checkpoints of the reference and the killed+resumed run
+     must hold bitwise-identical parameters (the manifests' CRC-32
+     maps are compared leaf by leaf — CRC equality over identical leaf
+     names IS byte equality of the saved arrays).
+
+Works because everything the run consumes is derived from the config
+seed over the PLANNED horizon: the channel trace, the power schedule,
+the per-round ZO seeds and the data order all replay identically from
+any resume point. Exit 0 on pass; 1 on any violation; 2 if the child
+finished before the kill landed twice in a row (raise --rounds).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.checkpoint import checkpoint as ckpt  # noqa: E402
+
+
+def train_cmd(args, ckpt_dir: str, out: str) -> list:
+    """The training CLI invocation under test (identical across runs)."""
+    return [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", args.arch, "--reduced",
+        "--rounds", str(args.rounds), "--engine", args.engine,
+        "--chunk-rounds", str(args.ckpt_every),
+        "--clients", "4", "--batch", "4", "--seq-len", "16",
+        "--eval-every", "0", "--seed", str(args.seed),
+        "--checkpoint-dir", ckpt_dir,
+        "--checkpoint-every", str(args.ckpt_every),
+        "--out", out,
+    ]
+
+
+def run_to_completion(args, ckpt_dir: str) -> dict:
+    """Run the CLI to completion; return its --out summary."""
+    out = os.path.join(ckpt_dir, "summary.json")
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    proc = subprocess.run(train_cmd(args, ckpt_dir, out), env=env,
+                          capture_output=True, text=True)
+    if proc.returncode != 0:
+        print(proc.stdout)
+        print(proc.stderr, file=sys.stderr)
+        raise SystemExit(f"chaos_run: FAIL (training exited "
+                         f"{proc.returncode})")
+    with open(out) as f:
+        return json.load(f)
+
+
+def kill_at_checkpoint(args, ckpt_dir: str, kill_step: int,
+                       timeout_s: float = 600.0) -> bool:
+    """Launch the CLI; SIGKILL it once step_<kill_step> lands.
+
+    Returns True if the kill landed mid-run, False if the child finished
+    first (the caller retries with an earlier kill step).
+    """
+    target = os.path.join(ckpt_dir, f"step_{kill_step:08d}")
+    out = os.path.join(ckpt_dir, "summary.json")
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    child = subprocess.Popen(train_cmd(args, ckpt_dir, out), env=env,
+                             stdout=subprocess.DEVNULL,
+                             stderr=subprocess.DEVNULL)
+    deadline = time.monotonic() + timeout_s
+    try:
+        while time.monotonic() < deadline:
+            if os.path.isdir(target):
+                child.send_signal(signal.SIGKILL)
+                child.wait()
+                return True
+            if child.poll() is not None:
+                return False        # finished before the kill landed
+            time.sleep(0.05)
+        raise SystemExit("chaos_run: FAIL (child timed out before "
+                         f"checkpoint {kill_step})")
+    finally:
+        if child.poll() is None:
+            child.kill()
+            child.wait()
+
+
+def final_manifest(ckpt_dir: str, step: int) -> dict:
+    """The CRC-32 map of the final checkpoint (leaf name -> crc)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)["crc32"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", default="loop", choices=["loop", "scan"])
+    ap.add_argument("--arch", default="opt-125m")
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--ckpt-every", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tear", action="store_true",
+                    help="truncate the newest surviving checkpoint before "
+                         "resume (the torn write a SIGKILL mid-save "
+                         "leaves); resume must fall back past it")
+    ap.add_argument("--keep-dirs", action="store_true",
+                    help="keep the work directories for inspection")
+    args = ap.parse_args()
+    if args.rounds % args.ckpt_every != 0:
+        raise SystemExit("chaos_run: --rounds must be a multiple of "
+                         "--ckpt-every (the final checkpoint is compared)")
+
+    work = tempfile.mkdtemp(prefix="chaos_run_")
+    ref_dir = os.path.join(work, "ref")
+    chaos_dir = os.path.join(work, "chaos")
+    os.makedirs(ref_dir)
+    os.makedirs(chaos_dir)
+    errors = []
+    try:
+        print(f"chaos_run: engine={args.engine} rounds={args.rounds} "
+              f"ckpt_every={args.ckpt_every} tear={args.tear}", flush=True)
+        ref = run_to_completion(args, ref_dir)
+        print(f"chaos_run: reference done "
+              f"(final_loss={ref['final_loss']:.4f})", flush=True)
+
+        # the kill round: seeded draw from the EARLY boundary grid, so the
+        # killed run still has >= half the horizon left to replay. With
+        # --tear the newest survivor is destroyed, so at least TWO
+        # checkpoints must have landed for the fallback to have a target.
+        rng = np.random.default_rng([args.seed, 0xC4A05])
+        first = args.ckpt_every * (2 if args.tear else 1)
+        grid = list(range(first, max(args.rounds // 2, first) + 1,
+                          args.ckpt_every))
+        kill_step = int(rng.choice(grid))
+        killed = kill_at_checkpoint(args, chaos_dir, kill_step)
+        if not killed:          # child won the race: retry once, earliest
+            print("chaos_run: child finished before the kill; retrying "
+                  "at the first boundary", flush=True)
+            shutil.rmtree(chaos_dir)
+            os.makedirs(chaos_dir)
+            kill_step = first
+            if not kill_at_checkpoint(args, chaos_dir, kill_step):
+                raise SystemExit(2)
+        print(f"chaos_run: SIGKILLed at checkpoint {kill_step}", flush=True)
+
+        if args.tear:
+            newest = ckpt.latest(chaos_dir)
+            ckpt.tear_checkpoint(newest)
+            print(f"chaos_run: tore {os.path.basename(newest)}",
+                  flush=True)
+            if ckpt.latest_valid(chaos_dir) == newest:
+                errors.append("latest_valid returned the torn checkpoint")
+
+        resumed = run_to_completion(args, chaos_dir)
+        if resumed["resumed_from"] <= 0:
+            errors.append("resume run did not restore a checkpoint "
+                          f"(resumed_from={resumed['resumed_from']})")
+        elif args.tear and resumed["resumed_from"] >= kill_step:
+            # survivors are <= kill_step; tearing the newest must push
+            # the resume point strictly earlier
+            errors.append(f"resume started at {resumed['resumed_from']} "
+                          f"but the newest checkpoint (<= {kill_step}) "
+                          "was torn")
+        print(f"chaos_run: resumed from round {resumed['resumed_from']}",
+              flush=True)
+
+        ref_crc = final_manifest(ref_dir, args.rounds)
+        chaos_crc = final_manifest(chaos_dir, args.rounds)
+        if set(ref_crc) != set(chaos_crc):
+            errors.append("final checkpoints hold different leaf sets")
+        else:
+            bad = [n for n in ref_crc if ref_crc[n] != chaos_crc[n]]
+            if bad:
+                errors.append(
+                    f"{len(bad)}/{len(ref_crc)} leaves differ bitwise "
+                    f"after kill+resume (e.g. {bad[0]!r})")
+    finally:
+        if args.keep_dirs:
+            print(f"chaos_run: dirs kept at {work}", flush=True)
+        else:
+            shutil.rmtree(work, ignore_errors=True)
+
+    if errors:
+        print(f"chaos_run: FAIL ({len(errors)} violation(s))")
+        for e in errors:
+            print(f"  {e}")
+        sys.exit(1)
+    print(f"chaos_run: OK (kill+resume bitwise-equal over "
+          f"{len(ref_crc)} leaves, engine={args.engine})")
+
+
+if __name__ == "__main__":
+    main()

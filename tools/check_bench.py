@@ -28,6 +28,18 @@ Default mode (BENCH_engine.json, schema "bench_engine/v2") checks, in order:
   3. privacy under attack: eps_hat <= analytic eps on every audited row
      (`dominated` is never false).
 
+`--desync` mode (results/fig_desync.json, schema "fig_desync/v1",
+produced by benchmarks/fig_desync.py) checks:
+  1. schema shape: config block, zo/fo cell rows with retained-progress
+     fields, the claim block, the torn_fallback block;
+  2. the gated claim: at the claim cell (50% stale clients + the recorded
+     phase error) the seed-broadcast ZO uplink retained >= its recorded
+     threshold of clean-run loss progress while the n-symbol FO frame
+     retained <= its collapse threshold, and `claim.holds` is true;
+  3. crash consistency: the torn-checkpoint fallback rehearsal was
+     exercised, fell back past the torn write, and resumed to a final
+     state bitwise-equal to the uninterrupted run.
+
 `--kernels` mode (BENCH_kernels.json, schema "bench_kernels/v1",
 produced by benchmarks/kernel_memory.py) checks:
   1. schema shape: chained/fresh/fused rows at every size, per-size
@@ -63,6 +75,17 @@ KERNEL_GATE = ("size", "memory_overhead_fused_vs_chained",
                "dual_speed_fused_vs_fresh", "rounds_fused_vs_chained",
                "rounds_fused_vs_fresh")
 
+
+DESYNC_TOP = ("schema", "created_unix", "config", "zo", "fo", "claim",
+              "torn_fallback")
+DESYNC_ROW = ("mechanism", "stale_fraction", "phase_std", "frame_symbols",
+              "rounds", "first_loss", "final_loss", "uplink_bits",
+              "retained")
+DESYNC_CLAIM = ("stale_fraction", "phase_std", "frame_symbols",
+                "zo_retained", "zo_threshold", "fo_retained",
+                "fo_threshold", "holds")
+DESYNC_TORN = ("exercised", "fell_back", "resumed_from", "torn_step",
+               "bitwise_equal")
 
 ROBUST_TOP = ("schema", "created_unix", "config", "clean", "rows", "claim")
 ROBUST_ROW = ("transport", "behavior", "fraction", "defense", "rounds",
@@ -127,6 +150,67 @@ def check_robustness(rep: dict, args) -> None:
           f"{claim['fraction']:.0%} {claim['behavior']} on "
           f"{claim['transport']} (>= {claim['threshold']:.2f}); "
           f"eps_hat <= analytic eps on {audited} audited row(s))")
+
+
+def check_desync(rep: dict, args) -> None:
+    """Validate + gate results/fig_desync.json (see module docstring)."""
+    # 1. schema ----------------------------------------------------------
+    for key in DESYNC_TOP:
+        if key not in rep:
+            fail(f"missing top-level key {key!r}")
+    if rep["schema"] != "fig_desync/v1":
+        fail(f"unknown desync schema {rep['schema']!r}")
+    for block in ("zo", "fo"):
+        if not isinstance(rep[block], list) or not rep[block]:
+            fail(f"empty {block} rows")
+        for row in rep[block]:
+            for key in DESYNC_ROW:
+                if key not in row:
+                    fail(f"{block} row stale={row.get('stale_fraction')} "
+                         f"missing {key!r}")
+            if not (isinstance(row["final_loss"], (int, float))
+                    and row["final_loss"] > 0):
+                fail(f"non-positive final_loss in {block} row "
+                     f"stale={row.get('stale_fraction')}")
+
+    # 2. the gated claim -------------------------------------------------
+    claim = rep["claim"]
+    for key in DESYNC_CLAIM:
+        if key not in claim:
+            fail(f"claim block missing {key!r}")
+    if claim["holds"] is not True:
+        fail(f"desync claim does not hold: zo retained "
+             f"{claim.get('zo_retained')}, fo retained "
+             f"{claim.get('fo_retained')}")
+    if claim["zo_retained"] < claim["zo_threshold"]:
+        fail(f"claim.holds is true but zo_retained "
+             f"{claim['zo_retained']:.3f} < threshold "
+             f"{claim['zo_threshold']:.2f} — inconsistent artifact")
+    if claim["fo_retained"] > claim["fo_threshold"]:
+        fail(f"claim.holds is true but fo_retained "
+             f"{claim['fo_retained']:.3f} > threshold "
+             f"{claim['fo_threshold']:.2f} — inconsistent artifact")
+
+    # 3. crash consistency ----------------------------------------------
+    torn = rep["torn_fallback"]
+    for key in DESYNC_TORN:
+        if key not in torn:
+            fail(f"torn_fallback block missing {key!r}")
+    if torn["exercised"] is not True:
+        fail("torn_fallback rehearsal was not exercised")
+    if torn["fell_back"] is not True:
+        fail("torn checkpoint did not force a fallback (latest_valid "
+             "returned the torn one)")
+    if torn["bitwise_equal"] is not True:
+        fail("torn-fallback resume diverged bitwise from the "
+             "uninterrupted run")
+
+    print(f"check_bench: OK ({args.path}: zo retains "
+          f"{claim['zo_retained']:.2f} (>= {claim['zo_threshold']:.2f}) "
+          f"vs fo {claim['fo_retained']:.2f} "
+          f"(<= {claim['fo_threshold']:.2f}) at "
+          f"{claim['stale_fraction']:.0%} stale; torn fallback resumed "
+          f"from {torn['resumed_from']} bitwise-equal)")
 
 
 def check_kernels(rep: dict, args) -> None:
@@ -194,6 +278,9 @@ def main() -> None:
     ap.add_argument("--robustness", action="store_true",
                     help="validate results/fig_robustness.json instead of "
                          "BENCH_engine.json")
+    ap.add_argument("--desync", action="store_true",
+                    help="validate results/fig_desync.json instead of "
+                         "BENCH_engine.json")
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="required scan speedup over loop at --gate-size")
     ap.add_argument("--gate-size", default="opt-125m-reduced")
@@ -211,6 +298,9 @@ def main() -> None:
         return
     if args.robustness:
         check_robustness(rep, args)
+        return
+    if args.desync:
+        check_desync(rep, args)
         return
 
     # 1. schema ----------------------------------------------------------

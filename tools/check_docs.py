@@ -10,9 +10,10 @@ Checks, in order:
      would poison this process's jax).
   2. Module docstrings — the documented public modules
      (repro, repro.core.transport, repro.channel, repro.privacy,
-     repro.byzantine, repro.kernels, repro.obs) carry a module
-     docstring and every public top-level
-     class/function (and public method of a public class) carries one.
+     repro.byzantine, repro.kernels, repro.obs, repro.runtime and its
+     desync/inject submodules) carry a module docstring and every public
+     top-level class/function (and public method of a public class)
+     carries one.
      AST-based: no imports, works without ruff (CI additionally runs
      ruff's pydocstyle rules on the same files — see pyproject.toml).
   3. Stale examples — `examples/` must not use the deprecated
@@ -40,6 +41,9 @@ DOCSTRING_MODULES = (
     "src/repro/byzantine/__init__.py",
     "src/repro/kernels/__init__.py",
     "src/repro/obs/__init__.py",
+    "src/repro/runtime/__init__.py",
+    "src/repro/runtime/desync.py",
+    "src/repro/runtime/inject.py",
 )
 
 FLAG_RE = re.compile(r"add_argument\(\s*\n?\s*\"(--[a-z0-9][a-z0-9-]*)\"")

@@ -3,6 +3,7 @@
     python tools/check_trace.py trace.json [--ledger metrics.jsonl]
         [--summary run.json] [--expect-chunk-traces N]
         [--expect-step-builds N] [--stall-tol 1e-3]
+        [--require-spans retry,prefetch_degraded]
 
 Checks, in order:
   1. Trace structure — Chrome trace-event JSON ({traceEvents, otherData});
@@ -23,9 +24,14 @@ Checks, in order:
   5. Compile watermarks — with --expect-chunk-traces/--expect-step-builds,
      otherData.compile_stats must match exactly (a CI cold run compiles a
      known number of programs; more means a cache-key break).
-  6. Ledger (--ledger) — line 1 is the trilemma_ledger/v1 header; every
-     row carries the full record schema; rounds strictly increase and the
-     cumulative columns (bits_cum, dp_spent_cum, eps_cum) never decrease.
+  6. Ledger (--ledger) — line 1 is the trilemma_ledger/v2 header; every
+     row carries the full record schema (v2: k_sync/stale_frac desync
+     columns, with 0 <= k_sync <= k_eff and stale_frac their consistent
+     ratio); rounds strictly increase and the cumulative columns
+     (bits_cum, dp_spent_cum, eps_cum) never decrease.
+  8. Required extra spans (--require-spans) — each named span must appear
+     at least once (the chaos lane asserts the retry/degradation path
+     really fired: retry, prefetch_degraded).
   7. Summary cross-check (--summary, needs --ledger) — the final row's
      bits_cum / dp_spent_cum / peak_bytes equal the run summary's
      uplink_bits / privacy_spent / peak_bytes EXACTLY, and the row count
@@ -42,10 +48,10 @@ from collections import defaultdict
 
 REQUIRED_SPANS = ("chunk", "dispatch", "chunk_prep", "prep_stall",
                   "metrics_flush")
-LEDGER_SCHEMA = "trilemma_ledger/v1"
-LEDGER_KEYS = ("round", "loss", "k_eff", "bits_round", "bits_cum",
-               "dp_cost", "dp_spent_cum", "eps_cum", "peak_bytes",
-               "wall_s")
+LEDGER_SCHEMA = "trilemma_ledger/v2"
+LEDGER_KEYS = ("round", "loss", "k_eff", "k_sync", "stale_frac",
+               "bits_round", "bits_cum", "dp_cost", "dp_spent_cum",
+               "eps_cum", "peak_bytes", "wall_s")
 
 
 def _spans(events, name=None):
@@ -180,6 +186,16 @@ def check_ledger(path, errors):
         for cum in ("bits_cum", "dp_spent_cum", "eps_cum", "peak_bytes"):
             if prev and row[cum] < prev[cum]:
                 errors.append(f"ledger: {cum} decreases at row {i}")
+        # v2 desync columns: k_sync is a sub-count of k_eff and
+        # stale_frac is exactly their ratio
+        if not 0.0 <= row["k_sync"] <= row["k_eff"]:
+            errors.append(f"ledger: row {i} k_sync={row['k_sync']} "
+                          f"outside [0, k_eff={row['k_eff']}]")
+        want_frac = ((row["k_eff"] - row["k_sync"]) / row["k_eff"]
+                     if row["k_eff"] > 0 else 0.0)
+        if abs(row["stale_frac"] - want_frac) > 1e-9:
+            errors.append(f"ledger: row {i} stale_frac={row['stale_frac']}"
+                          f" != (k_eff-k_sync)/k_eff = {want_frac}")
         prev_round, prev = row["round"], row
     return header, rows
 
@@ -226,6 +242,10 @@ def main() -> None:
                     help="assert compile_stats.zo_step_build == N")
     ap.add_argument("--stall-tol", type=float, default=1e-3,
                     help="span-sum vs legacy stall counter tolerance (s)")
+    ap.add_argument("--require-spans", default=None,
+                    help="comma-separated extra span names that must each "
+                         "appear at least once (chaos lane: "
+                         "retry,prefetch_degraded)")
     args = ap.parse_args()
     errors = []
 
@@ -238,6 +258,13 @@ def main() -> None:
 
     meta = check_trace(doc, errors, args.stall_tol) or {}
     check_compile(meta, args, errors)
+    if args.require_spans:
+        names = {e.get("name") for e in doc.get("traceEvents", [])}
+        for want in args.require_spans.split(","):
+            want = want.strip()
+            if want and want not in names:
+                errors.append(f"trace: required span {want!r} absent "
+                              "(--require-spans)")
     rows = []
     if args.ledger:
         _, rows = check_ledger(args.ledger, errors)
