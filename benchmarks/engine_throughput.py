@@ -31,22 +31,36 @@ interleaved best-of-N so machine drift hits every engine equally. Loss
 trajectories are asserted bit-identical to the loop engine, so every
 speedup is free.
 
+Each grid row also carries a `cost` block from the compiled executable's
+own cost/memory analysis (repro.obs.hlo via `Telemetry(cost=True)` on
+the warmup pass): flops, bytes_accessed, peak HBM bytes, and the HLO
+collective census — the measured-throughput row and the compiler's view
+of the same program, side by side.
+
 `--json` writes the machine-readable BENCH_engine.json
-(schema "bench_engine/v2", spans_version 1: stall numbers are
-span-derived); `tools/check_bench.py` validates it and gates the scan
-speedup + stall reductions in CI.
+(schema "bench_engine/v3", spans_version 1: stall numbers are
+span-derived; v3 added the per-row `cost` block); `tools/check_bench.py`
+validates it and gates the scan speedup + stall reductions in CI.
+`--history PATH` additionally appends the headline numbers as one
+bench_history/v1 row (tools/bench_history.py) — the committed
+`results/bench_history.jsonl` is gated by `check_bench --history`.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import tempfile
 import time
 
 sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__) or ".", "..",
+                                "tools"))
 
 import jax  # noqa: E402
+
+import bench_history  # noqa: E402
 
 from repro import obs  # noqa: E402
 from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,  # noqa: E402
@@ -57,7 +71,7 @@ from repro.data.tasks import TaskSpec  # noqa: E402
 from repro.launch.mesh import make_client_mesh  # noqa: E402
 from repro.models import registry  # noqa: E402
 
-SCHEMA = "bench_engine/v2"
+SCHEMA = "bench_engine/v3"      # v3: per-row `cost` introspection block
 SPANS_VERSION = 1       # stall numbers derive from the repro.obs timeline
 
 
@@ -140,17 +154,25 @@ def main() -> None:
                     help="skip the scan_mesh lane even when devices allow")
     ap.add_argument("--json", default=None,
                     help="write BENCH_engine.json here")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="append a bench_history/v1 row (headline "
+                         "numbers) to this JSONL ledger")
     args = ap.parse_args()
 
     sizes = {name: model_sizes()[name] for name in args.sizes.split(",")}
     pz = build_pz(args)
     mesh = None if args.no_mesh else bench_mesh(args)
 
-    def runner(cfg, engine, mesh_=None, overlap=True):
-        return lambda: fedsim.run(cfg, pz, make_pipe(cfg, args),
-                                  rounds=args.rounds, engine=engine,
-                                  chunk_rounds=args.chunk_rounds,
-                                  mesh=mesh_, overlap=overlap)
+    def runner(cfg, engine, mesh_=None, overlap=True, cost=False):
+        """`cost=True` rides the HLO introspection on the pass (warmup
+        only — the analysis lowers the program once, off the clock)."""
+        def go():
+            tel = obs.Telemetry(cost=True) if cost else None
+            return fedsim.run(cfg, pz, make_pipe(cfg, args),
+                              rounds=args.rounds, engine=engine,
+                              chunk_rounds=args.chunk_rounds,
+                              mesh=mesh_, overlap=overlap, telemetry=tel)
+        return go
 
     print(f"== engine throughput: {args.rounds} rounds, "
           f"{args.clients} clients, chunk={args.chunk_rounds}, "
@@ -159,10 +181,17 @@ def main() -> None:
 
     grid = []
     for name, cfg in sizes.items():
-        lanes = {"loop": runner(cfg, "loop"), "scan": runner(cfg, "scan")}
+        specs = {"loop": ("loop", None), "scan": ("scan", None)}
         if mesh is not None:
-            lanes["scan_mesh"] = runner(cfg, "scan", mesh_=mesh)
-        losses = {lane: fn().losses for lane, fn in lanes.items()}  # warmup
+            specs["scan_mesh"] = ("scan", mesh)
+        lanes = {lane: runner(cfg, eng, mesh_=m)
+                 for lane, (eng, m) in specs.items()}
+        # warmup pays tracing + compile AND captures the compiled
+        # executable's cost/memory analysis for the row's `cost` block
+        warm = {lane: runner(cfg, eng, mesh_=m, cost=True)()
+                for lane, (eng, m) in specs.items()}
+        losses = {lane: res.losses for lane, res in warm.items()}
+        costs = {lane: res.cost_stats for lane, res in warm.items()}
         best = {}
         for _ in range(args.repeats):       # interleaved best-of
             for lane, fn in lanes.items():
@@ -171,17 +200,26 @@ def main() -> None:
                 best[lane] = max(best.get(lane, 0.0),
                                  args.rounds / (time.perf_counter() - t0))
         for lane in lanes:
+            cost = costs[lane]
+            if cost is not None and "error" in cost:
+                cost = None             # analysis unavailable, not broken
             row = {
                 "size": name, "engine": lane,
                 "rounds_per_s": round(best[lane], 2),
                 "speedup_vs_loop": round(best[lane] / best["loop"], 3),
                 "bit_identical_to_loop": losses[lane] == losses["loop"],
                 "mesh": dict(mesh.shape) if lane == "scan_mesh" else None,
+                "cost": cost,
             }
             grid.append(row)
+            cdesc = "n/a" if cost is None else (
+                f"{cost['flops'] / 1e6:.1f} MFLOP, "
+                f"peak {cost['peak_bytes'] / 1e6:.2f} MB, "
+                f"{sum(c['count'] for c in cost['collectives'].values())}"
+                " collective(s)")
             print(f"  {name:18s} {lane:10s} {row['rounds_per_s']:8.1f} r/s "
                   f"({row['speedup_vs_loop']:.2f}x loop, bitwise="
-                  f"{row['bit_identical_to_loop']})")
+                  f"{row['bit_identical_to_loop']}; {cdesc})")
         if not all(r["bit_identical_to_loop"] for r in grid
                    if r["size"] == name):
             raise SystemExit(f"FAIL: {name}: an engine diverged from loop")
@@ -260,6 +298,24 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {args.json}")
+    if args.history:
+        by = {(r["size"], r["engine"]): r for r in grid}
+        loop = by[(primary, "loop")]
+        scan = by[(primary, "scan")]
+        row = bench_history.append_row(args.history, "engine", {
+            "size": primary,
+            "rounds": args.rounds,
+            "scan_rounds_per_s": scan["rounds_per_s"],
+            "loop_rounds_per_s": loop["rounds_per_s"],
+            "scan_speedup": scan["speedup_vs_loop"],
+            "prep_stall_on_s": prefetch["on"]["prep_stall_s"],
+            "prep_stall_off_s": prefetch["off"]["prep_stall_s"],
+            "ckpt_stall_db_s": checkpoint["double_buffer"]["ckpt_stall_s"],
+            "ckpt_stall_sync_s": checkpoint["sync"]["ckpt_stall_s"],
+        })
+        print(f"appended history row (sha {row['git_sha']}, "
+              f"{row['host']['platform']}/{row['host']['devices']}dev) "
+              f"to {args.history}")
 
 
 if __name__ == "__main__":

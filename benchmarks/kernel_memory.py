@@ -41,19 +41,28 @@ eliminate, so chained buys its rounds/s with 2x the memory overhead. All
 three modes' rounds/s are reported so the tradeoff is visible; the fused
 TPU kernel (kernels/perturbed_matmul.py) regenerates z per tile in VMEM and
 pays neither cost. See docs/kernels.md.
+
+`--history PATH` appends the headline numbers as one bench_history/v1 row
+(tools/bench_history.py); `tools/check_bench.py --history` gates the
+committed results/bench_history.jsonl against same-hardware regressions.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__) or ".", "..",
+                                "tools"))
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+
+import bench_history  # noqa: E402
 
 from repro.configs.base import (ChannelConfig, DPConfig, ModelConfig,  # noqa: E402
                                 PairZeroConfig, PowerControlConfig, ZOConfig)
@@ -132,6 +141,9 @@ def main() -> None:
     ap.add_argument("--gate-size", default="opt-125m-reduced")
     ap.add_argument("--json", default=None,
                     help="write BENCH_kernels.json here")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="append a bench_history/v1 row (headline "
+                         "numbers) to this JSONL ledger")
     args = ap.parse_args()
 
     sizes = {name: model_sizes()[name] for name in args.sizes.split(",")}
@@ -252,6 +264,19 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {args.json}")
+    if args.history:
+        row = bench_history.append_row(args.history, "kernels", {
+            "size": gate_size,
+            "fused_duals_per_s": by["fused"]["duals_per_s"],
+            "fresh_duals_per_s": by["fresh"]["duals_per_s"],
+            "memory_overhead_fused_vs_chained":
+                gate["memory_overhead_fused_vs_chained"],
+            "dual_speed_fused_vs_fresh":
+                gate["dual_speed_fused_vs_fresh"],
+        })
+        print(f"appended history row (sha {row['git_sha']}, "
+              f"{row['host']['platform']}/{row['host']['devices']}dev) "
+              f"to {args.history}")
 
 
 if __name__ == "__main__":

@@ -411,6 +411,17 @@ class ChunkPrefetcher:
 # Executors: per-round dispatch (loop) and chunked lax.scan (scan)
 # ---------------------------------------------------------------------------
 
+def _specs_sig(*trees) -> tuple:
+    """Hashable shape/dtype signature of ShapeDtypeStruct (or array) trees —
+    the memoization key for analysis-only AOT compiles."""
+    sig = []
+    for tree in trees:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        sig.append((str(treedef),
+                    tuple((tuple(x.shape), str(x.dtype)) for x in leaves)))
+    return tuple(sig)
+
+
 class LoopExecutor:
     """Per-round dispatch over an already-jitted step — no chunk compile
     cost, and the bit-identity oracle for ScanExecutor.
@@ -422,6 +433,29 @@ class LoopExecutor:
 
     def __init__(self, step: Callable):
         self._step = step                   # jitted, carry donated
+        self._aot: Dict[tuple, Any] = {}    # analysis-only compiles, by sig
+
+    def aot_compiled(self, carry_spec: PyTree,
+                     ctl_spec: Dict[str, Any],
+                     batch_spec: Dict[str, Any]):
+        """Compile (never run) the per-round step for these specs.
+
+        Takes the same stacked trees `run()` consumes and slices one round
+        off the stacks, so callers (repro.obs.hlo) stay engine-agnostic.
+        The lowering re-enters the traced step body, so the retrace
+        counters are suspended — introspection is not a driver recompile.
+        Memoized per shape signature.
+        """
+        key = _specs_sig(carry_spec, ctl_spec, batch_spec)
+        if key not in self._aot:
+            def row(tree):
+                return {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+                        for k, v in tree.items()}
+            with retrace.suspended():
+                lowered = self._step.lower(carry_spec, row(batch_spec),
+                                           row(ctl_spec))
+            self._aot[key] = lowered.compile()
+        return self._aot[key]
 
     def run(self, carry: PyTree, ctl_stack: Dict[str, jnp.ndarray],
             batch_stack: Dict[str, jnp.ndarray]
@@ -486,6 +520,27 @@ class ScanExecutor:
 
         self._chunk = chunk
         self._unroll = unroll
+        self._aot: Dict[tuple, Any] = {}    # analysis-only compiles, by sig
+
+    def aot_compiled(self, carry_spec: PyTree,
+                     ctl_spec: Dict[str, Any],
+                     batch_spec: Dict[str, Any]):
+        """Compile (never run) the chunk program for these specs — the
+        exact program `run()` would dispatch for stacks of this shape,
+        including the mesh shardings riding on the specs. Lowering
+        re-enters the traced chunk body, so the retrace counters are
+        suspended (introspection must not perturb the cold/warm count
+        pins). Memoized per shape signature.
+        """
+        rounds = int(ctl_spec["seed"].shape[0])
+        unroll = rounds if self._unroll is None else min(self._unroll, rounds)
+        key = _specs_sig(carry_spec, ctl_spec, batch_spec)
+        if key not in self._aot:
+            with retrace.suspended():
+                lowered = self._chunk.lower(carry_spec, ctl_spec,
+                                            batch_spec, unroll)
+            self._aot[key] = lowered.compile()
+        return self._aot[key]
 
     def run(self, carry: PyTree, ctl_stack: Dict[str, jnp.ndarray],
             batch_stack: Dict[str, jnp.ndarray]

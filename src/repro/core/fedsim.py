@@ -102,6 +102,17 @@ class RunResult:
     # "prefetch_degraded", "ckpt_write_failed", "ckpt_snapshot_failed").
     # Empty on a clean run — the ledger's final row asserts against it.
     retry_attempts: Dict[str, int] = field(default_factory=dict)
+    # compiled-program introspection (repro.obs.hlo), populated when the
+    # run's Telemetry has cost=True: XLA-reported flops / bytes / peak
+    # memory / collective census for the executor program actually
+    # dispatched ({"error": ...} if the analysis itself failed)
+    cost_stats: Optional[Dict[str, Any]] = None
+    # run-health outcome (repro.obs.health): the round and detector kind
+    # of a policy="abort" stop; -1/"" on a run that finished naturally.
+    # The accountant only ever charged executed rounds, so privacy_spent
+    # remains the realized spend `--audit` should consume.
+    health_abort_round: int = -1
+    health_abort_reason: str = ""
 
 
 # ---------------------------------------------------------------------------
@@ -468,6 +479,13 @@ class Experiment:
         # current chunk.
         pending = None            # (first_round, n_rounds, metrics)
         client_rounds = 0.0       # Σ_t K_eff(t) over executed rounds
+        # dispatch-arg specs for post-run cost analysis, captured on the
+        # first chunk BEFORE the executor donates the carry buffers
+        cost_specs = None
+        # HealthMonitor(policy="abort") raises from on_round inside a
+        # flush; caught at chunk granularity so executed == charged rounds
+        health_abort: Optional[obs.HealthAbort] = None
+        last_boundary = self.start_round   # newest completed hook boundary
 
         def flush() -> None:
             nonlocal pending
@@ -512,6 +530,10 @@ class Experiment:
                     self.round_k_sync.extend(float(x) for x in sync_rows)
                     if n_ok < b - a:  # guard trips mid-chunk: truncate
                         batches = {k: v[:n_ok] for k, v in batches.items()}
+                    if self.telemetry.cost and cost_specs is None:
+                        cost_specs = (obs.hlo.specs_of(carry),
+                                      obs.hlo.specs_of(trace.rows(n_ok)),
+                                      obs.hlo.specs_of(batches))
                     with tr.span("dispatch", chunk=i, rounds=n_ok):
                         carry, metrics = inj.with_retries(
                             lambda: executor.run(carry, trace.rows(n_ok),
@@ -541,19 +563,52 @@ class Experiment:
                     with tr.span("hooks_boundary", t=t_done):
                         for hook in self.hooks:
                             hook.on_boundary(t_done, self)
+                    last_boundary = t_done
+        except obs.HealthAbort as e:
+            health_abort = e
+            pending = None       # rounds past the abort stay unreported
         finally:
             prefetch.close()
         # final watermark BEFORE the last flush: MetricsSink rows and
         # result.peak_bytes then report the same peak
         if mem is not None:
             mem.sample(self.start_round + len(self.round_k_eff), tracer=tr)
-        flush()
+        if health_abort is None:
+            try:
+                flush()
+            except obs.HealthAbort as e:
+                health_abort = e
+                pending = None
+
+        if health_abort is not None:
+            result.health_abort_round = int(health_abort.round)
+            result.health_abort_reason = str(health_abort.reason)
+            # checkpoint-then-abort: persist the newest consistent state
+            # (params + accountant at the last completed boundary) so the
+            # run can be resumed/inspected; best effort — the abort report
+            # must survive a failing writer
+            for hk in self.hooks:
+                if isinstance(hk, CheckpointHook) and hk._saver is not None:
+                    try:
+                        hk._saver.save(
+                            last_boundary, self.params,
+                            extra={"accountant":
+                                   self.accountant.state_dict(),
+                                   "round": last_boundary})
+                    except Exception:
+                        pass
 
         for hook in self.hooks:
             hook.close(self)
-        result.steps = max(0, result.privacy_exhausted_at - self.start_round
-                           if result.privacy_exhausted_at >= 0
-                           else self.rounds - self.start_round)
+        if health_abort is not None:
+            # every charged round executed; rounds after the abort within
+            # the final chunk were bought and ran, so they count as steps
+            result.steps = len(self.round_k_eff)
+        else:
+            result.steps = max(0,
+                               result.privacy_exhausted_at - self.start_round
+                               if result.privacy_exhausted_at >= 0
+                               else self.rounds - self.start_round)
         result.privacy_spent = self.accountant.spent
         # the per-round ε ledger: the accountant's own charges for this
         # run's executed rounds, folded with the identical float64 cumsum
@@ -598,6 +653,16 @@ class Experiment:
         result.compile_stats = obs.retrace.since(compile_before)
         result.wall_time_s = time.time() - t0
         result.params = self.params
+        if cost_specs is not None:
+            # AOT introspection of the dispatched program (repro.obs.hlo):
+            # compile-only, after the run clock stopped, counters
+            # suspended — timing, numerics and compile-watermark pins are
+            # untouched. Analysis failure must not fail a finished run.
+            try:
+                result.cost_stats = obs.hlo.analyze_executor(
+                    executor, *cost_specs).to_dict()
+            except Exception as exc:  # noqa: BLE001 - record, don't raise
+                result.cost_stats = {"error": f"{type(exc).__name__}: {exc}"}
         return result
 
 

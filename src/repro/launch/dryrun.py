@@ -202,7 +202,7 @@ def build_step(cfg: ModelConfig, shape: ShapeConfig, k: int,
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "zo", with_roofline: bool = True,
              bf16_reduce: bool = False, shard_clients: bool = False,
-             audit: bool = False) -> Dict:
+             audit: bool = False, cost: bool = False) -> Dict:
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     audit = audit_applies(shape_name, variant, audit)
     cell_id = make_cell_id(arch, shape_name, mesh_name, variant,
@@ -270,6 +270,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                                          "by_op": coll_by_op},
         })
 
+        if cost:
+            # the run-time introspection view (repro.obs.hlo) of the same
+            # compiled cell — census with per-op counts/group sizes on
+            # top of the raw numbers above, printed compile-only
+            from repro.obs import hlo as _hlo
+            stats = _hlo.analyze_compiled(compiled)
+            out["cost_stats"] = stats.to_dict()
+            print(_hlo.describe(stats, indent="    "), flush=True)
+
         if with_roofline and not multi_pod:
             probes = rl.build_probes(cfg, shape, mesh, DTYPE)
             costs = [rl.run_probe(p, mesh, bf16_reduce) for p in probes]
@@ -307,6 +316,11 @@ def main() -> None:
                          "metrics) — proves the privacy subsystem's "
                          "capture path lowers at production scale "
                          "(train cells only)")
+    ap.add_argument("--cost", action="store_true",
+                    help="print the repro.obs.hlo introspection of each "
+                         "compiled cell (flops / memory / collective "
+                         "census) and record it as cost_stats — "
+                         "compile-only, nothing executes")
     ap.add_argument("--out", default="results/dryrun.json")
     args = ap.parse_args()
 
@@ -340,7 +354,7 @@ def main() -> None:
                              with_roofline=not args.no_roofline,
                              bf16_reduce=args.bf16_reduce,
                              shard_clients=args.shard_clients,
-                             audit=args.audit)
+                             audit=args.audit, cost=args.cost)
                 print(f"  -> {r['status']} ({r.get('wall_s', 0)}s)"
                       + (f" err={r.get('error', '')[:200]}"
                          if r["status"] == "failed" else ""), flush=True)

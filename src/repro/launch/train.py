@@ -223,6 +223,29 @@ def build_parser() -> argparse.ArgumentParser:
                          "--trace-out/--metrics-out watermark; samples "
                          "are taken at chunk boundaries, so cadence never "
                          "changes chunk shapes")
+    ap.add_argument("--profile-out", default=None,
+                    help="capture the run under jax.profiler and write a "
+                         "MERGED Chrome trace here: XLA device-op events "
+                         "aligned onto the host span timeline via a "
+                         "perf_counter anchor, so dispatch/prep_stall "
+                         "spans and executable launches render on one "
+                         "Perfetto timeline (see docs/observability.md)")
+    ap.add_argument("--health-policy", default="off",
+                    choices=["off", "warn", "abort"],
+                    help="run-health monitor (repro.obs.health): NaN/Inf, "
+                         "loss-divergence and plateau detectors over the "
+                         "per-round metrics. 'warn' records events in the "
+                         "summary; 'abort' checkpoints the last boundary, "
+                         "stops the run and exits with status 3 — the "
+                         "accountant keeps only the realized spend, which "
+                         "--audit then consumes")
+    ap.add_argument("--health-divergence", type=float, default=10.0,
+                    help="divergence factor: abort/warn when loss exceeds "
+                         "this multiple of the running best (<=0 disables "
+                         "the detector)")
+    ap.add_argument("--health-plateau", type=int, default=0,
+                    help="plateau window (rounds with no new best loss) "
+                         "before the plateau detector fires; 0 disables")
     ap.add_argument("--out", default=None, help="write result JSON here")
     return ap
 
@@ -310,14 +333,27 @@ def main() -> None:
         extra_hooks = [attack_hook]
 
     # observability (repro.obs): span timeline + memory watermark +
-    # trilemma ledger — host-side only, trajectory bitwise unchanged
-    telemetry = None
-    if args.trace_out or args.metrics_out:
+    # trilemma ledger + device profile — host-side only (the profiler
+    # observes, never reschedules), trajectory bitwise unchanged
+    telemetry, profiler, health = None, None, None
+    if args.trace_out or args.metrics_out or args.profile_out:
         from repro import obs
         telemetry = obs.Telemetry.on(
-            memory_sample_every=args.obs_sample_every)
+            memory_sample_every=args.obs_sample_every,
+            cost=bool(args.trace_out or args.profile_out))
         if args.metrics_out:
             extra_hooks = extra_hooks + [obs.MetricsSink(args.metrics_out)]
+    if args.health_policy != "off":
+        from repro import obs
+        health = obs.HealthMonitor(
+            args.health_policy,
+            divergence_factor=args.health_divergence,
+            plateau_rounds=args.health_plateau)
+        extra_hooks = extra_hooks + [health]
+    if args.profile_out:
+        from repro import obs
+        profiler = obs.ProfilerSession()
+        profiler.start()
 
     injector = None
     if args.inject:
@@ -337,16 +373,33 @@ def main() -> None:
                      adversary=adversary, hooks=extra_hooks,
                      telemetry=telemetry, injector=injector, on_round=log)
 
-    if args.trace_out:
-        telemetry.tracer.export_chrome(args.trace_out, metadata={
+    if profiler is not None:
+        profiler.stop()
+
+    if args.trace_out or args.profile_out:
+        metadata = {
             "engine": args.engine,
             "overlap": not args.no_overlap,
             "prep_stall_s": res.prep_stall_s,
             "ckpt_stall_s": res.ckpt_stall_s,
             "peak_bytes": res.peak_bytes,
             "compile_stats": res.compile_stats,
-        })
-        print(f"trace timeline -> {args.trace_out}", flush=True)
+        }
+        if res.cost_stats is not None:
+            metadata["cost_stats"] = res.cost_stats
+        if args.trace_out:
+            telemetry.tracer.export_chrome(args.trace_out,
+                                           metadata=metadata)
+            print(f"trace timeline -> {args.trace_out}", flush=True)
+        if args.profile_out:
+            device_events, profile_meta = profiler.device_events(
+                telemetry.tracer.epoch)
+            telemetry.tracer.export_chrome(
+                args.profile_out,
+                metadata={**metadata, "profile": profile_meta},
+                extra_events=device_events)
+            print(f"merged device+host timeline -> {args.profile_out} "
+                  f"({profile_meta['events']} device events)", flush=True)
 
     audit_summary = None
     if args.audit:
@@ -380,6 +433,15 @@ def main() -> None:
         "compile_stats": res.compile_stats,
         "resumed_from": res.resumed_from,
     }
+    if res.cost_stats is not None:
+        summary["cost_stats"] = res.cost_stats
+    if health is not None:
+        summary["health"] = {
+            "policy": args.health_policy,
+            "events": health.events,
+            "abort_round": res.health_abort_round,
+            "abort_reason": res.health_abort_reason,
+        }
     if audit_summary is not None:
         summary["audit"] = audit_summary
     print(json.dumps(summary, indent=2))
@@ -391,6 +453,13 @@ def main() -> None:
                          f"{audit_summary['eps_hat']:.4f} exceeds the "
                          "analytic accountant's "
                          f"{audit_summary['eps_analytic']:.4f}")
+    if res.health_abort_round >= 0:
+        # distinct exit status so CI can tell "health abort, audit clean"
+        # (3) from an audit violation (1)
+        print(f"HEALTH ABORT: {res.health_abort_reason} at round "
+              f"{res.health_abort_round} — accountant charged only the "
+              f"{res.steps} executed rounds", flush=True)
+        raise SystemExit(3)
 
 
 def run_audit(pz, res, attack_hook, args) -> dict:

@@ -1,7 +1,7 @@
-"""Observability: span timeline, compile/memory watermarks, trilemma ledger.
+"""Observability: spans, watermarks, ledger, device profile, HLO, health.
 
-Three pillars, all host-side and structurally neutral (telemetry off runs
-the bit-exact historical program — pinned in tests/test_obs.py):
+Host-side pillars, all structurally neutral (telemetry off runs the
+bit-exact historical program — pinned in tests/test_obs.py):
 
   1. **Span timeline** (`repro.obs.spans`) — a `Tracer` of nested
      wall-clock spans instrumented into the driver (`fedsim.Experiment`),
@@ -23,50 +23,78 @@ the bit-exact historical program — pinned in tests/test_obs.py):
      cumulative (ε, δ) spend, peak memory, wall time
      (`train.py --metrics-out metrics.jsonl`).
 
+And the device-visible half:
+
+  4. **Profiler merge** (`repro.obs.profile`) — opt-in `jax.profiler`
+     capture whose device-op events are aligned onto the tracer's
+     perf_counter epoch via a TraceAnnotation anchor and merged into the
+     same Chrome trace (`train.py --profile-out`).
+  5. **HLO introspection** (`repro.obs.hlo`) — compiler-reported FLOPs,
+     bytes, peak memory and a structured collective census read off the
+     memoized executors' compiled programs (AOT, never executed);
+     surfaced as `RunResult.cost_stats` (the Telemetry `cost` flag),
+     the `bench_engine/v3` per-engine breakdown, and `dryrun --cost`.
+  6. **Run health** (`repro.obs.health`) — a duck-typed `HealthMonitor`
+     round hook (NaN/divergence/plateau detectors) with a
+     warn/checkpoint-then-abort policy; aborts land on `RunResult` so
+     `--audit` consumes the realized (shorter) privacy spend.
+
 `Telemetry` bundles the per-run pieces; `Telemetry.off()` (the default
 everywhere) carries the shared no-op tracer and no sampler, so the
 instrumented call sites cost one no-op method call when disabled.
-tools/check_trace.py validates both artifact schemas in CI.
+tools/check_trace.py validates the artifact schemas in CI.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-from repro.obs import ledger, memory, retrace, spans
+from repro.obs import health, hlo, ledger, memory, profile, retrace, spans
+from repro.obs.health import HealthAbort, HealthMonitor
+from repro.obs.hlo import CostStats
 from repro.obs.ledger import MetricsSink, final_row, read_ledger
 from repro.obs.memory import MemoryWatermark
+from repro.obs.profile import ProfilerSession
 from repro.obs.spans import NULL_TRACER, NullTracer, Tracer
 
 __all__ = [
     "Telemetry", "Tracer", "NullTracer", "NULL_TRACER", "MemoryWatermark",
     "MetricsSink", "read_ledger", "final_row",
-    "ledger", "memory", "retrace", "spans",
+    "HealthMonitor", "HealthAbort", "ProfilerSession", "CostStats",
+    "health", "hlo", "ledger", "memory", "profile", "retrace", "spans",
 ]
 
 
 class Telemetry:
-    """Per-run observability bundle: a tracer + an optional memory sampler.
+    """Per-run observability bundle: tracer + memory sampler + cost flag.
 
     Pass one to `fedsim.Experiment(telemetry=...)` / `fedsim.run(...)`.
-    The default (`Telemetry.off()`) is inert: the shared `NULL_TRACER`
-    and no memory sampling — the historical program, bit for bit.
+    The default (`Telemetry.off()`) is inert: the shared `NULL_TRACER`,
+    no memory sampling, no cost analysis — the historical program, bit
+    for bit. `cost=True` asks the driver to read the compiled executor's
+    cost/memory/collective analysis into `RunResult.cost_stats` after
+    the run (AOT introspection under `retrace.suspended()`: compile-only,
+    numerically passive, invisible to the compile-watermark pins).
     """
 
     def __init__(self, tracer: Optional[Tracer] = None,
-                 memory: Optional[MemoryWatermark] = None):
+                 memory: Optional[MemoryWatermark] = None,
+                 cost: bool = False):
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.memory = memory
+        self.cost = bool(cost)
 
     @property
     def enabled(self) -> bool:
-        """Whether any pillar is live (tracer recording or sampler set)."""
-        return self.tracer.enabled or self.memory is not None
+        """Whether any pillar is live (tracer, sampler, or cost stats)."""
+        return self.tracer.enabled or self.memory is not None or self.cost
 
     @classmethod
-    def on(cls, memory_sample_every: int = 32) -> "Telemetry":
-        """Full telemetry: recording tracer + memory watermark sampler."""
+    def on(cls, memory_sample_every: int = 32,
+           cost: bool = False) -> "Telemetry":
+        """Full telemetry: recording tracer + memory watermark sampler
+        (+ optionally the post-run compiled-cost analysis)."""
         return cls(tracer=Tracer(),
-                   memory=MemoryWatermark(memory_sample_every))
+                   memory=MemoryWatermark(memory_sample_every), cost=cost)
 
     @classmethod
     def off(cls) -> "Telemetry":

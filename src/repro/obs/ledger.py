@@ -26,6 +26,7 @@ cross-checks the final row against the run summary in CI.
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import Any, Dict, Optional
 
@@ -127,8 +128,16 @@ class MetricsSink:
             self._f.flush()
 
     def close(self, exp) -> None:
-        """Close the stream (the run is over)."""
+        """Finalize the stream: flush + fsync, then close.
+
+        The fsync is the torn-ledger fix: a run that completes `close`
+        must leave a ledger whose every line parses even if the process
+        is SIGKILLed right after — only a kill *mid-run* may leave a torn
+        trailing record, which readers tolerate (`read_ledger(strict=
+        False)`, check_trace's truncation report)."""
         if self._f is not None:
+            self._f.flush()
+            os.fsync(self._f.fileno())
             self._f.close()
             self._f = None
 
@@ -138,13 +147,32 @@ class MetricsSink:
         return self._rows
 
 
-def read_ledger(path: str) -> Dict[str, Any]:
-    """Parse a ledger file back into {header, rows} (validation/tests)."""
+def read_ledger(path: str, strict: bool = True) -> Dict[str, Any]:
+    """Parse a ledger file back into {header, rows, truncated}.
+
+    A SIGKILL mid-row leaves one torn trailing line; with
+    ``strict=False`` that line is dropped and reported via
+    ``"truncated": True`` instead of raising (crash-consistent readers:
+    check_trace, chaos_run). A torn line anywhere *else* is corruption
+    and always raises.
+    """
+    raw = []
     with open(path) as f:
-        lines = [json.loads(ln) for ln in f if ln.strip()]
+        for ln in f:
+            if ln.strip():
+                raw.append(ln)
+    lines, truncated = [], False
+    for i, ln in enumerate(raw):
+        try:
+            lines.append(json.loads(ln))
+        except json.JSONDecodeError:
+            if i == len(raw) - 1 and not strict:
+                truncated = True
+                break
+            raise
     if not lines or lines[0].get("schema") != MetricsSink.SCHEMA:
         raise ValueError(f"{path}: not a {MetricsSink.SCHEMA} ledger")
-    return {"header": lines[0], "rows": lines[1:]}
+    return {"header": lines[0], "rows": lines[1:], "truncated": truncated}
 
 
 def final_row(path: str) -> Optional[Dict[str, Any]]:

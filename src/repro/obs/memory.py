@@ -27,11 +27,23 @@ import jax
 from repro.obs import spans
 
 
-def live_buffer_bytes() -> int:
-    """Total bytes of all live jax arrays on this process's devices."""
+def live_buffer_bytes(arrays=None) -> int:
+    """Total bytes of live jax arrays on this process's devices.
+
+    Donated carry buffers can still appear in `jax.live_arrays()` at a
+    chunk-boundary sample even though their storage is gone (the Python
+    handle outlives the donation), so anything whose `.is_deleted()` is
+    true is skipped — counting it would double-book the carry against its
+    replacement. `arrays` defaults to the live-array walk; tests pass an
+    explicit list to pin the skip.
+    """
     total = 0
-    for a in jax.live_arrays():
+    if arrays is None:
+        arrays = jax.live_arrays()
+    for a in arrays:
         try:
+            if a.is_deleted():
+                continue
             total += int(a.nbytes)
         except Exception:  # deleted/donated buffers race the walk
             continue

@@ -23,12 +23,20 @@ tools/check_trace.py asserts the expected cold-run counts in CI).
 
 Counters are process-global and monotone (like jax's own compilation
 cache); consumers diff snapshots rather than resetting.
+
+One escape hatch: `suspended()`. The HLO introspection path
+(repro.obs.hlo) re-lowers the memoized executors' programs to read their
+compiled cost/memory analysis — that re-enters the traced bodies, which
+would fire the `*_trace` counters and corrupt the exact cold-run counts
+CI asserts. Analysis lowering wraps itself in `suspended()` so the
+counters keep meaning "the *driver* (re)compiled something".
 """
 from __future__ import annotations
 
 import threading
 from collections import Counter
-from typing import Dict
+from contextlib import contextmanager
+from typing import Dict, Iterator
 
 # canonical event names (the tests and check_trace key on these)
 ZO_STEP_BUILD = "zo_step_build"        # make_zo_step cache miss
@@ -43,10 +51,32 @@ CANONICAL = (ZO_STEP_BUILD, FO_STEP_BUILD, LOOP_EXEC_BUILD,
 
 _LOCK = threading.Lock()
 _COUNTS: Counter = Counter()
+_SUSPEND = threading.local()
+
+
+@contextmanager
+def suspended() -> Iterator[None]:
+    """Make `bump()` a no-op on this thread for the duration.
+
+    Used by `repro.obs.hlo` around analysis-only `.lower()` calls: those
+    re-enter the traced executor bodies (firing `scan_chunk_trace` /
+    `loop_step_trace`) without representing a driver recompilation, which
+    would break the exact cold/warm count pins. Thread-local because jax
+    traces on the calling thread; re-entrant (nesting restores the prior
+    state).
+    """
+    prev = getattr(_SUSPEND, "on", False)
+    _SUSPEND.on = True
+    try:
+        yield
+    finally:
+        _SUSPEND.on = prev
 
 
 def bump(name: str, n: int = 1) -> None:
     """Increment a counter (called from factory bodies / trace time)."""
+    if getattr(_SUSPEND, "on", False):
+        return
     with _LOCK:
         _COUNTS[name] += n
 

@@ -88,6 +88,13 @@ class Tracer:
         """Whether this tracer records anything (False on NULL_TRACER)."""
         return True
 
+    @property
+    def epoch(self) -> float:
+        """The perf_counter instant that is t=0 for every span. External
+        clocks (e.g. the jax profiler in repro.obs.profile) align their
+        events onto the timeline by shifting relative to this epoch."""
+        return self._epoch
+
     def events(self) -> List[Dict[str, Any]]:
         """Snapshot of every recorded event (ts/dur in seconds)."""
         with self._lock:
@@ -106,12 +113,20 @@ class Tracer:
 
     # -- export -----------------------------------------------------------
     def export_chrome(self, path: str,
-                      metadata: Optional[Dict[str, Any]] = None) -> None:
+                      metadata: Optional[Dict[str, Any]] = None,
+                      extra_events: Optional[List[Dict[str, Any]]] = None,
+                      ) -> None:
         """Write Chrome trace-event JSON (Perfetto / chrome://tracing).
 
         `metadata` lands under `otherData` — the validation harness
         (tools/check_trace.py) cross-checks span-derived sums against the
         run's legacy counters recorded there.
+
+        `extra_events` are pre-formed Chrome events appended verbatim —
+        the profiler-merge path (repro.obs.profile) hands over device-op
+        events already shifted onto this tracer's epoch, on their own pid
+        so they render as a separate Perfetto process lane next to the
+        host spans (which always live on pid 0).
         """
         with self._lock:
             events = [dict(e) for e in self._events]
@@ -129,6 +144,8 @@ class Tracer:
             if e["ph"] == "i":
                 rec["s"] = "t"
             out.append(rec)
+        if extra_events:
+            out.extend(extra_events)
         doc = {"traceEvents": out, "displayTimeUnit": "ms",
                "otherData": metadata or {}}
         with open(path, "w") as f:
@@ -176,7 +193,12 @@ class NullTracer(Tracer):
         """Always empty."""
         return []
 
-    def export_chrome(self, path, metadata=None):
+    @property
+    def epoch(self) -> float:
+        """Epoch of the null timeline (0.0; nothing aligns to it)."""
+        return 0.0
+
+    def export_chrome(self, path, metadata=None, extra_events=None):
         """Refuse silently: there is nothing to export."""
 
 

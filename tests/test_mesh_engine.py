@@ -217,10 +217,11 @@ def test_mesh_desync_bitwise(tiny_model, make_pz, make_pipeline, mesh8):
 def test_mesh_telemetry_is_numerically_passive(tiny_model, make_pz,
                                                make_pipeline, mesh8,
                                                tmp_path):
-    """Telemetry ON (tracer + sampler + trilemma ledger) under an 8-way
-    client mesh vs the default OFF: losses, p_hats, and privacy spend stay
-    bitwise identical, and the ledger's final row equals the mesh run's
-    own RunResult accounting exactly."""
+    """Telemetry ON (tracer + sampler + trilemma ledger + HLO cost
+    analysis + health monitor) under an 8-way client mesh vs the default
+    OFF: losses, p_hats, and privacy spend stay bitwise identical, the
+    ledger's final row equals the mesh run's own RunResult accounting
+    exactly, and the introspection sees the mesh program's collectives."""
     from repro import obs
     pz = make_pz(scheme="solution", rounds=6, n_clients=8)
     pipe = lambda: make_pipeline(vocab=tiny_model.vocab_size, n_clients=8,
@@ -230,8 +231,10 @@ def test_mesh_telemetry_is_numerically_passive(tiny_model, make_pz,
     ledger = str(tmp_path / "mesh_metrics.jsonl")
     res = fedsim.run(tiny_model, pz, pipe(), rounds=6, engine="scan",
                      chunk_rounds=4, mesh=mesh8,
-                     telemetry=obs.Telemetry.on(memory_sample_every=2),
-                     hooks=[obs.MetricsSink(ledger)])
+                     telemetry=obs.Telemetry.on(memory_sample_every=2,
+                                                cost=True),
+                     hooks=[obs.MetricsSink(ledger),
+                            obs.HealthMonitor(policy="warn")])
     assert res.losses == ref.losses
     assert res.p_hats == ref.p_hats
     assert res.privacy_spent == ref.privacy_spent
@@ -239,6 +242,11 @@ def test_mesh_telemetry_is_numerically_passive(tiny_model, make_pz,
     assert final["bits_cum"] == res.uplink_bits
     assert final["dp_spent_cum"] == res.privacy_spent
     assert final["peak_bytes"] == res.peak_bytes > 0
+    assert res.health_abort_round == -1
+    # the compiled-program view of the same run: real flops and the
+    # client-axis all-reduce the OTA aggregate lowers to
+    assert res.cost_stats["flops"] > 0
+    assert res.cost_stats["collectives"]["all-reduce"]["count"] >= 1
 
 
 # ---------------------------------------------------------------------------
@@ -247,9 +255,12 @@ def test_mesh_telemetry_is_numerically_passive(tiny_model, make_pz,
 
 def test_mesh_hlo_contains_client_all_reduce(tiny_model, make_pz,
                                              make_pipeline, mesh8):
-    """The scalar aggregate of the mesh step lowers to a cross-replica
-    all-reduce (the psum in Transport.aggregate_mesh); the single-device
-    step compiles collective-free."""
+    """Structured collective census of the mesh step's compiled HLO
+    (repro.obs.hlo): exactly two all-reduces — the OTA scalar aggregate
+    (Transport.aggregate_mesh's psum) and the loss mean — both spanning
+    the full 8-client axis; the single-device step compiles collective-
+    free; and the census byte total agrees with roofline's independent
+    HLO parser on the same text."""
     pz = make_pz(scheme="solution", rounds=4, n_clients=8)
     transport = tp.resolve(pz)
     pipe = make_pipeline(vocab=tiny_model.vocab_size, n_clients=8, batch=2,
@@ -261,9 +272,12 @@ def test_mesh_hlo_contains_client_all_reduce(tiny_model, make_pz,
     sched = transport.make_schedule(h, pz)
     ctl = pairzero.make_control(0, sched, pz.seed, 8)
 
+    from repro.launch.roofline import collective_bytes
+    from repro.obs.hlo import collective_census
+
     step = pairzero.make_zo_step(tiny_model, pz, transport=transport)
     single = jax.jit(step).lower(params, batch, ctl).compile().as_text()
-    assert "all-reduce" not in single
+    assert collective_census(single) == {}
 
     mstep = pairzero.make_zo_step(tiny_model, pz, transport=transport,
                                   mesh=mesh8)
@@ -271,7 +285,16 @@ def test_mesh_hlo_contains_client_all_reduce(tiny_model, make_pz,
             jax.device_put(batch, shd.batch_sharding(mesh8, batch)),
             jax.device_put(ctl, shd.control_sharding(mesh8, ctl)))
     meshed = jax.jit(mstep).lower(*args).compile().as_text()
-    assert "all-reduce" in meshed
+    census = collective_census(meshed)
+    ar = census["all-reduce"]
+    assert ar["count"] == 2             # OTA scalar aggregate + loss mean
+    assert ar["group_sizes"] == [8, 8]  # each spans the full client axis
+    assert ar["bytes"] > 0
+    # two independent HLO parsers, one answer: the census byte totals
+    # must match roofline's analytic collective model on the same text
+    total, by_op = collective_bytes(meshed)
+    assert sum(c["bytes"] for c in census.values()) == total
+    assert {op: c["bytes"] for op, c in census.items()} == by_op
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,142 @@
+"""Perf-history ledger: append-only JSONL of benchmark headline numbers.
+
+    python tools/bench_history.py show results/bench_history.jsonl
+        [--kind engine]
+
+One row per benchmark invocation (schema "bench_history/v1"):
+
+    {"schema": "bench_history/v1", "kind": "engine" | "kernels",
+     "created_unix": ..., "git_sha": "<short sha or 'unknown'>",
+     "host": {"platform": "cpu", "devices": 8, "machine": "x86_64"},
+     "metrics": {...headline numbers...}}
+
+The benchmarks append via `append_row` (`engine_throughput.py --history`
+and `kernel_memory.py --history` do `sys.path.insert(0, "tools")` and
+import this module — tools/ is not a package on purpose). The committed
+`results/bench_history.jsonl` is the repo's performance memory:
+`tools/check_bench.py --history` validates every row and gates the
+newest row of each (kind, host-signature) group against the rolling best
+of its OWN group — numbers from a different machine or device count
+never gate each other, so a laptop row can't fail CI's container.
+
+Metrics are free-form per kind, but the gate metric must be present:
+`engine` rows carry `scan_rounds_per_s` (plus loop baseline + stall
+ratios), `kernels` rows carry `fused_duals_per_s` (plus the memory
+overhead ratio). Append-only by design: history rewrites would erase
+exactly the evidence a regression gate exists to keep.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform as _platform
+import subprocess
+import time
+from typing import Any, Dict, List
+
+SCHEMA = "bench_history/v1"
+KINDS = ("engine", "kernels")
+# per-kind headline metric the regression gate compares (higher = better)
+GATE_METRIC = {"engine": "scan_rounds_per_s",
+               "kernels": "fused_duals_per_s"}
+
+
+def git_sha() -> str:
+    """Short commit sha of the working tree, or 'unknown' outside git."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def host_signature() -> Dict[str, Any]:
+    """The grouping key for the regression gate: rows only compare
+    against rows captured on the same platform / device count / arch."""
+    try:
+        import jax
+        devices = len(jax.devices())
+        plat = jax.devices()[0].platform
+    except Exception:
+        devices, plat = 0, "unknown"
+    return {"platform": plat, "devices": devices,
+            "machine": _platform.machine()}
+
+
+def make_row(kind: str, metrics: Dict[str, Any]) -> Dict[str, Any]:
+    """One schema'd history row (validates kind + gate metric presence)."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown history kind {kind!r}; one of {KINDS}")
+    gate = GATE_METRIC[kind]
+    if gate not in metrics:
+        raise ValueError(f"{kind} history row must carry the gate metric "
+                         f"{gate!r}; got {sorted(metrics)}")
+    return {
+        "schema": SCHEMA,
+        "kind": kind,
+        "created_unix": int(time.time()),
+        "git_sha": git_sha(),
+        "host": host_signature(),
+        "metrics": dict(metrics),
+    }
+
+
+def append_row(path: str, kind: str, metrics: Dict[str, Any]
+               ) -> Dict[str, Any]:
+    """Append one row to the JSONL ledger; returns the row written."""
+    row = make_row(kind, metrics)
+    with open(path, "a") as f:
+        f.write(json.dumps(row) + "\n")
+    return row
+
+
+def read_history(path: str) -> List[Dict[str, Any]]:
+    """All rows of a history file (raises on any unparsable line — the
+    ledger is append-only and fsync-free writes are tiny, so a torn line
+    means a bad merge, not a crash: fix it, don't tolerate it)."""
+    rows = []
+    with open(path) as f:
+        for i, ln in enumerate(f):
+            if not ln.strip():
+                continue
+            try:
+                rows.append(json.loads(ln))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}: corrupt history line "
+                                 f"{i + 1}: {e}") from e
+    return rows
+
+
+def group_key(row: Dict[str, Any]) -> tuple:
+    """(kind, platform, devices, machine) — the gate's comparison group."""
+    host = row.get("host", {})
+    return (row.get("kind"), host.get("platform"),
+            host.get("devices"), host.get("machine"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("cmd", choices=("show",))
+    ap.add_argument("path")
+    ap.add_argument("--kind", default=None, choices=KINDS,
+                    help="only rows of this kind")
+    args = ap.parse_args()
+    rows = read_history(args.path)
+    if args.kind:
+        rows = [r for r in rows if r.get("kind") == args.kind]
+    for r in rows:
+        host = r.get("host", {})
+        gate = GATE_METRIC.get(r.get("kind"), "")
+        val = r.get("metrics", {}).get(gate)
+        print(f"{r.get('created_unix')} {r.get('git_sha'):>9s} "
+              f"{r.get('kind'):7s} {host.get('platform')}/"
+              f"{host.get('devices')}dev/{host.get('machine')} "
+              f"{gate}={val}")
+    print(f"{len(rows)} row(s)")
+
+
+if __name__ == "__main__":
+    main()

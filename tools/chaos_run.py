@@ -19,7 +19,12 @@ real process boundary (no in-process mocking):
   5. the final checkpoints of the reference and the killed+resumed run
      must hold bitwise-identical parameters (the manifests' CRC-32
      maps are compared leaf by leaf — CRC equality over identical leaf
-     names IS byte equality of the saved arrays).
+     names IS byte equality of the saved arrays),
+  6. every run streams the trilemma ledger (--metrics-out): the KILLED
+     run's ledger must parse under the crash-consistent reader
+     (`read_ledger(strict=False)` — at most one torn trailing record),
+     and the resumed run's must parse strictly: a run that completes
+     `close()` fsyncs, so a completed run's ledger has no torn lines.
 
 Works because everything the run consumes is derived from the config
 seed over the PLANNED horizon: the channel trace, the power schedule,
@@ -45,6 +50,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
 from repro.checkpoint import checkpoint as ckpt  # noqa: E402
+from repro.obs import ledger as obs_ledger  # noqa: E402
 
 
 def train_cmd(args, ckpt_dir: str, out: str) -> list:
@@ -58,6 +64,7 @@ def train_cmd(args, ckpt_dir: str, out: str) -> list:
         "--eval-every", "0", "--seed", str(args.seed),
         "--checkpoint-dir", ckpt_dir,
         "--checkpoint-every", str(args.ckpt_every),
+        "--metrics-out", os.path.join(ckpt_dir, "metrics.jsonl"),
         "--out", out,
     ]
 
@@ -166,6 +173,19 @@ def main() -> None:
                 raise SystemExit(2)
         print(f"chaos_run: SIGKILLed at checkpoint {kill_step}", flush=True)
 
+        # the killed run's ledger: a SIGKILL mid-append may leave one
+        # torn trailing record and nothing worse — the crash-consistent
+        # reader must get every completed row back
+        metrics_path = os.path.join(chaos_dir, "metrics.jsonl")
+        try:
+            led = obs_ledger.read_ledger(metrics_path, strict=False)
+            print(f"chaos_run: killed run's ledger parseable "
+                  f"({len(led['rows'])} rows, "
+                  f"truncated={led['truncated']})", flush=True)
+        except Exception as e:  # noqa: BLE001 — any parse failure is the bug
+            errors.append(f"killed run's ledger unreadable even with "
+                          f"strict=False: {type(e).__name__}: {e}")
+
         if args.tear:
             newest = ckpt.latest(chaos_dir)
             ckpt.tear_checkpoint(newest)
@@ -186,6 +206,20 @@ def main() -> None:
                           "was torn")
         print(f"chaos_run: resumed from round {resumed['resumed_from']}",
               flush=True)
+
+        # the resumed run completed, so its (rewritten) ledger was
+        # flushed + fsynced on close: strict parsing must succeed and
+        # cover every executed round
+        try:
+            led = obs_ledger.read_ledger(metrics_path, strict=True)
+            if len(led["rows"]) != int(resumed["rounds"]):
+                errors.append(
+                    f"resumed run's ledger has {len(led['rows'])} rows "
+                    f"but the summary reports {resumed['rounds']} rounds")
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"resumed run's ledger does not parse strictly "
+                          f"({type(e).__name__}: {e}) — the close() "
+                          "fsync contract is broken")
 
         ref_crc = final_manifest(ref_dir, args.rounds)
         chaos_crc = final_manifest(chaos_dir, args.rounds)

@@ -2,14 +2,20 @@
 
     python tools/check_bench.py BENCH_engine.json --min-speedup 1.3
     python tools/check_bench.py BENCH_kernels.json --kernels
+    python tools/check_bench.py results/bench_history.jsonl --history
 
-Default mode (BENCH_engine.json, schema "bench_engine/v2") checks, in order:
+Default mode (BENCH_engine.json, schema "bench_engine/v3") checks, in order:
   1. schema shape: required top-level keys (including `spans_version` —
      since v2 the overlap stall numbers are sums over the run's
-     repro.obs span timeline, not ad-hoc counters), grid rows, overlap
-     breakdown — a benchmark refactor that silently changes the artifact
-     fails here;
-  2. correctness: every engine row is bit-identical to the loop engine;
+     repro.obs span timeline, not ad-hoc counters), grid rows — since v3
+     every row carries a `cost` block from the compiled executable's own
+     cost/memory analysis (flops, bytes_accessed, peak_bytes, collective
+     census; see repro.obs.hlo) — and the overlap breakdown; a benchmark
+     refactor that silently changes the artifact fails here;
+  2. correctness: every engine row is bit-identical to the loop engine,
+     and each row's `cost` block (when analysis is available) reports
+     positive flops and peak_bytes — an all-zero cost block means the
+     introspection silently broke;
   3. performance gates:
        - scan speedup_vs_loop >= --min-speedup at --gate-size (default
          opt-125m-reduced, falling back to the first benchmarked size),
@@ -52,6 +58,18 @@ produced by benchmarks/kernel_memory.py) checks:
          adds over plain inference,
        - dual_speed_fused_vs_fresh >= --min-dual-speed (default 1.0): no
          slowdown vs the mode-matched unfused baseline.
+
+`--history` mode (results/bench_history.jsonl, schema "bench_history/v1",
+appended by `engine_throughput.py --history` / `kernel_memory.py
+--history` via tools/bench_history.py) checks:
+  1. schema shape: every row carries kind/git_sha/host/metrics and the
+     per-kind gate metric (engine: scan_rounds_per_s; kernels:
+     fused_duals_per_s) as a positive number;
+  2. the regression gate: within each (kind, host-signature) group —
+     rows from different machines or device counts never compare — the
+     NEWEST row's gate metric must be >= (1 - --max-regression) of the
+     rolling best of the earlier rows in its group (default 0.3: a >30%
+     throughput drop on the same hardware fails CI).
 Exit code 0 on pass; 1 with a reason on any failure.
 """
 from __future__ import annotations
@@ -63,8 +81,14 @@ import sys
 REQUIRED_TOP = ("schema", "spans_version", "created_unix", "host",
                 "config", "sizes", "grid", "overlap")
 REQUIRED_ROW = ("size", "engine", "rounds_per_s", "speedup_vs_loop",
-                "bit_identical_to_loop", "mesh")
+                "bit_identical_to_loop", "mesh", "cost")
 ENGINES = ("loop", "scan", "scan_mesh")
+
+HISTORY_SCHEMA = "bench_history/v1"
+HISTORY_ROW = ("schema", "kind", "created_unix", "git_sha", "host",
+               "metrics")
+HISTORY_GATE = {"engine": "scan_rounds_per_s",
+                "kernels": "fused_duals_per_s"}
 
 KERNEL_TOP = ("schema", "created_unix", "host", "config", "sizes",
               "grid", "gate", "notes")
@@ -213,6 +237,67 @@ def check_desync(rep: dict, args) -> None:
           f"from {torn['resumed_from']} bitwise-equal)")
 
 
+def check_history(path: str, args) -> None:
+    """Validate + gate results/bench_history.jsonl (see module docstring)."""
+    rows = []
+    with open(path) as f:
+        for i, ln in enumerate(f):
+            if not ln.strip():
+                continue
+            try:
+                rows.append(json.loads(ln))
+            except json.JSONDecodeError as e:
+                fail(f"history line {i + 1} unparsable ({e}) — the "
+                     "ledger is append-only; fix the bad merge")
+    if not rows:
+        fail("empty history — run a benchmark with --history first")
+
+    # 1. schema ----------------------------------------------------------
+    for i, row in enumerate(rows):
+        for key in HISTORY_ROW:
+            if key not in row:
+                fail(f"history row {i} missing {key!r}")
+        if row["schema"] != HISTORY_SCHEMA:
+            fail(f"history row {i}: unknown schema {row['schema']!r}")
+        if row["kind"] not in HISTORY_GATE:
+            fail(f"history row {i}: unknown kind {row['kind']!r}")
+        for key in ("platform", "devices", "machine"):
+            if key not in row["host"]:
+                fail(f"history row {i}: host missing {key!r}")
+        gate = HISTORY_GATE[row["kind"]]
+        val = row["metrics"].get(gate)
+        if not (isinstance(val, (int, float)) and val > 0):
+            fail(f"history row {i} ({row['kind']}): gate metric "
+                 f"{gate!r} must be a positive number, got {val!r}")
+
+    # 2. regression gate within each (kind, host-signature) group --------
+    groups: dict = {}
+    for row in rows:
+        host = row["host"]
+        key = (row["kind"], host["platform"], host["devices"],
+               host["machine"])
+        groups.setdefault(key, []).append(row)
+    gated = 0
+    for key, grp in groups.items():
+        if len(grp) < 2:
+            continue            # first row on this hardware: baseline only
+        gate = HISTORY_GATE[key[0]]
+        newest = grp[-1]["metrics"][gate]
+        best = max(r["metrics"][gate] for r in grp[:-1])
+        floor = best * (1.0 - args.max_regression)
+        if newest < floor:
+            fail(f"{key[0]} on {key[1]}/{key[2]}dev/{key[3]}: newest "
+                 f"{gate} = {newest:.2f} < {floor:.2f} "
+                 f"(rolling best {best:.2f}, allowed regression "
+                 f"{args.max_regression:.0%}) — sha "
+                 f"{grp[-1].get('git_sha')} regressed vs "
+                 f"{max(grp[:-1], key=lambda r: r['metrics'][gate]).get('git_sha')}")
+        gated += 1
+    print(f"check_bench: OK ({path}: {len(rows)} history row(s), "
+          f"{len(groups)} host group(s), {gated} regression-gated, "
+          f"max allowed drop {args.max_regression:.0%})")
+
+
 def check_kernels(rep: dict, args) -> None:
     """Validate + gate BENCH_kernels.json (see module docstring)."""
     # 1. schema ----------------------------------------------------------
@@ -281,6 +366,13 @@ def main() -> None:
     ap.add_argument("--desync", action="store_true",
                     help="validate results/fig_desync.json instead of "
                          "BENCH_engine.json")
+    ap.add_argument("--history", action="store_true",
+                    help="validate + regression-gate a bench_history "
+                         "JSONL ledger instead of BENCH_engine.json")
+    ap.add_argument("--max-regression", type=float, default=0.3,
+                    help="[--history] allowed fractional drop of the gate "
+                         "metric vs the rolling best on the same "
+                         "hardware (default 0.3)")
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="required scan speedup over loop at --gate-size")
     ap.add_argument("--gate-size", default="opt-125m-reduced")
@@ -289,6 +381,10 @@ def main() -> None:
     ap.add_argument("--min-dual-speed", type=float, default=1.0,
                     help="[--kernels] min fused/fresh dual-forward speed")
     args = ap.parse_args()
+
+    if args.history:            # JSONL ledger, not a single JSON doc
+        check_history(args.path, args)
+        return
 
     with open(args.path) as f:
         rep = json.load(f)
@@ -307,7 +403,7 @@ def main() -> None:
     for key in REQUIRED_TOP:
         if key not in rep:
             fail(f"missing top-level key {key!r}")
-    if rep["schema"] != "bench_engine/v2":
+    if rep["schema"] != "bench_engine/v3":
         fail(f"unknown schema {rep['schema']!r}")
     if not (isinstance(rep["spans_version"], int)
             and rep["spans_version"] >= 1):
@@ -346,6 +442,17 @@ def main() -> None:
     for row in rep["grid"]:
         if not row["bit_identical_to_loop"]:
             fail(f"{row['size']}/{row['engine']} diverged from loop")
+        # v3: compiled-executor introspection rode along; an all-zero
+        # block means the analysis silently broke (None = unavailable on
+        # this backend, which is legal)
+        cost = row["cost"]
+        if cost is not None:
+            for key in ("flops", "peak_bytes"):
+                if not (isinstance(cost.get(key), (int, float))
+                        and cost[key] > 0):
+                    fail(f"{row['size']}/{row['engine']}: cost.{key} must "
+                         f"be positive, got {cost.get(key)!r} — HLO "
+                         "introspection broke")
 
     # 3. performance gates -----------------------------------------------
     gate_size = args.gate_size if any(

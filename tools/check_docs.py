@@ -41,6 +41,9 @@ DOCSTRING_MODULES = (
     "src/repro/byzantine/__init__.py",
     "src/repro/kernels/__init__.py",
     "src/repro/obs/__init__.py",
+    "src/repro/obs/profile.py",
+    "src/repro/obs/hlo.py",
+    "src/repro/obs/health.py",
     "src/repro/runtime/__init__.py",
     "src/repro/runtime/desync.py",
     "src/repro/runtime/inject.py",

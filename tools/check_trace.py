@@ -3,16 +3,18 @@
     python tools/check_trace.py trace.json [--ledger metrics.jsonl]
         [--summary run.json] [--expect-chunk-traces N]
         [--expect-step-builds N] [--stall-tol 1e-3]
-        [--require-spans retry,prefetch_degraded]
+        [--require-spans retry,prefetch_degraded] [--require-device-lane]
 
 Checks, in order:
   1. Trace structure — Chrome trace-event JSON ({traceEvents, otherData});
      every event carries ph/name/pid/tid/ts, complete ("X") events a
      non-negative dur, and the driver's core span names are present
      (chunk, dispatch, chunk_prep, prep_stall, metrics_flush).
-  2. Nesting — per thread lane, "X" spans are properly nested (contained
-     or disjoint, never partially overlapping): the tracer records via
-     nested context managers, so a violation means a broken clock.
+  2. Nesting — per host tracer lane (cat "obs"), "X" spans are properly
+     nested (contained or disjoint, never partially overlapping): the
+     tracer records via nested context managers, so a violation means a
+     broken clock. Merged device-op events are exempt (the runtime
+     overlaps executions by design).
   3. Stall attribution — the sum of prep_stall (and ckpt_snapshot) span
      durations equals otherData's legacy prep_stall_s/ckpt_stall_s
      counters within --stall-tol seconds (default 1ms): spans are the
@@ -28,11 +30,17 @@ Checks, in order:
      row carries the full record schema (v2: k_sync/stale_frac desync
      columns, with 0 <= k_sync <= k_eff and stale_frac their consistent
      ratio); rounds strictly increase and the cumulative columns
-     (bits_cum, dp_spent_cum, eps_cum) never decrease.
-  8. Required extra spans (--require-spans) — each named span must appear
+     (bits_cum, dp_spent_cum, eps_cum) never decrease. A torn TRAILING
+     line (SIGKILL mid-row) is reported as a truncation note, not a
+     crash; a torn line anywhere else is corruption and fails.
+  7. Required extra spans (--require-spans) — each named span must appear
      at least once (the chaos lane asserts the retry/degradation path
      really fired: retry, prefetch_degraded).
-  7. Summary cross-check (--summary, needs --ledger) — the final row's
+  8. Device lane (--require-device-lane) — the trace carries profiler-
+     merged device-op events on a pid distinct from the host spans'
+     pid 0, their time window overlaps the host span window (the clocks
+     were actually aligned), and otherData.profile records the merge.
+  9. Summary cross-check (--summary, needs --ledger) — the final row's
      bits_cum / dp_spent_cum / peak_bytes equal the run summary's
      uplink_bits / privacy_spent / peak_bytes EXACTLY, and the row count
      equals the executed rounds: the ledger and RunResult are one
@@ -73,7 +81,9 @@ def check_trace(doc, errors, stall_tol):
 
     # 1. structure ------------------------------------------------------
     for i, e in enumerate(events):
-        keys = ("ph", "name", "pid", "tid") if e.get("ph") == "M" \
+        # profiler-merged metadata records may omit tid (process_name
+        # entries label a whole device pid); host M events carry both
+        keys = ("ph", "name", "pid") if e.get("ph") == "M" \
             else ("ph", "name", "pid", "tid", "ts")
         for key in keys:
             if key not in e:
@@ -86,9 +96,14 @@ def check_trace(doc, errors, stall_tol):
         if want not in names:
             errors.append(f"trace: required span {want!r} absent")
 
-    # 2. nesting per thread lane ---------------------------------------
+    # 2. nesting per thread lane — host tracer spans only (cat "obs").
+    # Merged device-op events legitimately overlap within a lane: the
+    # runtime pipelines executions, and only the context-manager tracer
+    # guarantees strict nesting.
     lanes = defaultdict(list)
     for e in _spans(events):
+        if e.get("cat") != "obs":
+            continue
         lanes[e["tid"]].append((float(e["ts"]), float(e["ts"]) +
                                 float(e.get("dur", 0)), e["name"]))
     eps = 1.0  # µs slack for equal perf_counter quanta
@@ -162,14 +177,65 @@ def check_compile(meta, args, errors):
                           "memoization keys changed")
 
 
-def check_ledger(path, errors):
-    """Check 6: schema + monotonicity. Returns (header, rows)."""
+def check_device_lane(doc, meta, errors):
+    """Check 8: profiler-merged device events share the host timeline.
+
+    Host spans always live on pid 0; `--profile-out` appends device-op
+    events on their own pids. Requires: at least one non-host "X" event,
+    a window overlap between device and host events (the anchor offset
+    really mapped the profiler clock onto the tracer epoch), and the
+    otherData.profile meta the exporter records for the merge.
+    """
+    events = doc.get("traceEvents", []) if isinstance(doc, dict) else []
+    host = [(float(e["ts"]), float(e["ts"]) + float(e.get("dur", 0)))
+            for e in _spans(events) if e.get("pid") == 0]
+    dev = [(float(e["ts"]), float(e["ts"]) + float(e.get("dur", 0)))
+           for e in _spans(events) if e.get("pid") != 0]
+    if not dev:
+        errors.append("trace: no device-lane X events (pid != 0) — "
+                      "was the trace exported with --profile-out?")
+        return
+    profile = meta.get("profile")
+    if not isinstance(profile, dict):
+        errors.append("trace: otherData.profile missing — exporter did "
+                      "not record the profiler merge")
+    elif "error" in profile:
+        errors.append(f"trace: profiler capture errored: "
+                      f"{profile['error']}")
+    if host:
+        h0, h1 = min(a for a, _ in host), max(b for _, b in host)
+        d0, d1 = min(a for a, _ in dev), max(b for _, b in dev)
+        if d1 < h0 or d0 > h1:
+            errors.append(
+                f"trace: device window [{d0:.1f}, {d1:.1f}]µs does not "
+                f"overlap host window [{h0:.1f}, {h1:.1f}]µs — clock "
+                "alignment failed")
+
+
+def check_ledger(path, errors, notes):
+    """Check 6: schema + monotonicity. Returns (header, rows).
+
+    Tolerates a torn TRAILING line (SIGKILL mid-row append) by dropping
+    it and recording a truncation note; a torn line anywhere else is
+    corruption and fails the gate.
+    """
     try:
         with open(path) as f:
-            lines = [json.loads(ln) for ln in f if ln.strip()]
-    except (OSError, json.JSONDecodeError) as e:
+            raw = [ln for ln in f if ln.strip()]
+    except OSError as e:
         errors.append(f"ledger: unreadable ({e})")
         return None, []
+    lines = []
+    for i, ln in enumerate(raw):
+        try:
+            lines.append(json.loads(ln))
+        except json.JSONDecodeError as e:
+            if i == len(raw) - 1:
+                notes.append(f"ledger: torn trailing record dropped "
+                             f"(crash mid-append at line {i + 1})")
+            else:
+                errors.append(f"ledger: corrupt line {i + 1} ({e}) — "
+                              "torn records are only legal at the tail")
     if not lines or lines[0].get("schema") != LEDGER_SCHEMA:
         errors.append(f"ledger: line 1 must carry schema={LEDGER_SCHEMA!r}")
         return None, []
@@ -201,7 +267,7 @@ def check_ledger(path, errors):
 
 
 def check_summary(path, rows, errors):
-    """Check 7: the final ledger row equals the run summary exactly."""
+    """Check 9: the final ledger row equals the run summary exactly."""
     try:
         with open(path) as f:
             summary = json.load(f)
@@ -246,8 +312,13 @@ def main() -> None:
                     help="comma-separated extra span names that must each "
                          "appear at least once (chaos lane: "
                          "retry,prefetch_degraded)")
+    ap.add_argument("--require-device-lane", action="store_true",
+                    help="assert profiler-merged device-op events are "
+                         "present (pid != 0), window-overlap the host "
+                         "spans, and otherData.profile records the merge")
     args = ap.parse_args()
     errors = []
+    notes = []
 
     try:
         with open(args.trace) as f:
@@ -265,9 +336,11 @@ def main() -> None:
             if want and want not in names:
                 errors.append(f"trace: required span {want!r} absent "
                               "(--require-spans)")
+    if args.require_device_lane:
+        check_device_lane(doc, meta, errors)
     rows = []
     if args.ledger:
-        _, rows = check_ledger(args.ledger, errors)
+        _, rows = check_ledger(args.ledger, errors, notes)
     if args.summary:
         check_summary(args.summary, rows, errors)
 
@@ -276,6 +349,8 @@ def main() -> None:
         for e in errors:
             print(f"  {e}")
         sys.exit(1)
+    for note in notes:
+        print(f"check_trace: note: {note}")
     n_events = len(doc.get("traceEvents", []))
     print(f"check_trace: OK ({n_events} trace events"
           + (f", {len(rows)} ledger rows" if args.ledger else "")
